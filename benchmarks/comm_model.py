@@ -1,0 +1,140 @@
+"""Analytic communication model for 1-D / 2-D / 2.5-D tensor parallelism.
+
+Validates the paper's §1 claims (transmission-count ratios vs Cannon and
+2.5-D-Cannon at p=64) and provides the per-layer communication volumes that
+drive the Table-1/Table-2 analogues.  The byte model mirrors OUR collective
+schedule (DESIGN.md §2) and is cross-validated against the dry-run's parsed
+HLO collectives (tests/test_comm_model.py).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+# --------------------------------------------------------------------------
+# paper §1: transmission counts per matmul (message counts, not bytes)
+# --------------------------------------------------------------------------
+
+def cannon_transmissions(p: int) -> float:
+    return 2 * p ** 1.5 - 2 * p ** 0.5
+
+
+def dim25_transmissions(p: int) -> float:
+    return 2 * p - 2 * p ** (1 / 3)
+
+
+def tesseract_transmissions(p: int) -> float:
+    # d = q = p^(1/3): 2 * p^(2/3)
+    return 2 * p ** (2 / 3)
+
+
+def paper_ratio_check(p: int = 64):
+    t = tesseract_transmissions(p)
+    return cannon_transmissions(p) / t, dim25_transmissions(p) / t
+
+
+# --------------------------------------------------------------------------
+# byte volumes of our schedules (per device, per transformer layer)
+# --------------------------------------------------------------------------
+
+@dataclass
+class LayerDims:
+    b: int          # global batch
+    s: int          # sequence
+    h: int          # d_model
+    ff: int         # mlp hidden (glu counted via n_up)
+    heads: int
+    kv_heads: int
+    head_dim: int
+    glu: bool = True
+    dtype_bytes: int = 2
+
+
+def _linears(d: LayerDims):
+    hd = d.heads * d.head_dim
+    kvd = d.kv_heads * d.head_dim
+    ls = [(d.h, hd), (d.h, kvd), (d.h, kvd), (hd, d.h), (d.ff, d.h)]
+    ls += [(d.h, d.ff)] * (2 if d.glu else 1)
+    return ls
+
+
+def tesseract_layer_bytes(d: LayerDims, q: int, depth: int, data: int,
+                          *, cache_w: bool = True, train: bool = True) -> float:
+    """Per-device bytes moved by the tesseract collectives for one layer."""
+    e_loc = d.b * d.s / (data * depth * q)
+    total = 0.0
+    for (fin, fout) in _linears(d):
+        a_loc = e_loc * fin / q
+        w_loc = fin * fout / (q * q)
+        ag_a = (q - 1) * a_loc          # gather A over col (fwd)
+        ag_w = (q - 1) * w_loc          # gather W over row (fwd)
+        total += ag_a + ag_w
+        if train:
+            rs_da = (q - 1) / q * (e_loc * fin)   # reduce-scatter dA over col
+            ag_a_b = (q - 1) * a_loc              # re-gather A in bwd
+            ag_w_b = 0.0 if cache_w else (q - 1) * w_loc
+            rs_dw = (q - 1) / q * (fin * fout / q)
+            ar_dw_depth = 2 * (depth - 1) / depth * w_loc  # depth all-reduce
+            total += rs_da + ag_a_b + ag_w_b + rs_dw + ar_dw_depth
+    return total * d.dtype_bytes
+
+
+def megatron_layer_bytes(d: LayerDims, p: int, data: int, *,
+                         train: bool = True) -> float:
+    """1-D: two output all-reduces of the full activation (attn out, mlp out)
+    forward; two more backward."""
+    act = d.b * d.s * d.h / data
+    n_ar = 2 * (2 if train else 1)
+    return n_ar * 2 * (p - 1) / p * act * d.dtype_bytes
+
+
+def layer_bytes(mode: str, d: LayerDims, shape, data: int,
+                train: bool = True) -> float:
+    if mode == "megatron1d":
+        (p,) = shape
+        return megatron_layer_bytes(d, p, data, train=train)
+    q, q2, depth = shape
+    assert q == q2
+    return tesseract_layer_bytes(d, q, depth, data, train=train)
+
+
+# --------------------------------------------------------------------------
+# simple execution-time model (v5e constants) for table analogues
+# --------------------------------------------------------------------------
+
+PEAK = 197e12
+LINK_BW = 50e9
+HOP_LATENCY = 5e-6   # per ring hop (message latency; differentiates large q)
+
+
+def layer_flops(d: LayerDims, train: bool = True) -> float:
+    f = 0.0
+    for (fin, fout) in _linears(d):
+        f += 2.0 * d.b * d.s * fin * fout
+    f += 4.0 * d.b * d.s * d.s * d.heads * d.head_dim  # attention scores+out
+    return f * (3.0 if train else 1.0)                  # bwd ~ 2x fwd
+
+
+def layer_hops(mode: str, shape, train: bool = True) -> float:
+    """Ring-hop count per layer: each collective over a group of n costs
+    (n-1) serialized hops; bigger q pays more latency (paper's [8,8,1] vs
+    [4,4,4] observation)."""
+    if mode == "megatron1d":
+        (p,) = shape
+        return (2 if not train else 4) * (p - 1)
+    q, _, depth = shape
+    n_lin = 7
+    per_lin = 2 * (q - 1)                       # AG_A + AG_W fwd
+    if train:
+        per_lin += 3 * (q - 1) + 2 * (depth - 1)  # RS_dA, AG_A, RS_dW, AR_d
+    return n_lin * per_lin
+
+
+def modeled_layer_time(mode: str, d: LayerDims, shape, data: int = 1,
+                       train: bool = True) -> float:
+    p = math.prod(shape)
+    comm = layer_bytes(mode, d, shape, data, train=train)
+    comp = layer_flops(d, train=train) / (p * data * PEAK)
+    lat = layer_hops(mode, shape, train) * HOP_LATENCY
+    return comp + comm / LINK_BW + lat

@@ -1,0 +1,322 @@
+"""Assemble EXPERIMENTS.md from the dry-run JSONs, hillclimb results and
+benchmark outputs.  Rerun any time:  PYTHONPATH=src python -m benchmarks.make_experiments_md
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+HERE = pathlib.Path(__file__).resolve().parent
+sys.path.insert(0, str(HERE.parent / "src"))
+sys.path.insert(0, str(HERE.parent))
+
+from benchmarks import comm_model, tables  # noqa: E402
+from repro.roofline import report  # noqa: E402
+
+RESULTS = HERE / "results" / "dryrun"
+OUT = HERE.parent / "EXPERIMENTS.md"
+
+
+def baseline_table(mesh):
+    rows = [report.HEADER]
+    for d in report.load_cells(mesh, "tesseract"):
+        if d.get("tag"):
+            continue
+        rows.append(report.row(d))
+    return "\n".join(rows)
+
+
+def _cell(arch, shape, mode="tesseract", tag="", mesh="16x16"):
+    sfx = f"__{tag}" if tag else ""
+    p = RESULTS / f"{arch}__{shape}__{mode}__{mesh}{sfx}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def perf_row(eid, label, d, base):
+    if d is None:
+        return f"| {eid} | {label} | (pending) | | | | |"
+    dc = (d["collective_term_s"] - base["collective_term_s"]) / max(
+        base["collective_term_s"], 1e-12)
+    dk = (d["compute_term_s"] - base["compute_term_s"]) / max(
+        base["compute_term_s"], 1e-12)
+    return (f"| {eid} | {label} | {d['compute_term_s']:.2f} | "
+            f"{d['memory_term_s']:.2f} | {d['collective_term_s']:.2f} | "
+            f"{d['useful_flops_frac']:.3f} | comp {dk:+.0%} / coll {dc:+.0%} |")
+
+
+def skipped_cells():
+    from repro.configs.base import LONG_CONTEXT_OK
+    from repro.models.registry import ARCH_MODULES
+    return [a for a in ARCH_MODULES if a not in LONG_CONTEXT_OK]
+
+
+def main():
+    t1 = tables.table1_speedups()
+    t2 = tables.table2_speedups()
+    c_ratio, d_ratio = comm_model.paper_ratio_check(64)
+
+    base_A = _cell("llama3-405b", "train_4k")
+    base_B = _cell("llama3-405b", "decode_32k")
+    base_C = _cell("deepseek-v2-236b", "train_4k")
+
+    perf_A = [
+        ("A0", "paper-faithful baseline [2,2,4], per-op depth all-reduce, full remat", base_A),
+        ("A1", "cache_act_gather=true (paper 3.2.1 extended to activations)", _cell("llama3-405b", "train_4k", tag="cacheact")),
+        ("A2", "grad_compression=bf16 at the grad_sync boundary", _cell("llama3-405b", "train_4k", tag="gradbf16")),
+        ("A3", "[4,4,1] factorization (2-D point of the paper)", _cell("llama3-405b", "train_4k", tag="fact441")),
+        ("A4", "megatron1d [16] (paper's 1-D baseline)", _cell("llama3-405b", "train_4k", "megatron1d")),
+        ("A6", "remat=dots (+A1+A2)", _cell("llama3-405b", "train_4k", tag="dotsremat")),
+        ("A7", "dgrad_rs_bf16 (bf16 wire for dW reduce-scatter)", _cell("llama3-405b", "train_4k", tag="rsbf16")),
+        ("A8", "deferred fused grad sync (reduce_dgrad_in_op=false)", _cell("llama3-405b", "train_4k", tag="deferred")),
+        ("A9", "FINAL: deferred + bf16 wire + dots remat", _cell("llama3-405b", "train_4k", tag="final")),
+    ]
+    perf_B = [
+        ("B0", "paper-faithful tesseract [2,2,4] decode", base_B),
+        ("B1", "megatron1d serve layout (weights stationary)", _cell("llama3-405b", "decode_32k", "megatron1d")),
+        ("B2", "[4,4,1] (smaller weight-gather fraction)", _cell("llama3-405b", "decode_32k", tag="fact441")),
+        ("B3", "summa2d (Optimus) decode", _cell("llama3-405b", "decode_32k", "summa2d")),
+    ]
+    perf_C = [
+        ("C0", "paper-faithful baseline (EP over depth, capacity 1.25)", base_C),
+        ("C1", "moe_expert_layout=local (beyond-paper)", _cell("deepseek-v2-236b", "train_4k", tag="moelocal")),
+        ("C2", "capacity_factor=1.0", _cell("deepseek-v2-236b", "train_4k", tag="cap10")),
+        ("C3", "local layout + deferred + bf16 + dots", _cell("deepseek-v2-236b", "train_4k", tag="best")),
+        ("C4", "FINAL: cap 1.0 + deferred + bf16 wire + dots (no local layout)", _cell("deepseek-v2-236b", "train_4k", tag="final")),
+    ]
+
+    perf_hdr = ("| id | change | compute s | memory s | collective s | "
+                "useful | delta vs baseline |\n|---|---|---|---|---|---|---|")
+
+    def perf_table(base, rows):
+        return "\n".join([perf_hdr] + [perf_row(e, l, d, base)
+                                       for e, l, d in rows])
+
+    def coll_table(d):
+        rows = ["| collective | count | operand GB | ring-wire GB |",
+                "|---|---|---|---|"]
+        for k, v in sorted(d["collectives"].items()):
+            rows.append(f"| {k} | {int(v['count'])} | "
+                        f"{v['operand_bytes']/1e9:.1f} | "
+                        f"{v['wire_bytes']/1e9:.1f} |")
+        return "\n".join(rows)
+
+    def gspmd_table():
+        rows = [perf_hdr]
+        for arch in ("yi-6b", "llama3-405b"):
+            b = _cell(arch, "train_4k")
+            g = _cell(arch, "train_4k", mode="gspmd", tag="auto")
+            if b:
+                rows.append(perf_row(f"{arch}/explicit", "tesseract shard_map", b, b))
+            if g and b:
+                rows.append(perf_row(f"{arch}/gspmd", "auto-partitioned einsums", g, b))
+        return "\n".join(rows)
+
+    md = f"""# EXPERIMENTS
+
+All numbers are generated by the committed harnesses:
+
+```
+PYTHONPATH=src python -m repro.launch.dryrun --all        # 64-cell grid
+PYTHONPATH=src python -m benchmarks.hillclimb             # §Perf variants
+PYTHONPATH=src python -m benchmarks.run                   # paper tables
+PYTHONPATH=src python -m benchmarks.make_experiments_md   # this file
+```
+
+Hardware model (target, per harness): TPU v5e-class — 197 TFLOP/s bf16,
+819 GB/s HBM, 50 GB/s/link ICI.  This container is CPU-only: every number
+below is derived from `.lower().compile()` artifacts (abstract compilation
+with 512 placeholder devices), never from CPU wall-clock.
+
+## §Validation — the paper's own claims
+
+| claim (paper) | ours | verdict |
+|---|---|---|
+| §1: Cannon needs 31.5x Tesseract's transmissions at p=64 | {c_ratio:.2f}x | exact |
+| §1: 2.5-D needs 3.75x Tesseract's transmissions at p=64 | {d_ratio:.2f}x | exact |
+| Eq.7-10: M_tess = ab/p + bcd/p + ac/p < M_megatron | verified from real NamedSharding shard shapes | exact (tests/test_memory_model.py) |
+| §4.3 / Fig.7: "Tesseract does not introduce any approximations" | train curves identical (measured max deviation < 1e-6 over 20 steps; benchmarks fig7) across 1-device vs [2,2,1] vs [2,2,2], and parity across [8]-1-D / Optimus / DP variants for ALL 10 archs | verified (tests/test_multidevice.py, benchmarks fig7) |
+| Table 1 direction: [4,4,4] > 1-D, 2-D, [8,8,1] (strong scaling) | modeled speedups {t1['tesseract[4,4,4]_vs_megatron[64]']:.2f}x / {t1['tesseract[4,4,4]_vs_optimus[8,8]']:.2f}x / {t1['tesseract[4,4,4]_vs_[8,8,1]']:.2f}x (paper 1.38/1.53/2.07) | direction reproduced; magnitudes differ (paper = A100+IB wall clock, ours = v5e roofline model; see benchmarks/tables.py) |
+| Table 2 direction: weak-scaling throughput [4,4,4] > 1-D / 2-D | modeled {t2['throughput_tesseract[4,4,4]_vs_megatron[64]']:.2f}x / {t2['throughput_tesseract[4,4,4]_vs_optimus[8,8]']:.2f}x (paper 3.37/1.71) | direction reproduced |
+| depth > 1 reduces per-layer comm at fixed p | dry-run measured: [2,2,4] vs [4,4,1] on llama3-405b train: collective 55.1s vs 66.4s (-17%) | verified on compiled HLO (§Perf A3) |
+| 1-D has the worst comm at scale | dry-run measured: megatron [16] collective 104.0s vs 55.1s | verified (§Perf A4) |
+
+Additional correctness validation (all in `tests/`): Tesseract matmul
+fwd/bwd exact vs jnp for every cache/reduction mode; train/prefill/decode
+parity across all modes for all 10 architectures; ZeRO-1 bit-exact;
+MoE local-layout numerics exact; distributed linear scans (RG-LRU, SSD)
+exact vs naive recurrences; Pallas kernels vs oracles over shape/dtype
+sweeps; GPipe pipeline == sequential reference (fwd + grads).
+
+## §Dry-run — multi-pod compilation grid
+
+`make_production_mesh()` per harness spec: single-pod (16,16)=(data,model),
+multi-pod (2,16,16)=(pod,data,model); the model axis factorizes to
+Tesseract [q=2,q=2,d=4]; pod folds into data (paper §3.4).  **All 64 cells
+lower + compile** (32 single-pod + 32 multi-pod; `--all` exits 0, zero
+failures): every architecture x shape on both meshes, `memory_analysis()`
+and `cost_analysis()` captured per cell under `benchmarks/results/dryrun/`.
+long_500k runs for mamba2-1.3b and recurrentgemma-9b (sub-quadratic);
+the 8 pure-full-attention archs skip it per the harness instructions:
+{', '.join(skipped_cells())}.
+
+Notes on the grid:
+- decode_32k multi-pod: global batch 128 < 256 token-shards, so the plan
+  auto-downgrades to `decode_dp` (batch over data only) — documented
+  adaptive layout, parity-tested.
+- per-device bytes (GiB/dev column) are `memory_analysis()`
+  argument+temp+output-alias.  Cells whose state exceeds a v5e's 16 GiB
+  (e.g. llama3-405b train at 256 chips: 1.77 TiB/dev) are *reported*, not
+  hidden: at the paper's own scale assumptions those models train on more
+  pods (the multi-pod column halves state per device; real deployments use
+  more), and run.zero1 reduces optimizer state by data*depth.
+
+Collective schedule example (llama3-405b / train_4k / 16x16, per device
+per step; every cell's full breakdown lives in its JSON):
+
+{coll_table(base_A)}
+
+### Roofline, single-pod 16x16 (baselines, paper-faithful mode)
+
+{baseline_table("16x16")}
+
+### Roofline, multi-pod 2x16x16
+
+{baseline_table("2x16x16")}
+
+## §Roofline — method and reading
+
+- **compute term** = structural HLO dot-FLOPs / 197 TF. `cost_analysis()`
+  counts while-loop bodies once, so FLOPs come from a structural HLO parse
+  that multiplies scan trip counts (`repro/roofline/hlo.py`; exactness
+  tests in tests/test_substrate.py). Elementwise FLOPs are excluded
+  (dot-dominated workloads).
+- **memory term** = (dot operand+output traffic + 2x argument bytes) /
+  819 GB/s — a defensible traffic floor; the raw structural byte sum is
+  kept in each JSON as an upper bound (it ignores fusion/aliasing, e.g.
+  scan-carry in-place updates, and overestimates ~20x).
+- **collective term** = ring-model wire bytes / 50 GB/s, per collective
+  kind, replica-group size parsed per op, trip-multiplied.  Wire dtype is
+  resolved through converts because XLA:CPU float-normalization promotes
+  bf16 collectives to f32 (TPU keeps them native bf16).
+- **useful-FLOPs frac** = MODEL_FLOPS / total HLO FLOPs, with MODEL_FLOPS =
+  6*N*D (train), 2*N*D (prefill), 2*N_active*tokens (decode; cache
+  attention excluded by convention). It exposes remat/dispatch waste.
+- `mamba2` fracs slightly exceed 1.0 on decode because param_count() is an
+  analytic approximation of the SSD layer; long_500k fracs are ~0 because
+  a single token cannot amortize the weight gathers (see §Perf B for the
+  fix).
+
+Scaling observation (512 vs 256 chips): compute terms halve while the
+per-device collective terms stay ~constant (block gathers don't shrink with
+more data-parallel replicas), so at 2x16x16 the big dense trainers flip to
+collective-dominant — exactly the regime where the paper's depth axis and
+the §Perf A-series levers matter most.
+
+Dominant terms at a glance: large dense training is compute-dominant
+(llama3-405b train: 65.4s compute vs 55.1s collective vs 19.3s memory =
+77% useful-FLOPs before optimization); decode cells are collective-bound
+under 2.5-D (per-token weight gathers); small models are memory/collective
+bound (roofline says: don't give smollm 256 chips).
+
+## §Perf — hillclimbing log (hypothesis -> change -> measure -> validate)
+
+Three cells per the harness policy — most paper-representative
+(llama3-405b/train_4k), most collective-bound (llama3-405b/decode_32k),
+worst useful-FLOPs among large cells (deepseek-v2/train_4k).  The
+**paper-faithful baseline is row 0 of each table** (per-op depth
+all-reduce, weight-gather caching as in §3.2.1, full remat); every other
+row is a hypothesis-driven change measured on recompiled HLO.
+
+### A. llama3-405b / train_4k (the paper's use case)
+
+{perf_table(base_A, perf_A)}
+
+- A1 **refuted**: byte-identical HLO — XLA already CSEs the backward
+  re-gather against the remat recompute's gather. Lesson: the paper's
+  "store the matrices to avoid waste" is subsumed by the compiler under
+  rematerialization.
+- A2 **refuted**: grads reaching the sync boundary are already bf16 in
+  this config; compression has nothing to squeeze.
+- A3/A4 **confirmed the paper**: 2-D (+21% collective) and 1-D (+89%
+  collective, +16% compute from replicated-activation waste) are strictly
+  worse — the reproduction's central claim, now measured on compiled HLO
+  at 405B scale.
+- A6 **confirmed**: dots-remat cuts recompute, compute term -18.5%,
+  useful-FLOPs 0.774 -> 0.950.
+- A7 **masked by the host backend**: XLA:CPU folds the bf16 downcast of
+  the f32 dW partials (excess-precision folding), so the dry-run cannot
+  show it; analytically the dW reduce-scatter operand (0.8 TB f32/device)
+  halves on TPU: expected additional ~ -7s collective.
+- A8 **confirmed**: -14.4% collective (stacked bf16 reductions at the
+  pvary boundary instead of f32 per-layer all-reduces inside the scan;
+  also 126x fewer grad collectives).
+- **A9 final: compute 65.4->53.3s, collective 55.1->47.2s, useful 0.77->
+  0.95.** Roofline fraction (6ND time / dominant term) rises from
+  50.6/65.4 = **0.77** to 50.6/53.3 = **0.95**, with the collective term
+  now below compute (overlappable by the TPU latency-hiding scheduler).
+  Stopped: next three candidates (A1, A2, A7-on-CPU) measured <5%.
+
+### B. llama3-405b / decode_32k (most collective-bound)
+
+{perf_table(base_B, perf_B)}
+
+- B0: 2.5-D decode re-gathers every weight block each step:
+  (q-1)/q^2 x 810 GB/token-batch -> 8.0s/step of wire time vs 2.7ms of
+  compute. The paper never measured autoregressive decode (its "inference"
+  is a forward pass on training shapes) — this is where its layout loses.
+- B1 **confirmed (the big win)**: 1-D serve layout keeps weights
+  stationary and all-reduces only [B_loc,1,h] activations: collective
+  8.03s -> 0.005s (**~1600x**); the step becomes memory-bound (0.88s
+  weight streaming), i.e. at the decode roofline. Serving should flip
+  layouts after prefill; training keeps 2.5-D. This mode switch is a
+  config flag in this framework.
+- B2/B3 **confirmed napkin math exactly**: (3/16)/(1/4) = 0.75 -> -25%.
+
+### C. deepseek-v2-236b / train_4k (worst useful-FLOPs, MoE)
+
+{perf_table(base_C, perf_C)}
+
+- C1 **refuted** (the most instructive failure): expert-local weights cut
+  the forward weight gathers as predicted, but the expert-weight GRADIENTS
+  are then replicated over (row,col) and their (data,row,col) reduction in
+  f32 (+15% net collective) outweighs the forward saving. The layout IS
+  the right choice for inference (no grads) — kept as a serve-time option.
+- C2 **confirmed**: capacity 1.25 -> 1.0 trims dispatch/a2a/expert matmul
+  bytes ~ -9% collective, -6% compute (drop-rate trade documented).
+- C4 **final: compute -15%, collective -11%, useful 0.484 -> 0.568.**
+  Remaining gap is structural: top-6-of-160 routing means 6x expert
+  traffic per token and the MLA projections (128 heads x 192) keep
+  per-layer gathers high; the next lever (not taken: quality-affecting)
+  is top-4 routing.
+
+### Appendix: explicit SUMMA vs GSPMD auto-partitioning
+
+The same dense-LM math written as plain global einsums +
+`with_sharding_constraint` (identical param specs, `core/gspmd.py`) lets
+XLA's auto-partitioner choose the schedule — the control experiment for
+implementing the paper explicitly:
+
+{gspmd_table()}
+
+The explicit shard_map SUMMA schedule moves ~2.6x fewer collective bytes
+than GSPMD's choices on yi-6b (XLA re-gathers activations around the
+attention reshapes instead of keeping the paper's A/W block layout), and
+also avoids its extra dot-padding FLOPs. This quantifies why Tesseract is
+implemented as explicit collectives rather than sharding hints.
+
+### Cross-cutting outcome
+
+The optimized configuration (deferred fused bf16 grad sync + dots remat +
+mode-switched serving) is exposed as flags; the paper-faithful path stays
+the default and both are covered by identical-loss tests. Beyond-paper
+gains summary: train useful-FLOPs 0.77->0.95 (llama3-405b), decode wire
+cost -99.9% (serve-layout switch), MoE step -11% collective / -15%
+compute (deepseek-v2).
+"""
+    OUT.write_text(md)
+    print(f"wrote {OUT} ({len(md.splitlines())} lines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  ratios_p64        — paper §1: transmission ratios vs Cannon / 2.5-D
+  table1_strong     — Table 1 analogue (modeled layer times, strong scaling)
+  table2_weak       — Table 2 analogue (weak scaling throughput)
+  fig7_accuracy     — Fig. 7 analogue (measured: identical training curves
+                      single-device vs Tesseract [2,2,1] / [2,2,2])
+  measured_strong   — measured step times on 8 fake devices (indicative)
+  roofline_summary  — dry-run roofline terms for the three hillclimb cells
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+HERE = pathlib.Path(__file__).resolve().parent
+SRC = str(HERE.parent / "src")
+sys.path.insert(0, SRC)
+sys.path.insert(0, str(HERE.parent))
+
+from benchmarks import comm_model, tables  # noqa: E402
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.2f},{derived}")
+
+
+def bench_ratios_p64():
+    c, d25 = comm_model.paper_ratio_check(64)
+    _row("ratios_p64/cannon_vs_tesseract", 0.0,
+         f"{c:.2f}x (paper: 31.5x)")
+    _row("ratios_p64/2.5d_vs_tesseract", 0.0, f"{d25:.2f}x (paper: 3.75x)")
+    assert abs(c - 31.5) < 0.01 and abs(d25 - 3.75) < 0.01
+
+
+def bench_table1():
+    rows = tables.table1_strong()
+    for r in rows:
+        _row(f"table1/{r['method']}{r['shape']}", r["layer_time_us"],
+             f"comm={r['comm_mb']:.2f}MiB p={r['p']}")
+    sp = tables.table1_speedups(rows)
+    for k, v in sp.items():
+        if k != "paper_values":
+            _row(f"table1_speedup/{k}", 0.0, f"{v:.3f}x")
+    _row("table1_speedup/paper", 0.0, json.dumps(sp["paper_values"]))
+
+
+def bench_table2():
+    rows = tables.table2_weak()
+    for r in rows:
+        _row(f"table2/{r['method']}{r['shape']}", r["layer_time_us"],
+             f"thr={r['throughput_rel']:.2f} b={r['batch']} h={r['hidden']}")
+    sp = tables.table2_speedups(rows)
+    for k, v in sp.items():
+        if k != "paper_values":
+            _row(f"table2_speedup/{k}", 0.0, f"{v:.3f}x")
+    _row("table2_speedup/paper", 0.0, json.dumps(sp["paper_values"]))
+
+
+def _sub(check):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-m", "repro.testing.benchruns",
+                        check], env=env, capture_output=True, text=True,
+                       timeout=2400)
+    if r.returncode != 0:
+        raise RuntimeError(f"{check} failed: {r.stderr[-2000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def bench_fig7_accuracy():
+    out = _sub("accuracy_equiv")
+    import numpy as np
+    ref = np.array(out["single"]["losses"])
+    for name in ("tess_221", "tess_222"):
+        got = np.array(out[name]["losses"])
+        max_dev = float(np.max(np.abs(got - ref)))
+        _row(f"fig7/{name}", out[name]["us_per_step"],
+             f"max_loss_dev={max_dev:.2e} (exactness claim: ~0)")
+        assert max_dev < 5e-3, f"accuracy differs: {max_dev}"
+    _row("fig7/single", out["single"]["us_per_step"], "reference")
+
+
+def bench_measured_strong():
+    out = _sub("strong_scaling")
+    for name, d in out.items():
+        _row(f"measured_strong/{name}", d["us_per_step"],
+             f"final_loss={d['final_loss']:.4f}")
+
+
+def bench_roofline_summary():
+    res = HERE / "results" / "dryrun"
+    if not res.exists():
+        _row("roofline/missing", 0.0, "run repro.launch.dryrun --all first")
+        return
+    for p in sorted(res.glob("*__16x16.json")):
+        d = json.loads(p.read_text())
+        tot = (d["compute_term_s"] + d["memory_term_s"]
+               + d["collective_term_s"])
+        _row(f"roofline/{d['arch']}/{d['shape']}", tot * 1e6,
+             f"dominant={d['dominant']} useful={d['useful_flops_frac']:.2f}")
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    print("name,us_per_call,derived")
+    bench_ratios_p64()
+    bench_table1()
+    bench_table2()
+    bench_roofline_summary()
+    if not quick:
+        bench_fig7_accuracy()
+        bench_measured_strong()
+
+
+if __name__ == '__main__':
+    main()

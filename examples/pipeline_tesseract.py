@@ -1,0 +1,71 @@
+"""Composition demo (paper §3.4 / Fig. 6): pipeline parallelism OUTSIDE a
+Tesseract TP group — a [pipe=2, data=1, depth=1, row=1, col=2] mesh on 4
+fake devices, GPipe microbatching over a 2-stage MLP stack whose per-stage
+matmuls are Tesseract-sharded over col.
+
+    PYTHONPATH=src python examples/pipeline_tesseract.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.runtime.pipeline import bubble_fraction, pipeline_apply
+
+S_PIPE, Q = 2, 2
+M, MB, D = 8, 4, 64
+
+
+def main():
+    mesh = jax.make_mesh((S_PIPE, 1, 1, 1, Q),
+                         ("pipe", "data", "depth", "row", "col"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 5)
+    ws = jax.random.normal(jax.random.PRNGKey(0), (S_PIPE, D, D)) * 0.2
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, MB, D))
+    tgt = jax.random.normal(jax.random.PRNGKey(2), (M, MB, D))
+
+    def stage_fn(w_local, h):
+        # h features sharded over col; w [D/?, D/Q]: SUMMA-style local matmul
+        hg = lax.all_gather(h, "col", tiled=True, axis=-1)
+        y = jnp.tanh(hg @ w_local[0])
+        return y
+
+    def loss_fn(ws_l, x_l, tgt_l):
+        outs = pipeline_apply(stage_fn, ws_l, x_l, axis="pipe")
+        sid = lax.axis_index("pipe")
+        tl = lax.dynamic_slice_in_dim(
+            tgt_l, lax.axis_index("col") * (D // Q), D // Q, axis=2)
+        l = jnp.sum((outs - tl) ** 2) * (sid == S_PIPE - 1)
+        return lax.psum(l, ("pipe", "col"))
+
+    sm = jax.shard_map(loss_fn, mesh=mesh,
+                       in_specs=(P("pipe", None, "col"),
+                                 P(None, None, "col"),
+                                 P(None, None, None)),
+                       out_specs=P())
+    loss, grads = jax.value_and_grad(sm)(ws, x, tgt)
+    print(f"pipelined loss: {float(loss):.4f}; grad norm: "
+          f"{float(jnp.sqrt(sum(jnp.sum(g**2) for g in jax.tree.leaves(grads)))):.4f}")
+    print(f"bubble fraction (M={M}, S={S_PIPE}): "
+          f"{bubble_fraction(M, S_PIPE):.2%}")
+
+    # sequential reference
+    h = x
+    for s in range(S_PIPE):
+        h = jnp.tanh(h @ ws[s])
+    ref = float(jnp.sum((h - tgt) ** 2))
+    print(f"sequential reference loss: {ref:.4f} "
+          f"(match: {np.isclose(ref, float(loss), rtol=1e-5)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""deepseek-v2-236b: 60L d_model=5120 128H (MLA kv_lora=512) per-expert
+d_ff=1536 vocab=102400, MoE 160e top-6, 2 shared + first layer dense
+[arXiv:2405.04434; hf]."""
+from .base import ArchConfig, ModelConfig
+
+CONFIG = ArchConfig(
+    model=ModelConfig(
+        name="deepseek-v2-236b", family="moe",
+        num_layers=60, d_model=5120, num_heads=128, num_kv_heads=128,
+        d_ff=12288,  # first dense layer intermediate (hf config)
+        vocab_size=102400, mlp_act="silu", mlp_glu=True,
+        moe_num_experts=160, moe_top_k=6, moe_d_ff=1536,
+        moe_shared_experts=2, first_dense=1,
+        mla_kv_lora=512, mla_q_lora=1536,
+        qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128,
+        head_dim=192, rope_theta=1e4),
+    notes="MLA: compressed kv cache (512+64 per token); absorbed decode. "
+          "160 routed experts top-6 (EP over depth=4 -> 40/slice) + 2 shared "
+          "experts tesseract-sharded; first layer dense d_ff=12288.",
+)
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(model=ModelConfig(
+        name="deepseek-v2-reduced", family="moe",
+        num_layers=3, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=251, mlp_act="silu", mlp_glu=True,
+        moe_num_experts=4, moe_top_k=2, moe_d_ff=48,
+        moe_shared_experts=2, first_dense=1,
+        mla_kv_lora=16, mla_q_lora=32,
+        qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16, head_dim=24))

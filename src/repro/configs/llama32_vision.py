@@ -1,0 +1,26 @@
+"""llama-3.2-vision-11b: 40L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=128256 — cross-attn image layers
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified].
+
+Backbone only; the vision frontend is a STUB (input_specs provides
+precomputed patch embeddings [B, 1601, 1280]).  Cross-attention layers are
+placed one per 5-layer superblock (the hf checkpoint uses layers
+3,8,...,38 — same count/pattern)."""
+from .base import ArchConfig, ModelConfig
+
+CONFIG = ArchConfig(
+    model=ModelConfig(
+        name="llama-3.2-vision-11b", family="vlm",
+        num_layers=40, d_model=4096, num_heads=32, num_kv_heads=8,
+        d_ff=14336, vocab_size=128256, mlp_act="silu", mlp_glu=True,
+        cross_attn_every=5, vision_dim=1280, vision_tokens=1601,
+        rope_theta=5e5),
+)
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(model=ModelConfig(
+        name="llama32-vision-reduced", family="vlm",
+        num_layers=4, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=251, mlp_act="silu", mlp_glu=True,
+        cross_attn_every=2, vision_dim=32, vision_tokens=9))

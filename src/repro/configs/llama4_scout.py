@@ -1,0 +1,23 @@
+"""llama4-scout-17b-a16e: 48L d_model=5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, MoE 16e top-1 — MoE, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]."""
+from .base import ArchConfig, ModelConfig
+
+CONFIG = ArchConfig(
+    model=ModelConfig(
+        name="llama4-scout-17b-a16e", family="moe",
+        num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8,
+        d_ff=8192, vocab_size=202048, mlp_act="silu", mlp_glu=True,
+        moe_num_experts=16, moe_top_k=1, moe_d_ff=8192,
+        moe_shared_experts=1, rope_theta=5e5),
+    notes="16 routed experts top-1 + 1 shared expert per layer (hf config); "
+          "experts sharded over the tesseract depth axis (EP=d).",
+)
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(model=ModelConfig(
+        name="llama4-scout-reduced", family="moe",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=96, vocab_size=251, mlp_act="silu", mlp_glu=True,
+        moe_num_experts=4, moe_top_k=1, moe_d_ff=96, moe_shared_experts=1))

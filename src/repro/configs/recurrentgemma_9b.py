@@ -1,0 +1,24 @@
+"""recurrentgemma-9b: 38L d_model=4096 16H (GQA kv=1) d_ff=12288 vocab=256000
+— RG-LRU + local attn, 1:2 [arXiv:2402.19427; unverified]."""
+from .base import ArchConfig, ModelConfig
+
+CONFIG = ArchConfig(
+    model=ModelConfig(
+        name="recurrentgemma-9b", family="hybrid",
+        num_layers=38, d_model=4096, num_heads=16, num_kv_heads=1,
+        d_ff=12288, vocab_size=256000, mlp_act="gelu", mlp_glu=True,
+        lru_width=4096, local_window=2048, head_dim=256,
+        block_pattern=("rec", "rec", "attn"), rope_theta=1e4),
+    notes="12 superblocks of (rec,rec,attn) + 2 trailing rec blocks = 38L; "
+          "MQA (kv=1) local attention window 2048; RG-LRU gates diagonal "
+          "(simplified from block-diagonal, see models/recurrent.py).",
+)
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(model=ModelConfig(
+        name="recurrentgemma-reduced", family="hybrid",
+        num_layers=5, d_model=64, num_heads=4, num_kv_heads=1,
+        d_ff=128, vocab_size=251, mlp_act="gelu", mlp_glu=True,
+        lru_width=64, local_window=8, head_dim=16,
+        block_pattern=("rec", "rec", "attn")))

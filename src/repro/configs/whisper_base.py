@@ -1,0 +1,24 @@
+"""whisper-base: 6L d_model=512 8H d_ff=2048 vocab=51865 — enc-dec, conv
+frontend (stub) [arXiv:2212.04356; unverified]."""
+from .base import ArchConfig, ModelConfig
+
+CONFIG = ArchConfig(
+    model=ModelConfig(
+        name="whisper-base", family="audio",
+        num_layers=6, d_model=512, num_heads=8, num_kv_heads=8,
+        d_ff=2048, vocab_size=51865, mlp_act="gelu", mlp_glu=False,
+        norm="layernorm", use_bias=True, use_rope=False,
+        enc_layers=6, enc_seq=1500),
+    notes="conv frontend stubbed (input_specs provides frame embeddings); "
+          "sinusoidal positions on both stacks (learned 448-entry decoder "
+          "table replaced so the synthetic 32k cells are well-defined).",
+)
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(model=ModelConfig(
+        name="whisper-reduced", family="audio",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=251, mlp_act="gelu", mlp_glu=False,
+        norm="layernorm", use_bias=True, use_rope=False,
+        enc_layers=2, enc_seq=12))

@@ -1,0 +1,107 @@
+"""Parallel context: the single source of truth for how the model axis is factorized.
+
+Tesseract (the paper) arranges the tensor-parallel group as a [q, q, d] grid
+(`rows`, `cols`, `depth`).  The same abstraction covers the paper's baselines:
+
+- ``tesseract``  : rows=cols=q, depth=d  (p = d*q^2)     [paper, 2.5-D]
+- ``summa2d``    : depth=1               (Optimus, 2-D)
+- ``megatron1d`` : rows=depth=1, cols=p  (Megatron-LM, 1-D)
+- ``gspmd``      : same math as plain einsums + sharding constraints; XLA picks
+                   the collective schedule (beyond-paper comparison mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+AXIS_DATA = "data"
+AXIS_DEPTH = "depth"
+AXIS_ROW = "row"
+AXIS_COL = "col"
+LOGICAL_AXES = (AXIS_DATA, AXIS_DEPTH, AXIS_ROW, AXIS_COL)
+
+
+@dataclass(frozen=True)
+class ParallelContext:
+    """Hashable parallelism descriptor (usable as a custom_vjp nondiff arg)."""
+
+    mode: str = "tesseract"  # tesseract | summa2d | megatron1d | gspmd
+    data: int = 1
+    depth: int = 1
+    rows: int = 1
+    cols: int = 1
+    # --- knobs (perf levers; defaults are the paper-faithful choices) ---
+    # Cache the row-gathered weight blocks from fwd as residuals for bwd
+    # ("store the parameter matrices inside each processor", paper 3.2.1).
+    cache_weight_gather: bool = True
+    # Cache the col-gathered activations (paper does not; costs memory).
+    cache_act_gather: bool = False
+    # Reduce dW over the depth axis inside each op (paper: "all_reduce after
+    # the computation of B'") vs. deferring to one fused step-level reduction.
+    reduce_dgrad_in_op: bool = True
+    # Accumulate matmuls in fp32 regardless of compute dtype.
+    accum_fp32: bool = True
+    # Wire format of the dW reduce-scatter / depth all-reduce inside the
+    # matmul bwd: True reduces in bf16 (halves those collective bytes; the
+    # local partial products are still fp32-accumulated).  Beyond-paper lever.
+    dgrad_rs_bf16: bool = False
+
+    # axis names (fixed; kept here so ops never hard-code strings)
+    axis_data: str = AXIS_DATA
+    axis_depth: str = AXIS_DEPTH
+    axis_row: str = AXIS_ROW
+    axis_col: str = AXIS_COL
+
+    def __post_init__(self):
+        if self.mode in ("tesseract", "summa2d"):
+            if self.rows != self.cols:
+                raise ValueError(f"tesseract requires square q: {self.rows}x{self.cols}")
+            if self.mode == "summa2d" and self.depth != 1:
+                raise ValueError("summa2d is tesseract with depth=1")
+        elif self.mode == "megatron1d":
+            if self.rows != 1 or self.depth != 1:
+                raise ValueError("megatron1d uses rows=depth=1, cols=p")
+        elif self.mode != "gspmd":
+            raise ValueError(f"unknown mode {self.mode!r}")
+
+    # ---- derived sizes ----
+    @property
+    def q(self) -> int:
+        return self.cols
+
+    @property
+    def tp(self) -> int:
+        """Size of the tensor-parallel group (the 'model' mesh axis)."""
+        return self.depth * self.rows * self.cols
+
+    @property
+    def dq(self) -> int:
+        """Number of activation row-blocks within the TP group (paper: d*q)."""
+        return self.depth * self.rows
+
+    @property
+    def batch_shards(self) -> int:
+        """How many ways the token dim is sharded in the canonical layout."""
+        return self.data * self.depth * self.rows
+
+    def replace(self, **kw) -> "ParallelContext":
+        return dataclasses.replace(self, **kw)
+
+    # ---- axis groups ----
+    @property
+    def token_axes(self) -> tuple:
+        """Mesh axes that shard the token (batch*seq) dim of activations."""
+        if self.mode == "megatron1d":
+            return (self.axis_data,)
+        return (self.axis_data, self.axis_depth, self.axis_row)
+
+    @property
+    def seq_shard_axes(self) -> tuple:
+        """Axes used for sequence sharding in small-batch (prefill) layouts."""
+        if self.mode == "megatron1d":
+            return (self.axis_col,)
+        return (self.axis_depth, self.axis_row)
+
+    @property
+    def model_axes(self) -> tuple:
+        return (self.axis_depth, self.axis_row, self.axis_col)

@@ -1,0 +1,135 @@
+"""GSPMD comparison mode: the same dense-LM math written as plain global
+einsums + with_sharding_constraint, letting XLA's auto-partitioner pick the
+collective schedule — the beyond-paper control for the explicit Tesseract
+shard_map implementation (DESIGN.md §2, EXPERIMENTS.md §Perf appendix).
+
+Dense decoder family only (the comparison target); same param pytree and
+partition specs as the shard_map path, so the two lower from identical
+inputs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import common as cm
+from ..optim import adamw
+
+ACT = P(("data", "depth", "row"), None, "col")
+
+
+def _wsc(x, mesh, spec):
+    return lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def build_gspmd_train_step(model, mesh, shape):
+    """Train step for a DenseLM with GSPMD auto-partitioning.
+
+    Returns an object with .fn and .abstract_inputs like StepBundle.
+    """
+    from ..runtime.steps import StepBundle, batch_abstract, make_plan
+    from ..core.ops import make_ops
+
+    cfg, run, ctx = model.cfg, model.run, model.ctx
+    plan = make_plan(ctx, shape)
+    ops = make_ops(ctx, plan)
+    specs = model.specs(ops)
+    cdt = model.cdt
+    Hp, D = model.Hp, model.D
+    kvh = cfg.num_kv_heads
+
+    def block(p, x):
+        h = rms(x, p["ln1"])
+        q = jnp.einsum("bsh,hd->bsd", h, p["wq"].astype(cdt))
+        k = jnp.einsum("bsh,hd->bsd", h, p["wk"].astype(cdt))
+        v = jnp.einsum("bsh,hd->bsd", h, p["wv"].astype(cdt))
+        B, S = x.shape[:2]
+        q = _wsc(q.reshape(B, S, Hp, D), mesh,
+                 P(("data", "depth", "row"), None, "col", None))
+        k = k.reshape(B, S, kvh, D)
+        v = v.reshape(B, S, kvh, D)
+        pos = jnp.arange(S)
+        if cfg.use_rope:
+            q = cm.apply_rope(q, pos, cfg.rope_theta)
+            k = cm.apply_rope(k, pos, cfg.rope_theta)
+        out = cm.blockwise_attention(q, k, v, q_pos=pos, kv_pos=pos,
+                                     causal=True, q_chunk=run.q_chunk,
+                                     kv_chunk=run.kv_chunk)
+        out = out.reshape(B, S, Hp * D)
+        x = x + jnp.einsum("bsd,dh->bsh", out, p["wo"].astype(cdt))
+        x = _wsc(x, mesh, ACT)
+        h2 = rms(x, p["ln2"])
+        g = jax.nn.silu(jnp.einsum("bsh,hf->bsf", h2, p["w_gate"].astype(cdt)))
+        u = jnp.einsum("bsh,hf->bsf", h2, p["w_up"].astype(cdt))
+        x = x + jnp.einsum("bsf,fh->bsh", g * u, p["w_down"].astype(cdt))
+        return _wsc(x, mesh, ACT)
+
+    def rms(x, s):
+        xf = x.astype(jnp.float32)
+        inv = lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + cfg.norm_eps)
+        return (xf * inv * (1 + s.astype(jnp.float32))).astype(x.dtype)
+
+    def loss_fn(params, batch):
+        tok = batch["tokens"]
+        x = jnp.take(params["embed"].astype(cdt), tok, axis=0)
+        x = _wsc(x, mesh, ACT)
+        body = jax.checkpoint(lambda xx, bp: (block(bp, xx), None))
+        x, _ = lax.scan(body, x, params["blocks"])
+        x = rms(x, params["ln_f"])
+        # chunked CE (global math; GSPMD shards the vocab reduction)
+        B, S = tok.shape
+        E = B * S
+        c = max(1, min(run.loss_chunk * 8, E))
+        while E % c:
+            c -= 1
+        xf = x.reshape(E // c, c, -1)
+        lab = jnp.roll(tok, -1, 1).reshape(E // c, c) if "labels" not in batch \
+            else batch["labels"].reshape(E // c, c)
+        head = params["head"].astype(cdt)
+
+        @jax.checkpoint
+        def chunk(hw, xs):
+            xc, lc = xs
+            logits = jnp.einsum("ch,vh->cv", xc, hw,
+                                preferred_element_type=jnp.float32)
+            vmask = jnp.arange(logits.shape[-1]) < cfg.vocab_size
+            logits = jnp.where(vmask[None], logits, -jnp.inf)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, lc[:, None], 1)[:, 0]
+            return jnp.sum(lse - ll)
+
+        def body2(acc, xs):
+            return acc + chunk(head, xs), None
+
+        tot, _ = lax.scan(body2, jnp.float32(0), (xf, lab))
+        return tot / E
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        lr = adamw.cosine_lr(opt_state["step"], base_lr=run.lr,
+                             warmup=100, total=10000)
+        new_p, new_s = adamw.adamw_update(params, grads, opt_state, lr=lr,
+                                          weight_decay=run.weight_decay)
+        return new_p, new_s, {"loss": loss}
+
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    opt_master = run.param_dtype != "float32"
+    opt_sh = {"m": shardings, "v": shardings,
+              "step": NamedSharding(mesh, P()),
+              **({"master": shardings} if opt_master else {})}
+    batch_sds, batch_specs = batch_abstract(ops, shape, ctx, model)
+    batch_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), batch_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+    fn = jax.jit(step, in_shardings=(shardings, opt_sh, batch_sh),
+                 donate_argnums=(0, 1))
+    abs_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    abs_opt = jax.eval_shape(partial(adamw.adamw_init, master=opt_master),
+                             abs_params)
+    return StepBundle(fn=fn, abstract_inputs=(abs_params, abs_opt, batch_sds),
+                      in_shardings=(shardings, opt_sh, batch_sh),
+                      out_shardings=None, mesh=mesh, plan=plan)

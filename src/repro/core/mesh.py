@@ -1,0 +1,75 @@
+"""Logical mesh construction.
+
+The production mesh (launch/mesh.py) is fixed by the cluster:
+(16, 16) = ("data", "model") per pod, or (2, 16, 16) = ("pod", "data", "model").
+
+The framework reshapes that device array into the logical mesh
+
+    ("data", "depth", "row", "col")
+
+where the contiguous "model" axis is factorized into (depth, row, col) —
+Tesseract's [q, q, d] — and "pod" (if present) folds into "data".  Keeping the
+model group contiguous maps (row, col) onto the innermost ICI links and
+"depth" onto the outer ones, matching the paper's placement of the
+least-communicating axis on the slowest links.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from .api import LOGICAL_AXES, ParallelContext
+
+
+def _axis_types(n):
+    try:
+        return (jax.sharding.AxisType.Auto,) * n
+    except AttributeError:  # older jax
+        return None
+
+
+def make_mesh(shape, axes):
+    kw = {}
+    at = _axis_types(len(axes))
+    if at is not None:
+        kw["axis_types"] = at
+    return jax.make_mesh(tuple(shape), tuple(axes), **kw)
+
+
+def logical_mesh(ctx: ParallelContext, devices=None) -> Mesh:
+    """Build the ("data","depth","row","col") mesh from a flat device list."""
+    if devices is None:
+        devices = jax.devices()
+    flat = np.asarray(devices).reshape(-1)
+    need = ctx.data * ctx.depth * ctx.rows * ctx.cols
+    if flat.size != need:
+        raise ValueError(
+            f"need {need} devices for data={ctx.data} x [q={ctx.rows},{ctx.cols},d={ctx.depth}], "
+            f"got {flat.size}")
+    arr = flat.reshape(ctx.data, ctx.depth, ctx.rows, ctx.cols)
+    kw = {}
+    at = _axis_types(4)
+    if at is not None:
+        kw["axis_types"] = at
+    return Mesh(arr, LOGICAL_AXES, **kw)
+
+
+def logical_from_production(prod_mesh: Mesh, ctx: ParallelContext) -> Mesh:
+    """Reshape the harness-defined production mesh into the logical mesh.
+
+    The trailing mesh axis of the production mesh is "model" (size 16); it must
+    equal depth*rows*cols.  Leading axes ("pod", "data") fold into "data".
+    """
+    devs = prod_mesh.devices
+    model = devs.shape[-1]
+    if model != ctx.tp:
+        raise ValueError(f"model axis {model} != depth*rows*cols {ctx.tp}")
+    data_total = int(np.prod(devs.shape[:-1]))
+    if data_total != ctx.data:
+        raise ValueError(f"data axes {devs.shape[:-1]} != ctx.data {ctx.data}")
+    return logical_mesh(ctx, devs.reshape(-1))
+
+
+def named_sharding(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, PartitionSpec(*spec))

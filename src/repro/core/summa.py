@@ -1,0 +1,175 @@
+"""Tesseract matrix multiplication (the paper's Algorithm 3 + Eq. 3), TPU-native.
+
+Layout (inside ``jax.shard_map`` over the logical mesh, per-device views):
+
+    activations A : [..., E_loc, F_loc]   E sharded over (data, depth, row),
+                                          F sharded over col
+    weights     W : [F_loc, G_loc]        F over row, G over col,
+                                          replicated over (data, depth)
+    output      C : [..., E_loc, G_loc]   same layout class as A
+
+The paper's q broadcasts of A along each row of the [q, q] grid are fused into
+one ``all_gather`` over ``col``; the q broadcasts of W along each column fuse
+into one ``all_gather`` over ``row``; the SUMMA accumulation loop becomes a
+single local einsum over the gathered block index t (identical bytes, one
+fused collective instead of q serialized broadcasts — see DESIGN.md §2).
+
+Backward follows the paper exactly:
+    A' = C' W^T  : gather W over row, contract, reduce_scatter over col
+    W' = A^T C'  : gather A over col, contract, reduce_scatter over row,
+                   then all_reduce over depth ("processors with same row and
+                   column but different depth") — optionally deferred to the
+                   step-level gradient sync (perf lever).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .api import ParallelContext
+from .collectives import all_gather_inv
+
+
+def _maybe_f32(ctx: ParallelContext):
+    return jnp.float32 if ctx.accum_fp32 else None
+
+
+def _einsum(subs, *args, ctx: ParallelContext, out_dtype):
+    acc = _maybe_f32(ctx)
+    out = jnp.einsum(subs, *args, preferred_element_type=acc)
+    return out.astype(out_dtype)
+
+
+# --------------------------------------------------------------------------
+# Core: C = A @ W
+# --------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def tesseract_matmul(ctx: ParallelContext, a, w):
+    """Distributed C = A @ W per Tesseract Algorithm 3 (local view)."""
+    c, _ = _tess_fwd(ctx, a, w)
+    return c
+
+
+def _gather_a(ctx, a):
+    # A_{h,t} for all t: the q row-broadcasts of Algorithm 3, fused.
+    return all_gather_inv(a, ctx.axis_col)          # [q, ..., E_loc, F_loc]
+
+
+def _gather_w(ctx, w):
+    # W_{t,j} for all t: the q column-broadcasts of Algorithm 3, fused.
+    return all_gather_inv(w, ctx.axis_row)          # [q, F_loc, G_loc]
+
+
+def _tess_fwd(ctx: ParallelContext, a, w):
+    ag = _gather_a(ctx, a)
+    wg = _gather_w(ctx, w)
+    # C_{h,j} = sum_t A_{h,t} W_{t,j}
+    c = _einsum("t...ef,tfg->...eg", ag, wg, ctx=ctx, out_dtype=a.dtype)
+    res = (ag if ctx.cache_act_gather else a,
+           wg if ctx.cache_weight_gather else w)
+    return c, res
+
+
+def _tess_bwd(ctx: ParallelContext, res, dc):
+    ar, wr = res
+    ag = ar if ctx.cache_act_gather else _gather_a(ctx, ar)
+    wg = wr if ctx.cache_weight_gather else _gather_w(ctx, wr)
+    # dA_{h,t} = sum_j dC_{h,j} W_{t,j}^T   (paper's C = A * B^T form)
+    da_part = _einsum("...eg,tfg->t...ef", dc, wg, ctx=ctx, out_dtype=dc.dtype)
+    da = lax.psum_scatter(da_part, ctx.axis_col, scatter_dimension=0,
+                          tiled=False)
+    # dW_{t,j} = sum_h A_{h,t}^T dC_{h,j}   (paper's C = A^T * B form)
+    rs_dtype = jnp.bfloat16 if ctx.dgrad_rs_bf16 else jnp.float32
+    dw_part = _einsum("t...ef,...eg->tfg", ag, dc, ctx=ctx, out_dtype=rs_dtype)
+    dw = lax.psum_scatter(dw_part, ctx.axis_row, scatter_dimension=0,
+                          tiled=False)
+    if ctx.reduce_dgrad_in_op:
+        # Paper-faithful per-op reduction: "all_reduce after the computation
+        # of B' on processors with same row and column but different depth"
+        # (+ the data axis when DP is fused in).  In deferred mode the same
+        # reduction happens once per step at the pvary boundary instead.
+        dw = lax.psum(dw, (ctx.axis_data, ctx.axis_depth))
+    return da, dw.astype(wr.dtype)  # wr dtype == w dtype in both cache modes
+
+
+tesseract_matmul.defvjp(_tess_fwd, _tess_bwd)
+
+
+# --------------------------------------------------------------------------
+# Expert-batched variant: C[n] = A[n] @ W[n] for n local experts (MoE).
+# A: [N, T, F_loc], W: [N, F_loc, G_loc] — the expert dim N is already local
+# (experts sharded over depth); row/col collectives are identical to the
+# plain op.  Grad sync over (data,) happens at the grad_sync boundary (EP
+# weights are only replicated over data), so no in-op reduction flag here.
+# --------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def tesseract_matmul_experts(ctx: ParallelContext, a, w):
+    c, _ = _tess_exp_fwd(ctx, a, w)
+    return c
+
+
+def _tess_exp_fwd(ctx, a, w):
+    ag = all_gather_inv(a, ctx.axis_col)      # [q, N, T, F_loc]
+    wg = all_gather_inv(w, ctx.axis_row)      # [q, N, F_loc, G_loc]
+    c = _einsum("tnef,tnfg->neg", ag, wg, ctx=ctx, out_dtype=a.dtype)
+    res = (ag if ctx.cache_act_gather else a,
+           wg if ctx.cache_weight_gather else w)
+    return c, res
+
+
+def _tess_exp_bwd(ctx, res, dc):
+    ar, wr = res
+    ag = ar if ctx.cache_act_gather else all_gather_inv(ar, ctx.axis_col)
+    wg = wr if ctx.cache_weight_gather else all_gather_inv(wr, ctx.axis_row)
+    da_part = _einsum("neg,tnfg->tnef", dc, wg, ctx=ctx, out_dtype=dc.dtype)
+    da = lax.psum_scatter(da_part, ctx.axis_col, scatter_dimension=0, tiled=False)
+    rs_dtype = jnp.bfloat16 if ctx.dgrad_rs_bf16 else jnp.float32
+    dw_part = _einsum("tnef,neg->tnfg", ag, dc, ctx=ctx, out_dtype=rs_dtype)
+    dw = lax.psum_scatter(dw_part, ctx.axis_row, scatter_dimension=0, tiled=False)
+    return da, dw.astype(wr.dtype)
+
+
+tesseract_matmul_experts.defvjp(_tess_exp_fwd, _tess_exp_bwd)
+
+
+# --------------------------------------------------------------------------
+# Transposed variant: C = A @ W^T (used by tied heads / down-projections that
+# store weights in [out, in] layout).  W: [G_loc(row), F_loc(col)].
+# --------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def tesseract_matmul_wt(ctx: ParallelContext, a, w):
+    c, _ = _tess_wt_fwd(ctx, a, w)
+    return c
+
+
+def _tess_wt_fwd(ctx, a, w):
+    # C_{h,t} = sum_j A_{h,j} W_{t,j}^T : broadcast W within its column,
+    # compute, then reduce partial C within the row (paper 3.1, C = A*B^T).
+    wg = all_gather_inv(w, ctx.axis_row)            # [q(t), G_loc, F_loc]
+    part = _einsum("...ef,tgf->t...eg", a, wg, ctx=ctx, out_dtype=a.dtype)
+    c = lax.psum_scatter(part, ctx.axis_col, scatter_dimension=0, tiled=False)
+    res = (a, wg if ctx.cache_weight_gather else w)
+    return c, res
+
+
+def _tess_wt_bwd(ctx, res, dc):
+    a, wr = res
+    wg = wr if ctx.cache_weight_gather else all_gather_inv(wr, ctx.axis_row)
+    dcg = all_gather_inv(dc, ctx.axis_col)          # [q(t), ..., E, G_loc]
+    da = _einsum("t...eg,tgf->...ef", dcg, wg, ctx=ctx, out_dtype=dc.dtype)
+    rs_dtype = jnp.bfloat16 if ctx.dgrad_rs_bf16 else jnp.float32
+    dw_part = _einsum("t...eg,...ef->tgf", dcg, a, ctx=ctx, out_dtype=rs_dtype)
+    dw = lax.psum_scatter(dw_part, ctx.axis_row, scatter_dimension=0,
+                          tiled=False)
+    if ctx.reduce_dgrad_in_op:
+        dw = lax.psum(dw, (ctx.axis_data, ctx.axis_depth))
+    return da, dw.astype(wr.dtype)
+
+
+tesseract_matmul_wt.defvjp(_tess_wt_fwd, _tess_wt_bwd)

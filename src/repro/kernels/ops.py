@@ -1,0 +1,30 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (the TPU is the
+TARGET, not the runtime); ``repro_kernels_interpret()`` flips automatically
+unless a TPU backend is present.  Model code gates usage behind
+``RunConfig.use_pallas``.
+"""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention
+from .ssd import ssd_intra
+from .tesseract_mm import tesseract_mm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def tesseract_mm_op(a, b, **kw):
+    return tesseract_mm(a, b, interpret=_interpret(), **kw)
+
+
+def flash_attention_op(q, k, v, *, causal=True, **kw):
+    return flash_attention(q, k, v, causal=causal, interpret=_interpret(), **kw)
+
+
+def ssd_intra_op(x, log_a, Bm, Cm, **kw):
+    return ssd_intra(x, log_a, Bm, Cm, interpret=_interpret(), **kw)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def tesseract_mm_ref(a, b):
+    """t-accumulating SUMMA local matmul: C = sum_t A[t] @ B[t].
+
+    a: [T, E, F]; b: [T, F, G] -> [E, G] (fp32 accumulation).
+    This is the per-device compute hot spot of the paper's Algorithm 3 after
+    the all-gathers (DESIGN.md §2)."""
+    return jnp.einsum("tef,tfg->eg", a, b,
+                      preferred_element_type=jnp.float32)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None):
+    """q: [B, H, Tq, D]; k/v: [B, H, Tk, D] -> [B, H, Tq, D]."""
+    Tq, Tk = q.shape[2], k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(Tq)[:, None] >= jnp.arange(Tk)[None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_intra_ref(x, log_a, Bm, Cm):
+    """Intra-chunk SSD (mamba2): per chunk, quadratic attention-like form.
+
+    x: [B, nc, Q, H, P]; log_a: [B, nc, Q, H]; Bm/Cm: [B, nc, Q, N]
+    Returns (Y_intra [B, nc, Q, H, P], S_c [B, nc, H, P, N]).
+    """
+    Q = x.shape[2]
+    cs = jnp.cumsum(log_a, axis=2)
+    # seg[b,c,h,i,j] = cs[i] - cs[j]
+    cs_t = cs.transpose(0, 1, 3, 2)                  # [B,nc,H,Q]
+    seg = cs_t[..., :, None] - cs_t[..., None, :]    # [B,nc,H,Q,Q]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask, jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cm, Bm)
+    Y = jnp.einsum("bcij,bchij,bcjhp->bcihp", scores, L, x,
+                   preferred_element_type=jnp.float32)
+    tail = cs_t[..., -1:] - cs_t                     # [B,nc,H,Q]
+    xw = x * jnp.exp(tail).transpose(0, 1, 3, 2)[..., None]
+    S_c = jnp.einsum("bcjhp,bcjn->bchpn", xw, Bm,
+                     preferred_element_type=jnp.float32)
+    return Y.astype(jnp.float32), S_c

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: the Tesseract per-device SUMMA accumulation matmul.
+
+After the fused all-gathers (DESIGN.md §2) each device computes
+
+    C[e, g] = sum_t A[t, e, f] B[t, f, g]
+
+— the paper's inner SUMMA loop.  The kernel tiles (E, G) onto the MXU with
+128-aligned VMEM blocks and walks the (t, f) reduction in the innermost grid
+dimensions, accumulating into the output block in fp32 — so the gathered
+operands stream HBM->VMEM exactly once and the accumulator never leaves
+VMEM.
+
+Grid: (E/be, G/bg, T, F/bf) — XLA guarantees sequential execution of the
+trailing grid dims on TPU, making output-block accumulation safe.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BE = 256
+DEFAULT_BF = 512
+DEFAULT_BG = 256
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, n_inner):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[0]          # [be, bf]
+    b = b_ref[0]          # [bf, bg]
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_inner - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("be", "bf", "bg", "interpret"))
+def tesseract_mm(a, b, *, be=DEFAULT_BE, bf=DEFAULT_BF, bg=DEFAULT_BG,
+                 interpret=False):
+    """a: [T, E, F]; b: [T, F, G] -> [E, G] fp32."""
+    T, E, F = a.shape
+    G = b.shape[-1]
+    be, bf, bg = min(be, E), min(bf, F), min(bg, G)
+    assert E % be == 0 and F % bf == 0 and G % bg == 0, (E, F, G, be, bf, bg)
+    nf = F // bf
+    # fold (t, f) into one inner reduction axis so accumulation order is
+    # purely sequential on TPU
+    n_inner = T * nf
+
+    def a_index(e, g, i):
+        return (i // nf, e, i % nf)
+
+    def b_index(e, g, i):
+        return (i // nf, i % nf, g)
+
+    grid = (E // be, G // bg, n_inner)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_inner=n_inner),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, be, bf), a_index),
+            pl.BlockSpec((1, bf, bg), b_index),
+        ],
+        out_specs=pl.BlockSpec((be, bg), lambda e, g, i: (e, g)),
+        out_shape=jax.ShapeDtypeStruct((E, G), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((be, bg), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out

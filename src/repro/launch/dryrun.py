@@ -1,0 +1,243 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware.  For every (architecture x input shape x mesh) cell:
+
+    jax.jit(step).lower(**abstract inputs) -> .compile()
+    print(compiled.memory_analysis())   # proves it fits
+    print(compiled.cost_analysis())     # FLOPs/bytes for the roofline
+
+plus collective-byte parsing of the partitioned HLO.  Results are cached as
+JSON under benchmarks/results/dryrun/.
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-6b --shape train_4k [--multi-pod]
+    python -m repro.launch.dryrun --all        # driver: one subprocess/cell
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def _parse_kv(pairs):
+    out = {}
+    for kv in pairs or []:
+        k, v = kv.split("=", 1)
+        if v in ("true", "True"):
+            v = True
+        elif v in ("false", "False"):
+            v = False
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        out[k] = v
+    return out
+
+
+def input_specs(arch_name: str, shape_name: str, *, mode: str = "tesseract",
+                multi_pod: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of a cell — weak-type
+    correct, shardable, no device allocation (the shannon/kernels pattern).
+
+    Returns (abstract_inputs, in_shardings) as fed to ``bundle.fn.lower``.
+    """
+    from ..configs.base import SHAPES, RunConfig
+    from ..core.mesh import logical_from_production
+    from ..models.registry import get_arch, build_model
+    from ..runtime.steps import (build_decode_step, build_prefill_step,
+                                 build_train_step)
+    from .mesh import make_production_mesh, production_context
+
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    ctx = production_context(mode, multi_pod=multi_pod)
+    mesh = logical_from_production(make_production_mesh(multi_pod=multi_pod),
+                                   ctx)
+    run = RunConfig(param_dtype="bfloat16", compute_dtype="bfloat16",
+                    remat="full")
+    model = build_model(arch.model, ctx, run)
+    builder = {"train": build_train_step, "prefill": build_prefill_step,
+               "decode": build_decode_step}[shape.kind]
+    bundle = builder(model, mesh, shape)
+    return bundle.abstract_inputs, bundle.in_shardings
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool, mode: str,
+             run_overrides=None, ctx_overrides=None, tag: str = ""):
+    import jax
+    from ..configs.base import SHAPES, RunConfig
+    from ..core.mesh import logical_from_production
+    from ..models.registry import get_arch, build_model
+    from ..roofline import hlo as hlo_mod
+    from ..roofline.analysis import Roofline, model_flops
+    from ..runtime.steps import (build_decode_step, build_prefill_step,
+                                 build_train_step)
+    from .mesh import make_production_mesh, production_context
+
+    t0 = time.time()
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    # gspmd mode reuses the tesseract factorization + specs; only the step
+    # builder differs (auto-partitioned global einsums)
+    ctx_mode = "tesseract" if mode == "gspmd" else mode
+    ctx = production_context(ctx_mode, multi_pod=multi_pod,
+                             **(ctx_overrides or {}))
+    prod_mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = logical_from_production(prod_mesh, ctx)
+    n_dev = prod_mesh.devices.size
+
+    run_kw = dict(param_dtype="bfloat16", compute_dtype="bfloat16",
+                  remat="full", loss_chunk=512, q_chunk=512, kv_chunk=1024)
+    run_kw.update(run_overrides or {})
+    run = RunConfig(**run_kw)
+    model = build_model(arch.model, ctx, run)
+
+    if mode == "gspmd":
+        from ..core.gspmd import build_gspmd_train_step
+        assert shape.kind == "train", "gspmd comparison mode: train only"
+        bundle = build_gspmd_train_step(model, mesh, shape)
+    elif shape.kind == "train":
+        bundle = build_train_step(model, mesh, shape)
+    elif shape.kind == "prefill":
+        bundle = build_prefill_step(model, mesh, shape)
+    else:
+        bundle = build_decode_step(model, mesh, shape)
+
+    lowered = bundle.fn.lower(*bundle.abstract_inputs)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    print("memory_analysis:", ma)
+    ca = compiled.cost_analysis() or {}
+    print("cost_analysis: flops=%.3e bytes=%.3e (NOTE: while bodies counted "
+          "once; structural analysis below multiplies trip counts)" %
+          (ca.get("flops", 0.0), ca.get("bytes accessed", 0.0)))
+    text = compiled.as_text()
+    struct = hlo_mod.analyze_hlo(text, n_dev)
+    stats = struct["collectives"]
+    ob, wb = hlo_mod.total_collective_bytes(stats)
+    del text
+    # cost_analysis undercounts while bodies (counted once) and the raw
+    # structural operand+output sum ignores fusion/aliasing (scan carries,
+    # converts).  The HBM model used for the memory term is therefore:
+    #     dot traffic (operands+outputs of every dot, trip-multiplied)
+    #   + 2 x argument bytes (params/optimizer stream: one read + one write
+    #     per step; serve steps read-only but keep the same bound)
+    # — a defensible per-step traffic floor; see EXPERIMENTS.md §Roofline.
+    ca_flops = float(ca.get("flops", 0.0))
+    ca_bytes = float(ca.get("bytes accessed", 0.0))
+    arg_bytes = float(getattr(ma, "argument_size_in_bytes", 0))
+    hbm_bytes = struct["dot_bytes"] + 2.0 * arg_bytes
+
+    per_dev_bytes = int(getattr(ma, "argument_size_in_bytes", 0)
+                        + getattr(ma, "temp_size_in_bytes", 0)
+                        + getattr(ma, "output_size_in_bytes", 0)
+                        - getattr(ma, "alias_size_in_bytes", 0))
+    rl = Roofline(
+        arch=arch_name, shape=shape_name, mode=mode,
+        mesh="2x16x16" if multi_pod else "16x16", chips=n_dev,
+        hlo_flops=float(struct["flops"]),
+        hlo_bytes=float(hbm_bytes),
+        coll_operand_bytes=float(ob), coll_wire_bytes=float(wb),
+        model_flops_total=model_flops(arch.model, shape),
+        per_device_bytes=per_dev_bytes,
+        collectives=stats,
+    ).finalize()
+    rl_d = rl.to_dict()
+    rl_d["cost_analysis_raw"] = {"flops": ca_flops, "bytes": ca_bytes}
+    rl_d["structural_bytes_upper"] = float(struct["hbm_bytes"])
+    rl_d["lower_s"] = round(t_lower, 1)
+    rl_d["compile_s"] = round(t_compile, 1)
+    rl_d["memory_analysis"] = {
+        k: int(getattr(ma, k)) for k in dir(ma)
+        if k.endswith("_in_bytes") and not k.startswith("host")}
+
+    rl_d["tag"] = tag
+    rl_d["run_overrides"] = run_overrides or {}
+    rl_d["ctx_overrides"] = ctx_overrides or {}
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    sfx = f"__{tag}" if tag else ""
+    out = RESULTS / f"{arch_name}__{shape_name}__{mode}__{rl_d['mesh']}{sfx}.json"
+    out.write_text(json.dumps(rl_d, indent=1))
+    print(f"cell OK: {out.name}  compute={rl.compute_term_s*1e3:.2f}ms "
+          f"memory={rl.memory_term_s*1e3:.2f}ms "
+          f"collective={rl.collective_term_s*1e3:.2f}ms "
+          f"dominant={rl.dominant} (lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    return rl_d
+
+
+def iter_cells(modes=("tesseract",)):
+    from ..configs.base import LONG_CONTEXT_OK, SHAPES
+    from ..models.registry import ARCH_MODULES, get_arch
+    for arch_name in ARCH_MODULES:
+        arch = get_arch(arch_name)
+        for sh in arch.shape_list():
+            for mp in (False, True):
+                for mode in modes:
+                    yield arch_name, sh.name, mp, mode
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="tesseract",
+                    choices=("tesseract", "summa2d", "megatron1d", "gspmd"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--modes", default="tesseract",
+                    help="comma list for --all sweeps")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--run-override", action="append", default=[],
+                    help="RunConfig overrides k=v (e.g. capacity_factor=1.0)")
+    ap.add_argument("--ctx-override", action="append", default=[],
+                    help="ParallelContext overrides k=v "
+                         "(e.g. cache_act_gather=true rows=4 cols=4 depth=1)")
+    ap.add_argument("--tag", default="", help="suffix for the result JSON")
+    args = ap.parse_args()
+
+    if args.all:
+        failures = []
+        for arch_name, shape_name, mp, mode in iter_cells(
+                tuple(args.modes.split(","))):
+            tag = f"{arch_name}__{shape_name}__{mode}__{'2x16x16' if mp else '16x16'}"
+            out = RESULTS / f"{tag}.json"
+            if out.exists() and not args.force:
+                print(f"skip (cached): {tag}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch_name, "--shape", shape_name, "--mode", mode]
+            if mp:
+                cmd.append("--multi-pod")
+            print(f"=== {tag}", flush=True)
+            env = dict(os.environ,
+                       PYTHONPATH=str(RESULTS.parents[2] / "src"))
+            env.pop("XLA_FLAGS", None)  # child sets its own (512 devices)
+            r = subprocess.run(cmd, env=env)
+            if r.returncode != 0:
+                failures.append(tag)
+                print(f"FAILED: {tag}")
+        print(f"done; {len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    run_cell(args.arch, args.shape, args.multi_pod, args.mode,
+             run_overrides=_parse_kv(args.run_override),
+             ctx_overrides=_parse_kv(args.ctx_override), tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Production mesh definitions (cluster-facing).
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+from ..core.api import ParallelContext
+from ..core.mesh import logical_from_production
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# How the 16-way "model" axis factorizes per parallelization mode.
+MODEL_FACTORIZATIONS = {
+    # mode      (rows, cols, depth)
+    "tesseract": (2, 2, 4),     # paper's 2.5-D default  [q=2, d=4]
+    "summa2d": (4, 4, 1),       # Optimus 2-D baseline   [q=4, d=1]
+    "megatron1d": (1, 16, 1),   # Megatron 1-D baseline
+    "gspmd": (2, 2, 4),         # auto-partitioner control, tesseract specs
+}
+
+
+def production_context(mode: str = "tesseract", *, multi_pod: bool = False,
+                       **overrides) -> ParallelContext:
+    rows, cols, depth = MODEL_FACTORIZATIONS[mode]
+    data = 32 if multi_pod else 16   # pod axis folds into data (paper §3.4)
+    rows = overrides.pop("rows", rows)
+    cols = overrides.pop("cols", cols)
+    depth = overrides.pop("depth", depth)
+    data = overrides.pop("data", data)
+    return ParallelContext(mode=mode, data=data, depth=depth, rows=rows,
+                           cols=cols, **overrides)
+
+
+def production_logical_mesh(mode: str = "tesseract", *,
+                            multi_pod: bool = False, **overrides):
+    ctx = production_context(mode, multi_pod=multi_pod, **overrides)
+    prod = make_production_mesh(multi_pod=multi_pod)
+    return ctx, logical_from_production(prod, ctx)

@@ -1,0 +1,68 @@
+"""Serving launcher: batched prefill + greedy decode loop.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
+        --batch 4 --prompt-len 16 --new-tokens 16
+
+For production decode the 1-D serve layout is the measured winner
+(EXPERIMENTS.md §Perf B1): pass --mode megatron1d.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--mode", default="tesseract",
+                    choices=("tesseract", "summa2d", "megatron1d"))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--rows", type=int, default=1)
+    ap.add_argument("--cols", type=int, default=1)
+    ap.add_argument("--depth", type=int, default=1)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from ..configs.base import RunConfig, ShapeSpec
+    from ..core.api import ParallelContext
+    from ..core.mesh import logical_mesh
+    from ..models.registry import build_model, get_arch, get_reduced
+    from ..runtime.steps import build_decode_step
+
+    arch = get_reduced(args.arch) if args.reduced else get_arch(args.arch)
+    ctx = ParallelContext(mode=args.mode, data=args.data, depth=args.depth,
+                          rows=args.rows, cols=args.cols)
+    mesh = logical_mesh(ctx)
+    run = RunConfig(param_dtype="float32", compute_dtype="float32",
+                    loss_chunk=64, q_chunk=32, kv_chunk=32)
+    model = build_model(arch.model, ctx, run)
+    params = model.init(jax.random.PRNGKey(0))
+
+    total = args.prompt_len + args.new_tokens
+    dec = build_decode_step(model, mesh,
+                            ShapeSpec("d", total, args.batch, "decode"))
+    cache_sds, _ = model.cache_abstract(args.batch, total, dec.plan)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_sds)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 min(250, model.cfg.vocab_size))
+    ids = prompts[:, :1]
+    out = []
+    for t in range(total - 1):
+        nxt, cache = dec.fn(params, cache, ids, jnp.int32(t))
+        ids = (prompts[:, t + 1:t + 2] if t + 1 < args.prompt_len else nxt)
+        if t + 1 >= args.prompt_len:
+            out.append(np.asarray(nxt).ravel())
+    print("generated:")
+    print(np.stack(out).T)
+
+
+if __name__ == "__main__":
+    main()

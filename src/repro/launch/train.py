@@ -1,0 +1,64 @@
+"""Cluster training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --mode tesseract \
+        --steps 100 [--reduced] [--data 2 --rows 2 --cols 2 --depth 2] \
+        [--seq 256 --batch 8] [--ckpt /path]
+
+On a real pod, jax.distributed.initialize() is called when the usual cluster
+env vars are present; on this container it runs single-process.  With
+--reduced it trains the reduced config on however many devices exist;
+without, it expects the full production mesh (use the dry-run to validate
+that first).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--mode", default="tesseract",
+                    choices=("tesseract", "summa2d", "megatron1d"))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--rows", type=int, default=1)
+    ap.add_argument("--cols", type=int, default=1)
+    ap.add_argument("--depth", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    if "COORDINATOR_ADDRESS" in os.environ:  # multi-host pod
+        import jax
+        jax.distributed.initialize()
+
+    from ..configs.base import RunConfig, ShapeSpec
+    from ..core.api import ParallelContext
+    from ..core.mesh import logical_mesh
+    from ..models.registry import build_model, get_arch, get_reduced
+    from ..runtime.train_loop import train
+
+    arch = get_reduced(args.arch) if args.reduced else get_arch(args.arch)
+    ctx = ParallelContext(mode=args.mode, data=args.data, depth=args.depth,
+                          rows=args.rows, cols=args.cols)
+    mesh = logical_mesh(ctx)
+    run = RunConfig(param_dtype="float32", compute_dtype="float32",
+                    loss_chunk=128, q_chunk=64, kv_chunk=64, lr=args.lr,
+                    zero1=args.zero1)
+    model = build_model(arch.model, ctx, run)
+    shape = ShapeSpec("train", seq_len=args.seq, global_batch=args.batch,
+                      kind="train")
+    res = train(model, mesh, shape, steps=args.steps, ckpt_dir=args.ckpt,
+                log_every=10)
+    print(f"final loss {res.losses[-1]:.4f} after {len(res.losses)} steps "
+          f"({res.restarts} restarts)")
+
+
+if __name__ == "__main__":
+    main()

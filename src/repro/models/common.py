@@ -1,0 +1,211 @@
+"""Shared model components: RoPE, streaming (flash-style) attention in pure
+JAX, decode attention against a KV cache, init helpers, activations.
+
+All attention math takes [B, T, H, D] tensors that are already *local* views
+(heads sharded over `col`, tokens/seq per the plan) — no mesh axes here except
+what the caller passes in explicitly via gathered KV.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def winit(key, shape, scale=0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def winit_padded(key, gen_shape, padded_shape, scale=0.02, dtype=jnp.float32):
+    """Generate at the *logical* shape, zero-pad to the sharded shape — keeps
+    init values identical across mesh factorizations (padding differs)."""
+    w = winit(key, gen_shape, scale, dtype)
+    pads = [(0, p - g) for g, p in zip(gen_shape, padded_shape)]
+    if any(p != (0, 0) for p in pads):
+        w = jnp.pad(w, pads)
+    return w
+
+
+def zinit(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def vma_like(x, *refs):
+    """Give ``x`` the union of the refs' varying-manifest-axes so it can seed
+    a scan carry inside shard_map (numerical no-op; works outside shard_map
+    too, unlike an explicit pvary with axis names)."""
+    tie = sum((r.reshape(-1)[0] * 0).astype(jnp.float32) for r in refs)
+    return x + tie.astype(x.dtype)
+
+
+def mlp_act(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":  # squared ReLU (nemotron-4)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: [B, T, H, D]; positions: [T] or [B, T] global position ids."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # [D/2]
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]   # [T, D/2]
+        ang = ang[None, :, None, :]                     # [1, T, 1, D/2]
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs          # [B, T, D/2]
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Streaming attention (pure-jnp flash): O(block) memory, numerically stable.
+# v1 computes every (q-block, kv-block) pair and masks — the causal upper
+# triangle is wasted compute; the Pallas kernel and the triangular-scan
+# hillclimb (§Perf) remove it.
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q, k, v, *, q_pos, kv_pos, causal: bool = True,
+                        local_window: int = 0, q_chunk: int = 512,
+                        kv_chunk: int = 512, softmax_scale=None):
+    """q: [B, Tq, Hq, D]; k,v: [B, Tk, Hkv, Dv?]; GQA via Hq = g * Hkv.
+
+    q_pos: [Tq] global positions of queries; kv_pos: [Tk].
+    local_window > 0 limits attention to the last `local_window` positions.
+    Returns [B, Tq, Hq, Dv].
+    """
+    B, Tq, Hq, D = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    g = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+
+    cq = min(q_chunk, Tq)
+    while Tq % cq:
+        cq -= 1
+    ck = min(kv_chunk, Tk)
+    while Tk % ck:
+        ck -= 1
+    nq, nk = Tq // cq, Tk // ck
+
+    qr = q.reshape(B, nq, cq, Hkv, g, D)
+    kr = k.reshape(B, nk, ck, Hkv, D)
+    vr = v.reshape(B, nk, ck, Hkv, Dv)
+    qpr = q_pos.reshape(nq, cq)
+    kpr = kv_pos.reshape(nk, ck)
+
+    def q_block(args):
+        qb, qp = args                                  # [B, cq, Hkv, g, D], [cq]
+
+        def kv_step(carry, blk):
+            m, l, acc = carry
+            kb, vb, kp = blk                           # [B, ck, Hkv, D], ...
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= qp[:, None] >= kp[None, :]
+            if local_window > 0:
+                mask &= kp[None, :] > (qp[:, None] - local_window)
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard: fully-masked rows keep m=-inf; exp(-inf - -inf) -> nan
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            corr = jnp.exp(jnp.where(jnp.isneginf(m), -jnp.inf, m - m_safe))
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = vma_like(jnp.full((B, Hkv, g, cq), -jnp.inf, jnp.float32), qb, k, v)
+        l0 = vma_like(jnp.zeros((B, Hkv, g, cq), jnp.float32), qb, k, v)
+        a0 = vma_like(jnp.zeros((B, Hkv, g, cq, Dv), jnp.float32), qb, k, v)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), (kr.swapaxes(0, 1),
+                                                          vr.swapaxes(0, 1),
+                                                          kpr))
+        l = jnp.where(l == 0.0, 1.0, l)
+        out = acc / l[..., None]                        # [B, Hkv, g, cq, Dv]
+        return out.transpose(0, 3, 1, 2, 4)             # [B, cq, Hkv, g, Dv]
+
+    outs = lax.map(q_block, (qr.swapaxes(0, 1), qpr))   # [nq, B, cq, Hkv, g, Dv]
+    out = outs.swapaxes(0, 1).reshape(B, Tq, Hq, Dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, cur_pos, kv_map=None,
+                     local_window: int = 0, softmax_scale=None):
+    """Single-step attention against a cache.
+
+    q: [B, Hq, D]; k_cache/v_cache: [B, S, Hkv, D]; cur_pos: scalar int —
+    number of valid cache entries (new token's position is cur_pos).
+    kv_map: optional [Hq] map from q-head to kv-head (non-uniform GQA);
+    default uses Hq = g*Hkv contiguous grouping.
+    """
+    B, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    if kv_map is not None:
+        kc = jnp.take(k_cache, kv_map, axis=2)           # [B, S, Hq, D]
+        vc = jnp.take(v_cache, kv_map, axis=2)
+        s = jnp.einsum("bhd,bshd->bhs", q, kc,
+                       preferred_element_type=jnp.float32) * scale
+    else:
+        g = Hq // Hkv
+        qg = q.reshape(B, Hkv, g, D)
+        s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                       preferred_element_type=jnp.float32) * scale
+        s = s.reshape(B, Hq, S)
+        vc = None
+    pos = jnp.arange(S)
+    mask = pos[None, None, :] <= cur_pos
+    if local_window > 0:
+        mask &= pos[None, None, :] > (cur_pos - local_window)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    if kv_map is not None:
+        out = jnp.einsum("bhs,bshd->bhd", p.astype(vc.dtype), vc,
+                         preferred_element_type=jnp.float32)
+    else:
+        g = Hq // Hkv
+        pg = p.reshape(B, Hkv, g, S)
+        out = jnp.einsum("bhgs,bshd->bhgd", pg.astype(v_cache.dtype), v_cache,
+                         preferred_element_type=jnp.float32)
+        out = out.reshape(B, Hq, Dv)
+    return out.astype(q.dtype)
+
+
+def cache_update(cache, new_k, new_v, cur_pos):
+    """Write one step's K/V into the cache at cur_pos. new_k: [B, 1, Hkv, D]."""
+    k = lax.dynamic_update_slice_in_dim(cache["k"], new_k.astype(cache["k"].dtype),
+                                        cur_pos, axis=1)
+    v = lax.dynamic_update_slice_in_dim(cache["v"], new_v.astype(cache["v"].dtype),
+                                        cur_pos, axis=1)
+    return dict(cache, k=k, v=v)

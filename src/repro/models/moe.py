@@ -1,0 +1,544 @@
+"""MoE LMs on Tesseract: llama4-scout (GQA + 16e top-1) and deepseek-v2
+(MLA + 160e top-6 + 2 shared experts).
+
+Expert parallelism reuses Tesseract's depth axis: the paper replicates FFN
+weights across depth to parallelize the batch; with MoE, the expert dimension
+gives depth a better use (DESIGN.md §6).  Each expert's own matmuls stay 2-D
+SUMMA-sharded over (row, col):
+
+    expert weights [E, F, G] -> P(depth, row, col)
+    dispatch: sort-based (argsort by expert), capacity-bounded
+    routing comm: all_to_all over depth, both directions
+
+MLA (deepseek): KV compressed to kv_lora (+ shared rope key); decode uses the
+absorbed formulation against the compressed cache (cache = 576 B/token
+instead of 2*H*192).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import round_up
+from ..core import collectives as cc
+from ..core.summa import tesseract_matmul_experts
+from . import common as cm
+from .transformer import DenseLM, ops_last_token
+
+
+class MoELM(DenseLM):
+    def __init__(self, cfg, ctx, run):
+        super().__init__(cfg, ctx, run)
+        self.is_mla = cfg.mla_kv_lora > 0
+        if ctx.mode == "megatron1d":
+            raise NotImplementedError(
+                "MoE archs run in tesseract/summa2d modes (1-D baseline is "
+                "benchmarked on the dense families, as in the paper)")
+        self.n_exp = cfg.moe_num_experts
+        if self.n_exp % ctx.depth:
+            raise ValueError(f"experts {self.n_exp} % depth {ctx.depth} != 0")
+        self.exp_loc = self.n_exp // ctx.depth
+        if self.is_mla:
+            self.qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+            self.Hp = round_up(cfg.num_heads, ctx.cols)
+
+    # ------------------------------------------------------------- params
+    def _mla_init(self, ks):
+        cfg = self.cfg
+        h = cfg.d_model
+        H = cfg.num_heads
+        return {
+            "w_dq": cm.winit(ks[0], (h, cfg.mla_q_lora), dtype=self.pdt),
+            "ln_q": jnp.zeros((cfg.mla_q_lora,), self.pdt),
+            "w_uq": cm.winit_padded(ks[1], (cfg.mla_q_lora, H * self.qk_dim),
+                                    (cfg.mla_q_lora, self.Hp * self.qk_dim),
+                                    dtype=self.pdt),
+            "w_dkv": cm.winit(ks[2], (h, cfg.mla_kv_lora), dtype=self.pdt),
+            "ln_kv": jnp.zeros((cfg.mla_kv_lora,), self.pdt),
+            "w_kr": cm.winit(ks[3], (h, cfg.qk_rope_dim), dtype=self.pdt),
+            "w_ukv": cm.winit_padded(
+                ks[4], (cfg.mla_kv_lora, H * (cfg.qk_nope_dim + cfg.v_head_dim)),
+                (cfg.mla_kv_lora, self.Hp * (cfg.qk_nope_dim + cfg.v_head_dim)),
+                dtype=self.pdt),
+            "wo": cm.winit_padded(ks[5], (H * cfg.v_head_dim, h),
+                                  (self.Hp * cfg.v_head_dim, h), dtype=self.pdt),
+            "ln1": jnp.zeros((h,), self.pdt),
+        }
+
+    def _moe_init(self, ks):
+        cfg = self.cfg
+        h, ffe = cfg.d_model, cfg.moe_d_ff
+        E = self.n_exp
+        p = {
+            "w_router": cm.winit(ks[0], (h, E), dtype=self.pdt),
+            "we_gate": cm.winit(ks[1], (E, h, ffe), dtype=self.pdt),
+            "we_up": cm.winit(ks[2], (E, h, ffe), dtype=self.pdt),
+            "we_down": cm.winit(ks[3], (E, ffe, h), dtype=self.pdt),
+            "ln2": jnp.zeros((h,), self.pdt),
+        }
+        if cfg.moe_shared_experts:
+            ffs = cfg.moe_shared_experts * ffe
+            p["ws_gate"] = cm.winit(ks[4], (h, ffs), dtype=self.pdt)
+            p["ws_up"] = cm.winit(ks[5], (h, ffs), dtype=self.pdt)
+            p["ws_down"] = cm.winit(ks[6], (ffs, h), dtype=self.pdt)
+        return p
+
+    def _block_init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 16)
+        if self.is_mla:
+            p = self._mla_init(ks[:6])
+        else:
+            dense = super()._block_init(key)
+            p = {k: v for k, v in dense.items()
+                 if k in ("ln1", "wq", "wk", "wv", "wo")}
+        p.update(self._moe_init(ks[6:13]))
+        return p
+
+    def _dense_block_init(self, key):
+        """First dense layer (deepseek first_dense=1) with its own d_ff."""
+        return super()._block_init(key)
+
+    def init(self, key):
+        cfg = self.cfg
+        k_e, k_h, k_b, k_d = jax.random.split(key, 4)
+        n_moe = cfg.num_layers - cfg.first_dense
+        blocks = jax.vmap(self._block_init)(jax.random.split(k_b, n_moe))
+        params = {
+            "embed": cm.winit_padded(k_e, (cfg.vocab_size, cfg.d_model),
+                                     (self.v_pad, cfg.d_model), dtype=self.pdt),
+            "head": cm.winit_padded(k_h, (cfg.vocab_size, cfg.d_model),
+                                    (self.v_pad, cfg.d_model), dtype=self.pdt),
+            "ln_f": jnp.zeros((cfg.d_model,), self.pdt),
+            "blocks": blocks,
+        }
+        if cfg.first_dense:
+            params["dense_blocks"] = jax.vmap(self._dense_block_init)(
+                jax.random.split(k_d, cfg.first_dense))
+        return params
+
+    def _block_specs(self, ops):
+        cfg = self.cfg
+        if self.is_mla:
+            s = {
+                "w_dq": ops.spec_w2d(True), "ln_q": ops.spec_norm(True),
+                "w_uq": ops.spec_w2d(True),
+                "w_dkv": ops.spec_w2d(True), "ln_kv": ops.spec_norm(True),
+                "w_kr": ops.spec_w_to_replicated(True),
+                "w_ukv": ops.spec_w2d(True),
+                "wo": ops.spec_w_down(True),
+                "ln1": ops.spec_norm(True),
+            }
+        else:
+            kv_spec = (ops.spec_w2d(True) if self.kv_shard
+                       else ops.spec_w_to_replicated(True))
+            s = {"ln1": ops.spec_norm(True), "wq": ops.spec_w2d(True),
+                 "wk": kv_spec, "wv": kv_spec, "wo": ops.spec_w_down(True)}
+        if self.run.moe_expert_layout == "local":
+            from jax.sharding import PartitionSpec as P
+            exp_spec = P(None, "depth", None, None)
+        else:
+            exp_spec = ops.spec_expert(True)
+        s.update({
+            "w_router": ops.spec_w_to_replicated(True),
+            "we_gate": exp_spec, "we_up": exp_spec, "we_down": exp_spec,
+            "ln2": ops.spec_norm(True),
+        })
+        if cfg.moe_shared_experts:
+            s.update(ws_gate=ops.spec_w2d(True), ws_up=ops.spec_w2d(True),
+                     ws_down=ops.spec_w_down(True))
+        return s
+
+    def specs(self, ops):
+        s = {
+            "embed": ops.spec_embed(), "head": ops.spec_head(),
+            "ln_f": ops.spec_norm(False), "blocks": self._block_specs(ops),
+        }
+        if self.cfg.first_dense:
+            s["dense_blocks"] = DenseLM._block_specs(self, ops)
+        return s
+
+    def tess_weight_names(self):
+        base = {"wo", "w_dq", "w_uq", "w_dkv", "w_ukv", "ws_gate", "ws_up",
+                "ws_down", "wq"}
+        # wk/wv are tesseract-sharded in the GQA MoE blocks and in the dense
+        # prefix (deepseek first_dense) whenever kv_heads % q == 0
+        if self.kv_shard:
+            base.update({"wk", "wv"})
+        if self.cfg.first_dense:
+            base.update({"w_up", "w_gate", "w_down"})
+        return base
+
+    # ------------------------------------------------------------- MoE ffn
+    def _moe_ffn(self, p, x, ops):
+        """Sort-based capacity-bounded top-k routing, EP over depth."""
+        cfg, ctx = self.cfg, self.ctx
+        B, T, f = x.shape
+        N = B * T
+        E, k = self.n_exp, cfg.moe_top_k
+        xt = x.reshape(N, f)
+
+        logits = ops.linear_to_replicated(xt, p["w_router"]).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)                  # [N, E]
+        gates, idx = lax.top_k(probs, k)                         # [N, k]
+
+        # ---- aux load-balance loss (switch-style), invariant scalar ----
+        f_e = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=(0, 1))
+        p_e = jnp.mean(probs, axis=0)
+        aux = E * jnp.sum(f_e * p_e)
+        aux = cc.pmean_v(aux, ("data", "depth", "row", "col"))
+
+        cap = max(1, int(math.ceil(k * N / E * self.run.capacity_factor)))
+        cap = ((cap + ctx.cols - 1) // ctx.cols) * ctx.cols  # divisible by q
+        # ---- sort-based dispatch ----
+        flat_e = idx.reshape(-1)                                  # [N*k]
+        flat_t = jnp.repeat(jnp.arange(N), k)
+        flat_g = gates.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+        counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(N * k) - starts[se]
+        keep = pos < cap
+        slot = jnp.where(keep, se * cap + pos, E * cap)           # drop -> pad row
+        buf = jnp.zeros((E * cap + 1, f), x.dtype).at[slot].set(xt[st])
+        buf = buf[:-1].reshape(ctx.depth, self.exp_loc, cap, f)
+
+        # ---- route to expert owners: all_to_all over depth ----
+        if ctx.depth > 1:
+            buf = lax.all_to_all(buf, ctx.axis_depth, split_axis=0,
+                                 concat_axis=0, tiled=False)
+        # buf: [d(source), E_loc, cap, f] -> [E_loc, d*cap, f]
+        buf = buf.transpose(1, 0, 2, 3).reshape(self.exp_loc,
+                                                ctx.depth * cap, f)
+
+        # ---- expert FFN ----
+        cdt = self.cdt
+        if self.run.moe_expert_layout == "local":
+            # beyond-paper layout: expert weights live whole on their depth
+            # slice; tokens are gathered to full width and SPLIT over col so
+            # each col member computes a disjoint token range (weight gathers
+            # -> token gathers; see EXPERIMENTS.md §Perf).
+            q = ctx.cols
+            Tt = buf.shape[1]
+            bufg = cc.all_gather_inv(buf, ctx.axis_col, tiled=True, axis=2)
+            jj = lax.axis_index(ctx.axis_col)
+            bufj = lax.dynamic_slice_in_dim(bufg, jj * (Tt // q), Tt // q,
+                                            axis=1)
+            g = jnp.einsum("etf,efg->etg", bufj, p["we_gate"].astype(cdt),
+                           preferred_element_type=jnp.float32).astype(cdt)
+            u = jnp.einsum("etf,efg->etg", bufj, p["we_up"].astype(cdt),
+                           preferred_element_type=jnp.float32).astype(cdt)
+            hdn = jax.nn.silu(g) * u
+            of = jnp.einsum("etg,egf->etf", hdn, p["we_down"].astype(cdt),
+                            preferred_element_type=jnp.float32).astype(cdt)
+            og = cc.all_gather_inv(of, ctx.axis_col, tiled=True, axis=1)
+            floc = f
+            out = lax.dynamic_slice_in_dim(og, jj * floc, floc, axis=2)
+            out = cc.pvary(out, (ctx.axis_col,))  # token-slice varies by col
+        else:
+            # paper-style: each expert's matmuls 2-D SUMMA over (row, col)
+            g = tesseract_matmul_experts(ctx, buf, p["we_gate"].astype(cdt))
+            u = tesseract_matmul_experts(ctx, buf, p["we_up"].astype(cdt))
+            hdn = jax.nn.silu(g) * u
+            out = tesseract_matmul_experts(ctx, hdn, p["we_down"].astype(cdt))
+
+        # ---- route back ----
+        out = out.reshape(self.exp_loc, ctx.depth, cap, f).transpose(1, 0, 2, 3)
+        if ctx.depth > 1:
+            out = lax.all_to_all(out, ctx.axis_depth, split_axis=0,
+                                 concat_axis=0, tiled=False)
+        out = out.reshape(E * cap, f)
+        out = jnp.concatenate([out, jnp.zeros((1, f), out.dtype)], axis=0)
+
+        # ---- combine: gather slots back per (token, choice), weight ----
+        picked = out[slot]                                        # [N*k, f]
+        w = jnp.where(keep, sg, 0.0).astype(jnp.float32)
+        y = jnp.zeros((N, f), jnp.float32).at[st].add(
+            picked.astype(jnp.float32) * w[:, None])
+        y = y.astype(x.dtype).reshape(B, T, f)
+        if ops.plan.kind in ("long_decode", "decode_dp") and ctx.depth > 1:
+            # small-batch decode: tokens are replicated over depth, so the
+            # routed output is too (every depth slice assembles all experts'
+            # results) — make the vma reflect it (tiny psum; one token/step).
+            y = cc.last_shard_value(y, (ctx.axis_depth,))
+
+        if cfg.moe_shared_experts:
+            hg = ops.seq_gather_in(x)
+            sg_ = ops.linear_up(hg, p["ws_gate"])
+            su = ops.linear_up(hg, p["ws_up"])
+            y = y + ops.linear_down(jax.nn.silu(sg_) * su, p["ws_down"])
+        return y, aux
+
+    # ------------------------------------------------------------- MLA attn
+    def _mla_qkv(self, p, xg, ops, positions):
+        cfg = self.cfg
+        B, T = xg.shape[:2]
+        HL = self.Hp // ops.head_shards
+        cq = ops.linear(xg, p["w_dq"])
+        cq = ops.rmsnorm(cq, p["ln_q"], cfg.norm_eps)
+        q = ops.linear(cq, p["w_uq"]).reshape(B, T, HL, self.qk_dim)
+        q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+        q_rope = cm.apply_rope(q_rope, positions, cfg.rope_theta)
+        ckv = ops.linear(xg, p["w_dkv"])
+        ckv = ops.rmsnorm(ckv, p["ln_kv"], cfg.norm_eps)
+        kr = ops.linear_to_replicated(xg, p["w_kr"])[:, :, None, :]  # [B,T,1,r]
+        kr = cm.apply_rope(kr, positions, cfg.rope_theta)
+        return jnp.concatenate([q_nope, q_rope], -1), ckv, kr
+
+    def _mla_expand(self, p, ckv_full, ops):
+        """Expand (gathered) compressed KV to per-head K/V."""
+        cfg = self.cfg
+        B, S = ckv_full.shape[:2]
+        HL = self.Hp // ops.head_shards
+        kv = ops.linear(ckv_full, p["w_ukv"])
+        kv = kv.reshape(B, S, HL, cfg.qk_nope_dim + cfg.v_head_dim)
+        return jnp.split(kv, [cfg.qk_nope_dim], axis=-1)  # k_nope, v
+
+    def _mla_attention(self, p, x, ops, full_kv_pos):
+        cfg = self.cfg
+        h = self._norm(ops, x, p["ln1"])
+        hg = ops.seq_gather_in(h)
+        T = hg.shape[1]
+        qpos = ops.positions_q(T)
+        q, ckv, kr = self._mla_qkv(p, hg, ops, qpos)
+        ckv_f = ops.kv_full(ckv, axis=1)       # gather compressed, not expanded
+        kr_f = ops.kv_full(kr, axis=1)
+        k_nope, v = self._mla_expand(p, ckv_f, ops)
+        HL = k_nope.shape[2]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_f, k_nope.shape[:3] + (cfg.qk_rope_dim,))],
+            axis=-1)
+        out = cm.blockwise_attention(
+            q, k, v, q_pos=qpos, kv_pos=full_kv_pos, causal=True,
+            q_chunk=self.run.q_chunk, kv_chunk=self.run.kv_chunk,
+            softmax_scale=1.0 / math.sqrt(self.qk_dim))
+        return self._attn_out_mla(p, out, ops), (ckv, kr)
+
+    def _attn_out_mla(self, p, out, ops):
+        B, T = out.shape[:2]
+        hm = self._head_mask(ops)
+        if hm is not None:
+            out = out * hm[None, None, :, None]
+        out = out.reshape(B, T, -1)
+        return ops.linear_down(out, p["wo"])
+
+    def _head_mask(self, ops):
+        if self.Hp == self.cfg.num_heads:
+            return None
+        hloc = self.Hp // ops.head_shards
+        gidx = lax.axis_index(self.ctx.axis_col) * hloc + jnp.arange(hloc)
+        return (gidx < self.cfg.num_heads).astype(self.cdt)
+
+    # ------------------------------------------------------------- blocks
+    def _block_train(self, p, x, ops, full_kv_pos, collect_kv=False):
+        if self.is_mla:
+            attn, kv = self._mla_attention(p, x, ops, full_kv_pos)
+            x = x + attn
+        else:
+            x_new = DenseLM._block_train_attn(self, p, x, ops, full_kv_pos)
+            x, kv = x_new
+        h2 = self._norm(ops, x, p["ln2"])
+        y, aux = self._moe_ffn(p, h2, ops)
+        x = x + y
+        return (x, aux, kv) if collect_kv else (x, aux)
+
+    def _run_blocks_moe(self, params, x, ops, full_kv_pos, cast):
+        from .transformer import maybe_remat
+
+        def dense_body(xx, bp):
+            return DenseLM._block_train(self, cast(bp), xx, ops, full_kv_pos), None
+
+        def body(carry, bp):
+            xx, aux = carry
+            xx, a = self._block_train(cast(bp), xx, ops, full_kv_pos)
+            return (xx, aux + a), None
+
+        if self.cfg.first_dense:
+            x, _ = lax.scan(maybe_remat(dense_body, self.run), x,
+                            params["dense_blocks"])
+        aux0 = jnp.float32(0)
+        (x, aux), _ = lax.scan(maybe_remat(body, self.run), (x, aux0),
+                               params["blocks"])
+        return x, aux
+
+    def loss(self, params, batch, ops):
+        x = ops.embed(batch["tokens"], params["embed"]).astype(self.cdt)
+        T_loc = x.shape[1]
+        n_seq = (self.ctx.depth * self.ctx.rows if ops.plan.seq_sharded else 1)
+        full_kv_pos = jnp.arange(T_loc * n_seq)
+        cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt), t)
+        x, aux = self._run_blocks_moe(params, x, ops, full_kv_pos, cast)
+        x = self._norm(ops, x, params["ln_f"])
+        loss_sum, cnt = ops.ce_loss(
+            x, params["head"].astype(self.cdt), batch["labels"],
+            vocab_real=self.cfg.vocab_size, loss_chunk=self.run.loss_chunk,
+            label_mask=batch.get("mask"))
+        loss_sum = lax.psum(loss_sum, self.ctx.axis_data)
+        cnt = lax.psum(cnt, self.ctx.axis_data)
+        n_moe = self.cfg.num_layers - self.cfg.first_dense
+        return loss_sum / jnp.maximum(cnt, 1.0) + 0.01 * aux / n_moe
+
+    # ------------------------------------------------------------ serving
+    def cache_abstract(self, batch_global: int, seq_len: int, plan):
+        if not self.is_mla:
+            return super().cache_abstract(batch_global, seq_len, plan)
+        from jax import ShapeDtypeStruct as Sds
+        from jax.sharding import PartitionSpec as P
+        cfg = self.cfg
+        L = cfg.num_layers - cfg.first_dense
+        tok = (("data", "depth", "row") if plan.kind == "decode"
+               else "data" if plan.kind == "decode_dp" else None)
+        sds = {
+            "ckv": Sds((L, batch_global, seq_len, cfg.mla_kv_lora), self.cdt),
+            "kr": Sds((L, batch_global, seq_len, cfg.qk_rope_dim), self.cdt),
+        }
+        specs = {"ckv": P(None, tok, None, None), "kr": P(None, tok, None, None)}
+        if cfg.first_dense:
+            dshape = (cfg.first_dense, batch_global, seq_len,
+                      cfg.num_kv_heads, self.D)
+            kv_sp = P(None, tok, None, "col" if self.kv_shard else None, None)
+            sds.update(dk=Sds(dshape, self.cdt), dv=Sds(dshape, self.cdt))
+            specs.update(dk=kv_sp, dv=kv_sp)
+        return sds, specs
+
+    def prefill_cache_specs(self, ops):
+        if not self.is_mla:
+            return super().prefill_cache_specs(ops)
+        from jax.sharding import PartitionSpec as P
+        seq = ("depth", "row")
+        specs = {"ckv": P(None, "data", seq, "col"),
+                 "kr": P(None, "data", seq, None)}
+        if self.cfg.first_dense:
+            kv_sp = P(None, "data", seq, "col" if self.kv_shard else None, None)
+            specs.update(dk=kv_sp, dv=kv_sp)
+        return specs
+
+    def prefill(self, params, batch, ops):
+        cfg = self.cfg
+        x = ops.embed(batch["tokens"], params["embed"]).astype(self.cdt)
+        S_loc = x.shape[1]
+        n_seq = (self.ctx.depth * self.ctx.rows if ops.plan.seq_sharded else 1)
+        full_kv_pos = jnp.arange(S_loc * n_seq)
+        cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt), t)
+        cache = {}
+        if cfg.first_dense:
+            def dbody(xx, bp):
+                return DenseLM._block_prefill(self, cast(bp), xx, ops, full_kv_pos)
+            x, (dk, dv) = lax.scan(dbody, x, params["dense_blocks"])
+            cache.update(dk=dk, dv=dv)
+
+        def body(carry, bp):
+            xx, aux = carry
+            bp = cast(bp)
+            if self.is_mla:
+                attn, (ckv, kr) = self._mla_attention(bp, xx, ops, full_kv_pos)
+                xx = xx + attn
+                kv_out = (ckv.astype(self.cdt), kr[:, :, 0, :].astype(self.cdt))
+            else:
+                xx, kv_pair = DenseLM._block_prefill_attnonly(self, bp, xx, ops,
+                                                              full_kv_pos)
+                kv_out = kv_pair
+            h2 = self._norm(ops, xx, bp["ln2"])
+            y, a = self._moe_ffn(bp, h2, ops)
+            return (xx + y, aux + a), kv_out
+
+        (x, _aux), kvs = lax.scan(body, (x, jnp.float32(0)), params["blocks"])
+        x = self._norm(ops, x, params["ln_f"])
+        x_last = ops_last_token(ops, x, self.ctx)
+        ids = ops.head_sample(x_last, params["head"].astype(self.cdt),
+                              vocab_real=cfg.vocab_size, tokens_sharded=False)
+        if self.is_mla:
+            cache.update(ckv=kvs[0], kr=kvs[1])
+        else:
+            cache.update(k=kvs[0], v=kvs[1])
+        return ids[:, None] if ids.ndim == 1 else ids, cache
+
+    def _mla_decode_attn(self, p, x, cache_l, pos, ops):
+        """Absorbed MLA decode against the compressed cache."""
+        cfg, ctx = self.cfg, self.ctx
+        B = x.shape[0]
+        HL = self.Hp // ops.head_shards
+        h = self._norm(ops, x, p["ln1"])
+        positions = jnp.full((1,), pos, jnp.int32)
+        q, ckv, kr = self._mla_qkv(p, h, ops, positions)
+        q_nope, q_rope = jnp.split(q[:, 0], [cfg.qk_nope_dim], axis=-1)  # [B,HL,*]
+        # write compressed entries (ckv concatenated to full width for the
+        # cache; vma-invariant over col to satisfy the cache out_spec)
+        ckv_full = cc.unvary_concat(ckv, ctx.axis_col, ckv.ndim - 1)
+        cache_l = dict(cache_l)
+        cache_l["ckv"] = lax.dynamic_update_slice_in_dim(
+            cache_l["ckv"], ckv_full.astype(cache_l["ckv"].dtype), pos, axis=1)
+        cache_l["kr"] = lax.dynamic_update_slice_in_dim(
+            cache_l["kr"], kr[:, :, 0, :].astype(cache_l["kr"].dtype), pos, axis=1)
+        # absorb: gather w_ukv rows (full kv_lora) once per step
+        wg = cc.all_gather_inv(p["w_ukv"], ctx.axis_row, tiled=True, axis=0)
+        wg = wg.reshape(cfg.mla_kv_lora, HL, cfg.qk_nope_dim + cfg.v_head_dim)
+        w_uk, w_uv = wg[..., :cfg.qk_nope_dim], wg[..., cfg.qk_nope_dim:]
+        q_abs = jnp.einsum("bhd,lhd->bhl", q_nope, w_uk,
+                           preferred_element_type=jnp.float32)
+        s = jnp.einsum("bhl,bsl->bhs", q_abs,
+                       cache_l["ckv"].astype(jnp.float32))
+        s = s + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                           cache_l["kr"].astype(jnp.float32))
+        s = s / math.sqrt(self.qk_dim)
+        S = cache_l["ckv"].shape[1]
+        mask = jnp.arange(S)[None, None, :] <= pos
+        s = jnp.where(mask, s, -jnp.inf)
+        pattn = jax.nn.softmax(s, axis=-1)
+        lat = jnp.einsum("bhs,bsl->bhl", pattn, cache_l["ckv"].astype(jnp.float32))
+        out = jnp.einsum("bhl,lhd->bhd", lat, w_uv.astype(jnp.float32))
+        out = out.astype(self.cdt)[:, None]                      # [B,1,HL,vd]
+        return self._attn_out_mla(p, out, ops), cache_l
+
+    def decode(self, params, cache, ids, pos, ops):
+        cfg = self.cfg
+        x = ops.embed(ids, params["embed"]).astype(self.cdt)
+        cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt), t)
+        if cfg.first_dense:
+            # scan over the dense prefix
+            def dbody2(xx, xs):
+                bp, ck, cv = xs
+                y, cl2 = DenseLM._block_decode(self, cast(bp), xx,
+                                               {"k": ck, "v": cv}, pos, ops)
+                return y, (cl2["k"], cl2["v"])
+            x, (ndk, ndv) = lax.scan(dbody2, x,
+                                     (params["dense_blocks"], cache["dk"],
+                                      cache["dv"]))
+        def body(xx, xs):
+            bp, *cl = xs
+            bp = cast(bp)
+            if self.is_mla:
+                attn, cl2 = self._mla_decode_attn(bp, xx,
+                                                  {"ckv": cl[0], "kr": cl[1]},
+                                                  pos, ops)
+                xx = xx + attn
+                cl_out = (cl2["ckv"], cl2["kr"])
+            else:
+                y, cl2 = DenseLM._block_decode_attnonly(self, bp, xx,
+                                                        {"k": cl[0], "v": cl[1]},
+                                                        pos, ops)
+                xx = y
+                cl_out = (cl2["k"], cl2["v"])
+            h2 = self._norm(ops, xx, bp["ln2"])
+            yff, _aux = self._moe_ffn(bp, h2, ops)
+            return xx + yff, cl_out
+
+        if self.is_mla:
+            x, (nckv, nkr) = lax.scan(body, x,
+                                      (params["blocks"], cache["ckv"],
+                                       cache["kr"]))
+            new_cache = {"ckv": nckv, "kr": nkr}
+        else:
+            x, (nk, nv) = lax.scan(body, x,
+                                   (params["blocks"], cache["k"], cache["v"]))
+            new_cache = {"k": nk, "v": nv}
+        if cfg.first_dense:
+            new_cache.update(dk=ndk, dv=ndv)
+        x = self._norm(ops, x, params["ln_f"])
+        nids = ops.head_sample(x, params["head"].astype(self.cdt),
+                               vocab_real=cfg.vocab_size)
+        return nids, new_cache

@@ -1,0 +1,394 @@
+"""RecurrentGemma (Griffin): RG-LRU recurrent blocks + local attention, 1:2.
+
+Applicability note (DESIGN.md §6): the RG-LRU recurrence is elementwise /
+diagonal — there is no matmul for Tesseract to split.  The surrounding
+projections (W_x, W_y, W_o, MLP, attention QKV/O) are tesseract-sharded; the
+recurrence itself shards over features (col) and runs locally over time via
+an associative scan.  Sequence sharding chains shard states with the
+distributed linear scan.  Gate weights are per-channel (diagonal) — a
+documented simplification of the block-diagonal gates in the Griffin code.
+
+Layer pattern: scan over superblocks of (rec, rec, attn); leftover layers
+(38 % 3 = 2) run as a trailing stacked scan of rec blocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import collectives as cc
+from . import common as cm
+from .transformer import DenseLM, maybe_remat, ops_last_token
+
+C_RGLRU = 8.0
+
+
+class RecurrentLM(DenseLM):
+    def __init__(self, cfg, ctx, run):
+        super().__init__(cfg, ctx, run)
+        if ctx.mode == "megatron1d":
+            raise NotImplementedError("hybrid arch runs in tesseract modes")
+        self.lru_w = cfg.lru_width or cfg.d_model
+        self.n_super = cfg.num_layers // 3
+        self.n_rest = cfg.num_layers % 3   # trailing rec blocks
+
+    # ------------------------------------------------------------- params
+    def _rec_init(self, key):
+        cfg = self.cfg
+        h, W = cfg.d_model, self.lru_w
+        ks = jax.random.split(key, 6)
+        return {
+            "ln": jnp.zeros((h,), self.pdt),
+            "w_y": cm.winit(ks[0], (h, W), dtype=self.pdt),
+            "w_xb": cm.winit(ks[1], (h, W), dtype=self.pdt),
+            "conv_w": cm.winit(ks[2], (4, W), 0.2, self.pdt),
+            "gate_a_w": jnp.zeros((W,), self.pdt),   # diagonal gates
+            "gate_a_b": jnp.zeros((W,), self.pdt),
+            "gate_x_w": jnp.zeros((W,), self.pdt),
+            "gate_x_b": jnp.zeros((W,), self.pdt),
+            "lam": jnp.full((W,), 2.0, self.pdt),    # a = sigmoid(lam)^(c*r)
+            "w_o": cm.winit(ks[3], (W, h), dtype=self.pdt),
+            "ln2": jnp.zeros((h,), self.pdt),
+            "w_gate": cm.winit(ks[4], (h, cfg.d_ff), dtype=self.pdt),
+            "w_up": cm.winit(ks[5], (h, cfg.d_ff), dtype=self.pdt),
+            "w_down": cm.winit(jax.random.fold_in(key, 9), (cfg.d_ff, h),
+                               dtype=self.pdt),
+        }
+
+    def _super_init(self, key):
+        ks = jax.random.split(key, 3)
+        return {
+            "rec": jax.vmap(self._rec_init)(ks[:2]),
+            "attn": super()._block_init(ks[2]),
+        }
+
+    def init(self, key):
+        cfg = self.cfg
+        k_e, k_h, k_b, k_r = jax.random.split(key, 4)
+        p = {
+            "embed": cm.winit_padded(k_e, (cfg.vocab_size, cfg.d_model),
+                                     (self.v_pad, cfg.d_model), dtype=self.pdt),
+            "head": cm.winit_padded(k_h, (cfg.vocab_size, cfg.d_model),
+                                    (self.v_pad, cfg.d_model), dtype=self.pdt),
+            "ln_f": jnp.zeros((cfg.d_model,), self.pdt),
+            "supers": jax.vmap(self._super_init)(
+                jax.random.split(k_b, self.n_super)),
+        }
+        if self.n_rest:
+            p["rest"] = jax.vmap(self._rec_init)(
+                jax.random.split(k_r, self.n_rest))
+        return p
+
+    def _rec_specs(self, ops):
+        return {
+            "ln": ops.spec_norm(True),
+            "w_y": ops.spec_w2d(True), "w_xb": ops.spec_w2d(True),
+            # [L, K, W]: channel dim over col
+            "conv_w": __import__("jax").sharding.PartitionSpec(None, None, "col"),
+            "gate_a_w": ops.spec_vec(True), "gate_a_b": ops.spec_vec(True),
+            "gate_x_w": ops.spec_vec(True), "gate_x_b": ops.spec_vec(True),
+            "lam": ops.spec_vec(True),
+            "w_o": ops.spec_w_down(True),
+            "ln2": ops.spec_norm(True),
+            "w_gate": ops.spec_w2d(True), "w_up": ops.spec_w2d(True),
+            "w_down": ops.spec_w_down(True),
+        }
+
+    def specs(self, ops):
+        from jax.sharding import PartitionSpec as P
+        stack = lambda s: P(*((None,) + tuple(s)))
+        rec_stacked = self._rec_specs(ops)        # [n, ...] single stack
+        s = {
+            "embed": ops.spec_embed(), "head": ops.spec_head(),
+            "ln_f": ops.spec_norm(False),
+            "supers": {
+                # rec leaves are [n_super, 2, ...] -> one extra None
+                "rec": {k: stack(v) for k, v in rec_stacked.items()},
+                # attn leaves are [n_super, ...] -> stacked specs directly
+                "attn": DenseLM._block_specs(self, ops),
+            },
+        }
+        if self.n_rest:
+            s["rest"] = rec_stacked               # [n_rest, ...]
+        return s
+
+    def tess_weight_names(self):
+        names = super().tess_weight_names()
+        names.update({"w_y", "w_xb", "w_o"})
+        return names
+
+    # ------------------------------------------------------------- RG-LRU
+    def _rglru(self, p, xb, ops, h0=None):
+        """xb: [B,T,W/q] (post-conv).  Returns (out, h_last)."""
+        ctx = self.ctx
+        xf = xb.astype(jnp.float32)
+        r = jax.nn.sigmoid(xf * p["gate_a_w"].astype(jnp.float32)
+                           + p["gate_a_b"].astype(jnp.float32))
+        i = jax.nn.sigmoid(xf * p["gate_x_w"].astype(jnp.float32)
+                           + p["gate_x_b"].astype(jnp.float32))
+        log_lam = jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))
+        log_a = C_RGLRU * r * log_lam                        # [B,T,W]
+        a = jnp.exp(log_a)
+        b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        A_cum, B_cum = lax.associative_scan(comb, (a, b), axis=1)
+        h = B_cum  # h_t assuming h_{-1} = 0
+        if ops.plan.seq_sharded:
+            axes = (ctx.axis_depth, ctx.axis_row)
+            h_in = cc.distributed_linear_scan_carry(
+                A_cum[:, -1, :], B_cum[:, -1, :], axes)      # [B,W]
+            h = h + A_cum * h_in[:, None, :]
+        elif h0 is not None:
+            h = h + A_cum * h0[:, None, :].astype(jnp.float32)
+        return h.astype(xb.dtype), h[:, -1, :]
+
+    def _rec_block(self, p, x, ops, h0=None, conv_halo=None, want_state=False):
+        cfg = self.cfg
+        h = self._norm(ops, x, p["ln"])
+        y = jax.nn.gelu(ops.linear(h, p["w_y"]))
+        xb = ops.linear(h, p["w_xb"])
+        xb_raw = xb
+        K = p["conv_w"].shape[0]
+        if conv_halo is None and ops.plan.seq_sharded:
+            conv_halo = cc.halo_exchange_left(
+                xb, (self.ctx.axis_depth, self.ctx.axis_row), K - 1, 1)
+        if conv_halo is None:
+            conv_halo = jnp.zeros((xb.shape[0], K - 1, xb.shape[-1]), xb.dtype)
+        xp = jnp.concatenate([conv_halo, xb], axis=1)
+        xb = sum(xp[:, K - 1 - j: xp.shape[1] - j, :] * p["conv_w"][K - 1 - j]
+                 for j in range(K))
+        lru, h_last = self._rglru(p, xb, ops, h0)
+        out = ops.linear(lru * y, p["w_o"])
+        x = x + out
+        h2 = self._norm(ops, x, p["ln2"])
+        x = x + self._mlp(p, h2, ops)
+        if want_state:
+            tail = xb_raw[:, -(K - 1):, :]
+            if ops.plan.seq_sharded:
+                seq_axes = (self.ctx.axis_depth, self.ctx.axis_row)
+                h_last = cc.last_shard_value(h_last, seq_axes)
+                tail = cc.last_shard_value(tail, seq_axes)
+            return x, (h_last, tail)
+        return x
+
+    # -------------------------------------------------------------- train
+    def loss(self, params, batch, ops):
+        cfg = self.cfg
+        x = ops.embed(batch["tokens"], params["embed"]).astype(self.cdt)
+        T_loc = x.shape[1]
+        n_seq = (self.ctx.depth * self.ctx.rows if ops.plan.seq_sharded else 1)
+        full_kv_pos = jnp.arange(T_loc * n_seq)
+        cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt)
+                                      if a.dtype == self.pdt else a, t)
+
+        def super_body(xx, sp):
+            def rec_body(c, rp):
+                return self._rec_block(cast(rp), c, ops), None
+            xx, _ = lax.scan(rec_body, xx, sp["rec"])
+            xx = DenseLM._block_train(self, cast(sp["attn"]), xx, ops,
+                                      full_kv_pos)
+            return xx, None
+
+        x, _ = lax.scan(maybe_remat(super_body, self.run), x, params["supers"])
+        if self.n_rest:
+            def rec_body(c, rp):
+                return self._rec_block(cast(rp), c, ops), None
+            x, _ = lax.scan(rec_body, x, params["rest"])
+        x = self._norm(ops, x, params["ln_f"])
+        loss_sum, cnt = ops.ce_loss(
+            x, params["head"].astype(self.cdt), batch["labels"],
+            vocab_real=cfg.vocab_size, loss_chunk=self.run.loss_chunk,
+            label_mask=batch.get("mask"))
+        loss_sum = lax.psum(loss_sum, self.ctx.axis_data)
+        cnt = lax.psum(cnt, self.ctx.axis_data)
+        return loss_sum / jnp.maximum(cnt, 1.0)
+
+    # ------------------------------------------------------------ serving
+    def cache_abstract(self, batch_global: int, seq_len: int, plan):
+        from jax import ShapeDtypeStruct as Sds
+        from jax.sharding import PartitionSpec as P
+        cfg = self.cfg
+        W = self.lru_w
+        n_rec = self.n_super * 2 + self.n_rest
+        n_attn = self.n_super
+        win = min(cfg.local_window, seq_len)
+        tok = (("data", "depth", "row") if plan.kind == "decode"
+               else "data" if plan.kind == "decode_dp" else None)
+        sds = {
+            "lru": Sds((n_rec, batch_global, W), jnp.float32),
+            "conv": Sds((n_rec, batch_global, 3, W), self.cdt),
+            "k": Sds((n_attn, batch_global, win, cfg.num_kv_heads, self.D),
+                     self.cdt),
+            "v": Sds((n_attn, batch_global, win, cfg.num_kv_heads, self.D),
+                     self.cdt),
+        }
+        kv_sp = P(None, tok, None, "col" if self.kv_shard else None, None)
+        specs = {"lru": P(None, tok, "col"), "conv": P(None, tok, None, "col"),
+                 "k": kv_sp, "v": kv_sp}
+        return sds, specs
+
+    def decode(self, params, cache, ids, pos, ops):
+        """One token; local-attention caches are ring buffers of size window."""
+        cfg = self.cfg
+        x = ops.embed(ids, params["embed"]).astype(self.cdt)
+        cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt)
+                                      if a.dtype == self.pdt else a, t)
+        win = cache["k"].shape[2]
+        slot = pos % win
+
+        def rec_decode(xx, rp, lru_st, conv_st):
+            rp = cast(rp)
+            h = self._norm(ops, xx, rp["ln"])
+            y = jax.nn.gelu(ops.linear(h, rp["w_y"]))[:, 0]
+            xb = ops.linear(h, rp["w_xb"])[:, 0]             # [B,W/q]
+            xp = jnp.concatenate([conv_st, xb[:, None, :]], axis=1)  # [B,4,W]
+            xc = jnp.einsum("bkc,kc->bc", xp, rp["conv_w"])
+            xf = xc.astype(jnp.float32)
+            r = jax.nn.sigmoid(xf * rp["gate_a_w"].astype(jnp.float32)
+                               + rp["gate_a_b"].astype(jnp.float32))
+            i = jax.nn.sigmoid(xf * rp["gate_x_w"].astype(jnp.float32)
+                               + rp["gate_x_b"].astype(jnp.float32))
+            log_lam = jax.nn.log_sigmoid(rp["lam"].astype(jnp.float32))
+            log_a = C_RGLRU * r * log_lam
+            a = jnp.exp(log_a)
+            bterm = jnp.sqrt(jnp.maximum(1 - jnp.exp(2 * log_a), 1e-12)) * (i * xf)
+            hnew = a * lru_st + bterm
+            out = ops.linear((hnew.astype(xx.dtype) * y)[:, None, :], rp["w_o"])
+            xx = xx + out
+            h2 = self._norm(ops, xx, rp["ln2"])
+            xx = xx + self._mlp(rp, h2, ops)
+            return xx, hnew, xp[:, 1:, :].astype(conv_st.dtype)
+
+        def attn_decode(xx, ap, kc, vc):
+            ap = cast(ap)
+            h = self._norm(ops, xx, ap["ln1"])
+            positions = jnp.full((1,), pos, jnp.int32)
+            q, k, v = self._qkv(ap, h, ops, positions)
+            kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, 1)
+            vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, 1)
+            # ring buffer: positions of slots
+            base = jnp.arange(win)
+            slot_pos = jnp.where(base <= slot, pos - slot + base,
+                                 pos - slot + base - win)
+            kv_map = None if self.kv_shard else self._kv_map(ops)
+            qh = q[:, 0]
+            if kv_map is not None:
+                kk = jnp.take(kc, kv_map, axis=2)
+                vv = jnp.take(vc, kv_map, axis=2)
+                s = jnp.einsum("bhd,bshd->bhs", qh, kk,
+                               preferred_element_type=jnp.float32)
+            else:
+                g = qh.shape[1] // kc.shape[2]
+                qg = qh.reshape(qh.shape[0], kc.shape[2], g, -1)
+                s = jnp.einsum("bhgd,bshd->bhgs", qg, kc,
+                               preferred_element_type=jnp.float32)
+                s = s.reshape(qh.shape[0], qh.shape[1], win)
+                vv = None
+            s = s / jnp.sqrt(self.D).astype(jnp.float32)
+            valid = (slot_pos[None, None, :] >= 0) & \
+                    (slot_pos[None, None, :] <= pos)
+            s = jnp.where(valid, s, -jnp.inf)
+            pw = jax.nn.softmax(s, axis=-1)
+            if kv_map is not None:
+                o = jnp.einsum("bhs,bshd->bhd", pw.astype(vv.dtype), vv)
+            else:
+                g = qh.shape[1] // kc.shape[2]
+                pg = pw.reshape(pw.shape[0], kc.shape[2], g, win)
+                o = jnp.einsum("bhgs,bshd->bhgd", pg.astype(vc.dtype), vc)
+                o = o.reshape(qh.shape[0], qh.shape[1], -1)
+            xx = xx + self._attn_out(ap, o[:, None], ops, self._head_mask(ops))
+            h2 = self._norm(ops, xx, ap["ln2"])
+            xx = xx + self._mlp(ap, h2, ops)
+            return xx, kc, vc
+
+        lru_s = cache["lru"].reshape((self.n_super, 2) + cache["lru"].shape[1:]) \
+            if self.n_rest == 0 else None
+        # generic: walk supers via scan with per-super state slices
+        n_s = self.n_super
+        lru_super = cache["lru"][: n_s * 2].reshape((n_s, 2) + cache["lru"].shape[1:])
+        conv_super = cache["conv"][: n_s * 2].reshape((n_s, 2) + cache["conv"].shape[1:])
+
+        def super_body(xx, xs):
+            sp, lru2, conv2, kc, vc = xs
+
+            def rbody(c, ys):
+                rp, l1, c1 = ys
+                y, nl, ncv = rec_decode(c, rp, l1, c1)
+                return y, (nl, ncv)
+
+            xx, (nl2, nc2) = lax.scan(rbody, xx, (sp["rec"], lru2, conv2))
+            xx, nk, nv = attn_decode(xx, sp["attn"], kc, vc)
+            return xx, (nl2, nc2, nk, nv)
+
+        x, (nl, ncv, nk, nv) = lax.scan(
+            super_body, x, (params["supers"], lru_super, conv_super,
+                            cache["k"], cache["v"]))
+        new_lru = nl.reshape((-1,) + nl.shape[2:])
+        new_conv = ncv.reshape((-1,) + ncv.shape[2:])
+        if self.n_rest:
+            def rbody(c, ys):
+                rp, l1, c1 = ys
+                y, nl1, nc1 = rec_decode(c, rp, l1, c1)
+                return y, (nl1, nc1)
+            x, (rl, rc) = lax.scan(rbody, x,
+                                   (params["rest"],
+                                    cache["lru"][n_s * 2:],
+                                    cache["conv"][n_s * 2:]))
+            new_lru = jnp.concatenate([new_lru, rl], 0)
+            new_conv = jnp.concatenate([new_conv, rc], 0)
+        x = self._norm(ops, x, params["ln_f"])
+        nids = ops.head_sample(x, params["head"].astype(self.cdt),
+                               vocab_real=cfg.vocab_size)
+        return nids, {"lru": new_lru, "conv": new_conv, "k": nk, "v": nv}
+
+    def prefill_cache_specs(self, ops):
+        from jax.sharding import PartitionSpec as P
+        kv_sp = P(None, "data", ("depth", "row"),
+                  "col" if self.kv_shard else None, None)
+        return {"lru": P(None, "data", "col"),
+                "conv": P(None, "data", None, "col"),
+                "k": kv_sp, "v": kv_sp}
+
+    def prefill(self, params, batch, ops):
+        cfg = self.cfg
+        x = ops.embed(batch["tokens"], params["embed"]).astype(self.cdt)
+        T_loc = x.shape[1]
+        n_seq = (self.ctx.depth * self.ctx.rows if ops.plan.seq_sharded else 1)
+        full_kv_pos = jnp.arange(T_loc * n_seq)
+        cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt)
+                                      if a.dtype == self.pdt else a, t)
+
+        def super_body(xx, sp):
+            def rbody(c, rp):
+                y, st = self._rec_block(cast(rp), c, ops, want_state=True)
+                return y, st
+            xx, rec_states = lax.scan(rbody, xx, sp["rec"])
+            xx, kv = DenseLM._block_prefill(self, cast(sp["attn"]), xx, ops,
+                                            full_kv_pos)
+            return xx, (rec_states, kv)
+
+        x, (rec_states, kvs) = lax.scan(super_body, x, params["supers"])
+        rest_states = None
+        if self.n_rest:
+            def rbody(c, rp):
+                y, st = self._rec_block(cast(rp), c, ops, want_state=True)
+                return y, st
+            x, rest_states = lax.scan(rbody, x, params["rest"])
+        x = self._norm(ops, x, params["ln_f"])
+        x_last = ops_last_token(ops, x, self.ctx)
+        ids = ops.head_sample(x_last, params["head"].astype(self.cdt),
+                              vocab_real=cfg.vocab_size, tokens_sharded=False)
+        lru = rec_states[0].reshape((-1,) + rec_states[0].shape[2:])
+        conv = rec_states[1].reshape((-1,) + rec_states[1].shape[2:])
+        if rest_states is not None:
+            lru = jnp.concatenate([lru, rest_states[0]], 0)
+            conv = jnp.concatenate([conv, rest_states[1]], 0)
+        # attn kv is singly stacked [n_super, B, S, kv, D] already
+        return ids[:, None], {"lru": lru, "conv": conv,
+                              "k": kvs[0], "v": kvs[1]}

@@ -1,0 +1,52 @@
+"""Model registry: family -> class, arch id -> config module."""
+from __future__ import annotations
+
+import importlib
+
+from ..configs.base import ArchConfig, ModelConfig, RunConfig
+from ..core.api import ParallelContext
+
+ARCH_MODULES = {
+    "nemotron-4-340b": "nemotron_4_340b",
+    "smollm-360m": "smollm_360m",
+    "llama3-405b": "llama3_405b",
+    "yi-6b": "yi_6b",
+    "llama4-scout-17b-a16e": "llama4_scout",
+    "deepseek-v2-236b": "deepseek_v2",
+    "llama-3.2-vision-11b": "llama32_vision",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "mamba2-1.3b": "mamba2_13b",
+    "whisper-base": "whisper_base",
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{ARCH_MODULES[name]}")
+    return mod.CONFIG
+
+
+def get_reduced(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{ARCH_MODULES[name]}")
+    return mod.reduced()
+
+
+def build_model(cfg: ModelConfig, ctx: ParallelContext, run: RunConfig):
+    if cfg.family in ("dense",):
+        from .transformer import DenseLM
+        return DenseLM(cfg, ctx, run)
+    if cfg.family == "vlm":
+        from .vision import VisionLM
+        return VisionLM(cfg, ctx, run)
+    if cfg.family == "moe":
+        from .moe import MoELM
+        return MoELM(cfg, ctx, run)
+    if cfg.family == "hybrid":
+        from .recurrent import RecurrentLM
+        return RecurrentLM(cfg, ctx, run)
+    if cfg.family == "ssm":
+        from .ssm import MambaLM
+        return MambaLM(cfg, ctx, run)
+    if cfg.family == "audio":
+        from .whisper import WhisperModel
+        return WhisperModel(cfg, ctx, run)
+    raise ValueError(f"unknown family {cfg.family!r}")

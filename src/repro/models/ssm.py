@@ -1,0 +1,388 @@
+"""Mamba2 (SSD — state-space duality) LM on Tesseract.
+
+Applicability note (DESIGN.md §6): the SSD state recurrence is sequential —
+Tesseract parallelizes the *projection* matmuls (in/out/dt), while the
+temporal mixing runs as a chunked scan.  Heads (d_inner) shard over col;
+B/C (n_groups=1, shared across heads) stay replicated over col.
+
+Sequence sharding (prefill) passes inter-chunk states across devices with a
+distributed linear scan (core/collectives.distributed_linear_scan_carry).
+The intra-chunk part is matmul-dominated (MXU-friendly) and is the Pallas
+kernel target (kernels/ssd.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import round_up
+from ..core import collectives as cc
+from . import common as cm
+from .transformer import DenseLM, maybe_remat
+
+
+def segsum(log_a):
+    """[..., Q] -> [..., Q, Q] lower-triangular pairwise sums:
+    out[i,j] = sum_{j<k<=i} log_a[k] (=-inf above diagonal)."""
+    Q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, log_a, Bm, Cm, chunk: int, h0=None, use_pallas=False):
+    """SSD scan.  x: [B,T,H,P]; log_a: [B,T,H]; Bm/Cm: [B,T,N] (G=1).
+    h0: optional initial state [B,H,P,N].  Returns (y [B,T,H,P],
+    h_last [B,H,P,N], a_prod [B,H], h_contrib) for cross-device chaining.
+    """
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    while T % Q:
+        Q -= 1
+    nc = T // Q
+    xr = x.reshape(Bsz, nc, Q, H, P)
+    lar = log_a.reshape(Bsz, nc, Q, H)
+    Br = Bm.reshape(Bsz, nc, Q, N)
+    Cr = Cm.reshape(Bsz, nc, Q, N)
+
+    if use_pallas:
+        from ..kernels.ops import ssd_intra_op
+        Yd, S_c = ssd_intra_op(xr, lar, Br, Cr)
+    else:
+        # intra-chunk (quadratic within chunk, matmul-friendly)
+        L = jnp.exp(segsum(lar.transpose(0, 1, 3, 2)))       # [B,nc,H,Q,Q]
+        scores = jnp.einsum("bcin,bcjn->bcij", Cr, Br)       # [B,nc,Q,Q]
+        Yd = jnp.einsum("bcij,bchij,bcjhp->bcihp",
+                        scores, L, xr,
+                        preferred_element_type=jnp.float32)  # [B,nc,Q,H,P]
+        # chunk-end states S_c = sum_j decay_to_end[j] * x_j (x) B_j
+        cum = jnp.cumsum(lar, axis=2)                        # [B,nc,Q,H]
+        tail = cum[:, :, -1:, :] - cum                       # [B,nc,Q,H]
+        xw = xr * jnp.exp(tail)[..., None]
+        S_c = jnp.einsum("bcjhp,bcjn->bchpn", xw, Br,
+                         preferred_element_type=jnp.float32)  # [B,nc,H,P,N]
+        cum_t = cum
+
+    if not use_pallas:
+        cum = cum_t
+    else:
+        cum = jnp.cumsum(lar, axis=2)
+
+    A_c = jnp.exp(cum[:, :, -1, :])                          # [B,nc,H] chunk decay
+
+    # inter-chunk state scan: H_{c+1} = A_c * H_c + S_c
+    def step(h, inputs):
+        a_c, s_c = inputs                                    # [B,H], [B,H,P,N]
+        h_out = h
+        h_new = a_c[..., None, None] * h + s_c
+        return h_new, h_out                                  # emit state ENTERING c
+
+    h_init = (jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_init = cm.vma_like(h_init, x, log_a, Bm)
+    h_last, h_ins = lax.scan(step, h_init,
+                             (A_c.transpose(1, 0, 2),
+                              S_c.transpose(1, 0, 2, 3, 4)))
+    h_ins = h_ins.transpose(1, 0, 2, 3, 4)                   # [B,nc,H,P,N]
+
+    # inter-chunk contribution: y_i += C_i . (decay_in[i] * H_in)
+    decay_in = jnp.exp(cum)                                  # [B,nc,Q,H]
+    Yi = jnp.einsum("bcin,bchpn->bcihp", Cr,
+                    h_ins, preferred_element_type=jnp.float32)
+    Yi = Yi * decay_in.transpose(0, 1, 2, 3)[..., None]
+    y = (Yd + Yi).reshape(Bsz, T, H, P)
+
+    # whole-shard summaries for the cross-device chain
+    a_prod_shard = jnp.exp(jnp.sum(log_a, axis=1))           # [B,H]
+    return y.astype(x.dtype), h_last, a_prod_shard
+
+
+class MambaLM(DenseLM):
+    def __init__(self, cfg, ctx, run):
+        # bypass DenseLM head/kv setup that doesn't apply; reuse embed/head
+        super().__init__(cfg, ctx, run)
+        if ctx.mode == "megatron1d":
+            raise NotImplementedError("ssm arch runs in tesseract modes")
+        self.d_inner = cfg.ssm_expand * cfg.d_model
+        self.n_heads = self.d_inner // cfg.ssm_head_dim
+        if self.n_heads % ctx.cols:
+            raise ValueError("ssm heads must divide cols")
+        self.N = cfg.ssm_state
+
+    # ------------------------------------------------------------- params
+    def _block_init(self, key):
+        cfg = self.cfg
+        h, di, N, H = cfg.d_model, self.d_inner, self.N, self.n_heads
+        ks = jax.random.split(key, 8)
+        p = {
+            "ln": jnp.zeros((h,), self.pdt),
+            "w_z": cm.winit(ks[0], (h, di), dtype=self.pdt),
+            "w_x": cm.winit(ks[1], (h, di), dtype=self.pdt),
+            "w_B": cm.winit(ks[2], (h, N), dtype=self.pdt),
+            "w_C": cm.winit(ks[3], (h, N), dtype=self.pdt),
+            "w_dt": cm.winit(ks[4], (h, H), dtype=self.pdt),
+            "dt_bias": jnp.zeros((H,), self.pdt),
+            "A_log": jnp.zeros((H,), self.pdt),      # A = -exp(A_log)
+            "Dskip": jnp.ones((H,), self.pdt),
+            "conv_x": cm.winit(ks[5], (cfg.ssm_conv, di), 0.2, self.pdt),
+            "conv_B": cm.winit(ks[6], (cfg.ssm_conv, N), 0.2, self.pdt),
+            "conv_C": cm.winit(ks[7], (cfg.ssm_conv, N), 0.2, self.pdt),
+            "ln_y": jnp.zeros((di,), self.pdt),
+            "w_out": cm.winit(jax.random.fold_in(key, 9), (di, h),
+                              dtype=self.pdt),
+        }
+        return p
+
+    def init(self, key):
+        cfg = self.cfg
+        k_e, k_h, k_b = jax.random.split(key, 3)
+        blocks = jax.vmap(self._block_init)(jax.random.split(k_b, cfg.num_layers))
+        return {
+            "embed": cm.winit_padded(k_e, (cfg.vocab_size, cfg.d_model),
+                                     (self.v_pad, cfg.d_model), dtype=self.pdt),
+            "head": cm.winit_padded(k_h, (cfg.vocab_size, cfg.d_model),
+                                    (self.v_pad, cfg.d_model), dtype=self.pdt),
+            "ln_f": jnp.zeros((cfg.d_model,), self.pdt),
+            "blocks": blocks,
+        }
+
+    def _block_specs(self, ops):
+        return {
+            "ln": ops.spec_norm(True),
+            "w_z": ops.spec_w2d(True), "w_x": ops.spec_w2d(True),
+            "w_B": ops.spec_w_to_replicated(True),
+            "w_C": ops.spec_w_to_replicated(True),
+            "w_dt": ops.spec_w2d(True),
+            "dt_bias": ops.spec_vec(True), "A_log": ops.spec_vec(True),
+            "Dskip": ops.spec_vec(True),
+            # [L, K, C]: channel dim over col (or replicated for B/C)
+            "conv_x": __import__("jax").sharding.PartitionSpec(None, None, "col"),
+            "conv_B": __import__("jax").sharding.PartitionSpec(None, None, None),
+            "conv_C": __import__("jax").sharding.PartitionSpec(None, None, None),
+            "ln_y": ops.spec_norm(True),
+            "w_out": ops.spec_w_down(True),
+        }
+
+    def tess_weight_names(self):
+        return {"w_z", "w_x", "w_dt", "w_out"}
+
+    # ------------------------------------------------------------- mixer
+    def _causal_conv(self, x, w, ops, halo=None):
+        """Depthwise causal conv along seq. x: [B,T,C]; w: [K,C].
+        halo: [B,K-1,C] tokens from the previous shard (seq-sharded)."""
+        K = w.shape[0]
+        if halo is None:
+            halo = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+        xp = jnp.concatenate([halo, x], axis=1)
+        y = sum(xp[:, K - 1 - j: xp.shape[1] - j, :] * w[K - 1 - j]
+                for j in range(K))
+        return jax.nn.silu(y)
+
+    def _conv_halo(self, x, ops):
+        if not ops.plan.seq_sharded:
+            return None
+        K = self.cfg.ssm_conv
+        return cc.halo_exchange_left(x, (self.ctx.axis_depth,
+                                         self.ctx.axis_row), K - 1, 1)
+
+    def _mixer(self, p, x, ops, state=None, conv_state=None, pos=None):
+        """x: [B,T,h/q] canonical.  Train/prefill path (T>=1)."""
+        cfg, ctx = self.cfg, self.ctx
+        B, T = x.shape[:2]
+        HL = self.n_heads // ctx.cols
+        P_ = cfg.ssm_head_dim
+        z = ops.linear(x, p["w_z"])                          # [B,T,di/q]
+        xin = ops.linear(x, p["w_x"])
+        Bm = ops.linear_to_replicated(x, p["w_B"])           # [B,T,N]
+        Cm = ops.linear_to_replicated(x, p["w_C"])
+        dt_raw = ops.linear(x, p["w_dt"])                    # [B,T,H/q]
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        xin = self._causal_conv(xin, p["conv_x"], ops, self._conv_halo(xin, ops))
+        Bm = self._causal_conv(Bm, p["conv_B"], ops, self._conv_halo(Bm, ops))
+        Cm = self._causal_conv(Cm, p["conv_C"], ops, self._conv_halo(Cm, ops))
+        xh = xin.reshape(B, T, HL, P_)
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))         # [H/q]
+        log_a = dt * A                                       # [B,T,H/q]
+        x_dt = xh.astype(jnp.float32) * dt[..., None]
+        y, h_last, a_prod = ssd_chunked(x_dt, log_a, Bm.astype(jnp.float32),
+                                        Cm.astype(jnp.float32), cfg.ssm_chunk,
+                                        use_pallas=self.run.use_pallas)
+        if ops.plan.seq_sharded:
+            # chain states across sequence shards
+            axes = (ctx.axis_depth, ctx.axis_row)
+            b_red = h_last                                   # [B,H,P,N]
+            a_pr = jnp.broadcast_to(a_prod[..., None, None], b_red.shape)
+            h_in = cc.distributed_linear_scan_carry(a_pr, b_red, axes)
+            # recompute y correction: y += C_t . decay(0..t) * h_in
+            cum = jnp.cumsum(log_a, axis=1)
+            corr = jnp.einsum("btn,bhpn->bthp", Cm.astype(jnp.float32), h_in)
+            y = (y.astype(jnp.float32)
+                 + corr * jnp.exp(cum)[..., None]).astype(y.dtype)
+            h_last = (jnp.exp(jnp.sum(log_a, 1))[..., None, None] * h_in
+                      + h_last)
+        y = y + xh * p["Dskip"].astype(x.dtype)[None, None, :, None]
+        y = y.reshape(B, T, HL * P_)
+        y = ops.rmsnorm((y * jax.nn.silu(z)).astype(x.dtype), p["ln_y"],
+                        cfg.norm_eps)
+        return ops.linear(y, p["w_out"]), h_last
+
+    def _block(self, p, x, ops):
+        h = self._norm(ops, x, p["ln"])
+        y, _ = self._mixer(p, h, ops)
+        return x + y
+
+    # -------------------------------------------------------------- steps
+    def loss(self, params, batch, ops):
+        x = ops.embed(batch["tokens"], params["embed"]).astype(self.cdt)
+        cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt)
+                                      if a.dtype == self.pdt else a, t)
+        body = maybe_remat(lambda xx, bp: (self._block(cast(bp), xx, ops), None),
+                           self.run)
+        x, _ = lax.scan(body, x, params["blocks"])
+        x = self._norm(ops, x, params["ln_f"])
+        loss_sum, cnt = ops.ce_loss(
+            x, params["head"].astype(self.cdt), batch["labels"],
+            vocab_real=self.cfg.vocab_size, loss_chunk=self.run.loss_chunk,
+            label_mask=batch.get("mask"))
+        loss_sum = lax.psum(loss_sum, self.ctx.axis_data)
+        cnt = lax.psum(cnt, self.ctx.axis_data)
+        return loss_sum / jnp.maximum(cnt, 1.0)
+
+    # ------------------------------------------------------------ serving
+    def cache_abstract(self, batch_global: int, seq_len: int, plan):
+        from jax import ShapeDtypeStruct as Sds
+        from jax.sharding import PartitionSpec as P
+        cfg = self.cfg
+        L = cfg.num_layers
+        H, P_, N, K = self.n_heads, cfg.ssm_head_dim, self.N, cfg.ssm_conv
+        tok = (("data", "depth", "row") if plan.kind == "decode"
+               else "data" if plan.kind == "decode_dp" else None)
+        sds = {
+            "state": Sds((L, batch_global, H, P_, N), jnp.float32),
+            "conv_x": Sds((L, batch_global, K - 1, self.d_inner), self.cdt),
+            "conv_B": Sds((L, batch_global, K - 1, N), self.cdt),
+            "conv_C": Sds((L, batch_global, K - 1, N), self.cdt),
+        }
+        specs = {
+            "state": P(None, tok, "col", None, None),
+            "conv_x": P(None, tok, None, "col"),
+            "conv_B": P(None, tok, None, None),
+            "conv_C": P(None, tok, None, None),
+        }
+        return sds, specs
+
+    def prefill_cache_specs(self, ops):
+        from jax.sharding import PartitionSpec as P
+        return {
+            "state": P(None, "data", "col", None, None),
+            "conv_x": P(None, "data", None, "col"),
+            "conv_B": P(None, "data", None, None),
+            "conv_C": P(None, "data", None, None),
+        }
+
+    def prefill(self, params, batch, ops):
+        from .transformer import ops_last_token
+        cfg = self.cfg
+        x = ops.embed(batch["tokens"], params["embed"]).astype(self.cdt)
+        cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt)
+                                      if a.dtype == self.pdt else a, t)
+        K = cfg.ssm_conv
+
+        seq_axes = (self.ctx.axis_depth, self.ctx.axis_row)
+
+        def glob_last(t):
+            # seq-sharded: only the last shard holds the true final state/tail
+            if ops.plan.seq_sharded:
+                return cc.last_shard_value(t, seq_axes)
+            return t
+
+        def body(xx, bp):
+            bp = cast(bp)
+            h = self._norm(ops, xx, bp["ln"])
+            # recompute conv inputs to expose tails (cheap linears)
+            xin = ops.linear(h, bp["w_x"])
+            Bm = ops.linear_to_replicated(h, bp["w_B"])
+            Cm = ops.linear_to_replicated(h, bp["w_C"])
+            y, h_last = self._mixer(bp, h, ops)
+            xx = xx + y
+            tails = (glob_last(xin[:, -(K - 1):, :]),
+                     glob_last(Bm[:, -(K - 1):, :]),
+                     glob_last(Cm[:, -(K - 1):, :]))
+            return xx, (glob_last(h_last), tails)
+
+        x, (states, tails) = lax.scan(body, x, params["blocks"])
+        x = self._norm(ops, x, params["ln_f"])
+        x_last = ops_last_token(ops, x, self.ctx)
+        ids = ops.head_sample(x_last, params["head"].astype(self.cdt),
+                              vocab_real=cfg.vocab_size, tokens_sharded=False)
+        # [L,B,H,P,N] states; conv tails [L,B,K-1,*]
+        cache = {"state": states, "conv_x": tails[0].astype(self.cdt),
+                 "conv_B": tails[1].astype(self.cdt),
+                 "conv_C": tails[2].astype(self.cdt)}
+        return ids[:, None], cache
+
+    def _mixer_decode(self, p, x, cache_l, ops):
+        """Single-token state update. x: [B,1,h/q]."""
+        cfg, ctx = self.cfg, self.ctx
+        B = x.shape[0]
+        HL = self.n_heads // ctx.cols
+        P_ = cfg.ssm_head_dim
+        z = ops.linear(x, p["w_z"])[:, 0]
+        xin = ops.linear(x, p["w_x"])[:, 0]                  # [B,di/q]
+        Bm = ops.linear_to_replicated(x, p["w_B"])[:, 0]
+        Cm = ops.linear_to_replicated(x, p["w_C"])[:, 0]
+        dt_raw = ops.linear(x, p["w_dt"])[:, 0]
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+        def conv_step(cstate, new, w):
+            xp = jnp.concatenate([cstate, new[:, None, :]], axis=1)  # [B,K,C]
+            y = jnp.einsum("bkc,kc->bc", xp, w)
+            return jax.nn.silu(y), xp[:, 1:, :]
+
+        xin_c, ncx = conv_step(cache_l["conv_x"], xin, p["conv_x"])
+        Bc, ncB = conv_step(cache_l["conv_B"], Bm, p["conv_B"])
+        Cc, ncC = conv_step(cache_l["conv_C"], Cm, p["conv_C"])
+        xh = xin_c.reshape(B, HL, P_).astype(jnp.float32)
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        a = jnp.exp(dt * A)                                  # [B,HL]
+        hprev = cache_l["state"]
+        hnew = (a[..., None, None] * hprev
+                + jnp.einsum("bhp,bn->bhpn", xh * dt[..., None],
+                             Bc.astype(jnp.float32)))
+        y = jnp.einsum("bn,bhpn->bhp", Cc.astype(jnp.float32), hnew)
+        y = y + xh * p["Dskip"].astype(jnp.float32)[:, None]
+        y = y.reshape(B, HL * P_).astype(x.dtype)
+        y = ops.rmsnorm((y * jax.nn.silu(z)), p["ln_y"], cfg.norm_eps)
+        out = ops.linear(y[:, None, :], p["w_out"])
+        new_cache = {"state": hnew, "conv_x": ncx.astype(cache_l["conv_x"].dtype),
+                     "conv_B": ncB.astype(cache_l["conv_B"].dtype),
+                     "conv_C": ncC.astype(cache_l["conv_C"].dtype)}
+        return out, new_cache
+
+    def decode(self, params, cache, ids, pos, ops):
+        cfg = self.cfg
+        x = ops.embed(ids, params["embed"]).astype(self.cdt)
+        cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt)
+                                      if a.dtype == self.pdt else a, t)
+
+        def body(xx, xs):
+            bp, st, cx, cb, ccc = xs
+            bp = cast(bp)
+            h = self._norm(ops, xx, bp["ln"])
+            y, nc = self._mixer_decode(bp, h,
+                                       {"state": st, "conv_x": cx,
+                                        "conv_B": cb, "conv_C": ccc}, ops)
+            return xx + y, (nc["state"], nc["conv_x"], nc["conv_B"],
+                            nc["conv_C"])
+
+        x, (ns, ncx, ncb, ncc) = lax.scan(
+            body, x, (params["blocks"], cache["state"], cache["conv_x"],
+                      cache["conv_B"], cache["conv_C"]))
+        x = self._norm(ops, x, params["ln_f"])
+        nids = ops.head_sample(x, params["head"].astype(self.cdt),
+                               vocab_real=cfg.vocab_size)
+        return nids, {"state": ns, "conv_x": ncx, "conv_B": ncb,
+                      "conv_C": ncc}

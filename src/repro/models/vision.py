@@ -1,0 +1,303 @@
+"""llama-3.2-vision: dense GQA decoder with interleaved cross-attention
+blocks that attend to (stubbed) vision patch embeddings.
+
+Frontend stub per the harness: ``input_specs()`` supplies precomputed patch
+embeddings [B, vision_tokens, vision_dim]; the vision encoder itself is out
+of scope.  Layer layout: scan over superblocks of (cross_attn_every-1) self
+blocks + 1 gated cross block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import collectives as cc
+from . import common as cm
+from .transformer import DenseLM, ops_last_token
+
+
+class VisionLM(DenseLM):
+    def __init__(self, cfg, ctx, run):
+        super().__init__(cfg, ctx, run)
+        if cfg.num_layers % cfg.cross_attn_every:
+            raise ValueError("num_layers must divide into superblocks")
+        self.n_super = cfg.num_layers // cfg.cross_attn_every
+        self.n_self = cfg.cross_attn_every - 1
+
+    # ------------------------------------------------------------- params
+    def _cross_init(self, key):
+        cfg, D = self.cfg, self.D
+        h, vd = cfg.d_model, cfg.vision_dim
+        ks = jax.random.split(key, 6)
+        return {
+            "ln": jnp.zeros((h,), self.pdt),
+            "wq": cm.winit_padded(ks[0], (h, cfg.num_heads * D),
+                                  (h, self.Hp * D), dtype=self.pdt),
+            "wk": cm.winit(ks[1], (vd, cfg.num_kv_heads * D), dtype=self.pdt),
+            "wv": cm.winit(ks[2], (vd, cfg.num_kv_heads * D), dtype=self.pdt),
+            "wo": cm.winit_padded(ks[3], (cfg.num_heads * D, h),
+                                  (self.Hp * D, h), dtype=self.pdt),
+            "ln2": jnp.zeros((h,), self.pdt),
+            "w_gate": cm.winit(ks[4], (h, cfg.d_ff), dtype=self.pdt),
+            "w_up": cm.winit(ks[5], (h, cfg.d_ff), dtype=self.pdt),
+            "w_down": cm.winit(jax.random.fold_in(key, 7), (cfg.d_ff, h),
+                               dtype=self.pdt),
+            "attn_gate": jnp.zeros((), self.pdt),
+            "mlp_gate": jnp.zeros((), self.pdt),
+        }
+
+    def _super_init(self, key):
+        ks = jax.random.split(key, self.n_self + 1)
+        selfs = jax.vmap(super()._block_init)(ks[: self.n_self])
+        return {"selfs": selfs, "cross": self._cross_init(ks[-1])}
+
+    def init(self, key):
+        cfg = self.cfg
+        k_e, k_h, k_b = jax.random.split(key, 3)
+        supers = jax.vmap(self._super_init)(jax.random.split(k_b, self.n_super))
+        return {
+            "embed": cm.winit_padded(k_e, (cfg.vocab_size, cfg.d_model),
+                                     (self.v_pad, cfg.d_model), dtype=self.pdt),
+            "head": cm.winit_padded(k_h, (cfg.vocab_size, cfg.d_model),
+                                    (self.v_pad, cfg.d_model), dtype=self.pdt),
+            "ln_f": jnp.zeros((cfg.d_model,), self.pdt),
+            "supers": supers,
+        }
+
+    def _cross_specs(self, ops):
+        kv_spec = (ops.spec_w2d(True) if self.kv_shard
+                   else ops.spec_w_to_replicated(True))
+        return {
+            "ln": ops.spec_norm(True), "wq": ops.spec_w2d(True),
+            "wk": kv_spec, "wv": kv_spec, "wo": ops.spec_w_down(True),
+            "ln2": ops.spec_norm(True), "w_gate": ops.spec_w2d(True),
+            "w_up": ops.spec_w2d(True), "w_down": ops.spec_w_down(True),
+            "attn_gate": jax.sharding.PartitionSpec(None),
+            "mlp_gate": jax.sharding.PartitionSpec(None),
+        }
+
+    def specs(self, ops):
+        from jax.sharding import PartitionSpec as P
+        stackone = lambda s: P(*((None,) + tuple(s)))
+        return {
+            "embed": ops.spec_embed(), "head": ops.spec_head(),
+            "ln_f": ops.spec_norm(False),
+            "supers": {
+                # selfs leaves are [n_super, n_self, ...] -> one extra None
+                # over the (already stacked) block specs
+                "selfs": jax.tree.map(
+                    stackone, DenseLM._block_specs(self, ops),
+                    is_leaf=lambda x: isinstance(x, P)),
+                # cross leaves are [n_super, ...] -> stacked specs directly
+                "cross": self._cross_specs(ops),
+            },
+        }
+
+    def tess_weight_names(self):
+        return super().tess_weight_names()
+
+    # ------------------------------------------------------------ vision
+    def batch_extras(self, shape):
+        from jax.sharding import PartitionSpec as P
+        cfg = self.cfg
+        B = shape.global_batch
+        sd = jax.ShapeDtypeStruct((B, cfg.vision_tokens, cfg.vision_dim),
+                                  jnp.float32)
+        sp = (P(("data", "depth"), None, None) if shape.kind == "train"
+              else P("data", None, None))
+        return {"vision": (sd, sp)}
+
+    def shard_vision(self, ops, vision):
+        """[B', Tv, vd] host layout -> [B_loc, Tv, vd/q] canonical."""
+        v = ops.shard_tokens(vision) if ops.plan.kind == "train" else vision
+        # slice feature dim by col (vision_dim enters tesseract matmuls)
+        q = self.ctx.cols
+        n = v.shape[-1] // q
+        i = lax.axis_index(self.ctx.axis_col)
+        return lax.dynamic_slice_in_dim(v, i * n, n, axis=v.ndim - 1)
+
+    def _cross_kv(self, p, vis, ops):
+        cfg, D = self.cfg, self.D
+        B, Tv = vis.shape[:2]
+        if self.kv_shard:
+            k = ops.linear_up(vis, p["wk"])
+            v = ops.linear_up(vis, p["wv"])
+        else:
+            k = ops.linear_to_replicated(vis, p["wk"])
+            v = ops.linear_to_replicated(vis, p["wv"])
+        kvl = self._kv_heads_loc(ops)
+        return k.reshape(B, Tv, kvl, D), v.reshape(B, Tv, kvl, D)
+
+    def _cross_block(self, p, x, vis, ops):
+        cfg, D = self.cfg, self.D
+        h = self._norm(ops, x, p["ln"])
+        hg = ops.seq_gather_in(h)
+        B, T = hg.shape[:2]
+        q = ops.linear_up(hg, p["wq"]).reshape(B, T, self._heads_loc(ops), D)
+        k, v = self._cross_kv(p, vis, ops)
+        if not self.kv_shard:
+            kv_map = self._kv_map(ops)
+            k = jnp.take(k, kv_map, axis=2)
+            v = jnp.take(v, kv_map, axis=2)
+        Tv = k.shape[1]
+        out = cm.blockwise_attention(
+            q, k, v, q_pos=jnp.zeros((T,), jnp.int32),
+            kv_pos=jnp.zeros((Tv,), jnp.int32), causal=False,
+            q_chunk=self.run.q_chunk, kv_chunk=self.run.kv_chunk)
+        gated = jnp.tanh(p["attn_gate"]) * self._attn_out(
+            p, out, ops, self._head_mask(ops))
+        x = x + gated
+        h2 = self._norm(ops, x, p["ln2"])
+        x = x + jnp.tanh(p["mlp_gate"]) * self._mlp(p, h2, ops)
+        return x
+
+    def _run_supers(self, params, x, vis, ops, full_kv_pos, self_fn):
+        from .transformer import maybe_remat
+        cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt), t)
+
+        def super_body(carry, sp):
+            xx, extras = carry
+
+            def self_body(c, bp):
+                y, e = self_fn(cast(bp), c[0], ops, full_kv_pos)
+                return (y, None), e
+
+            (xx, _), kvs = lax.scan(self_body, (xx, None), sp["selfs"])
+            xx = self._cross_block(cast(sp["cross"]), xx, vis, ops)
+            return (xx, extras), kvs
+
+        body = maybe_remat(super_body, self.run)
+        (x, _), kvs = lax.scan(body, (x, None), params["supers"])
+        return x, kvs
+
+    # -------------------------------------------------------------- steps
+    def loss(self, params, batch, ops):
+        vis = self.shard_vision(ops, batch["vision"]).astype(self.cdt)
+        x = ops.embed(batch["tokens"], params["embed"]).astype(self.cdt)
+        T_loc = x.shape[1]
+        n_seq = (self.ctx.depth * self.ctx.rows if ops.plan.seq_sharded else 1)
+        full_kv_pos = jnp.arange(T_loc * n_seq)
+
+        def self_fn(bp, xx, o, pos):
+            return DenseLM._block_train(self, bp, xx, o, pos), None
+
+        x, _ = self._run_supers(params, x, vis, ops, full_kv_pos, self_fn)
+        x = self._norm(ops, x, params["ln_f"])
+        loss_sum, cnt = ops.ce_loss(
+            x, params["head"].astype(self.cdt), batch["labels"],
+            vocab_real=self.cfg.vocab_size, loss_chunk=self.run.loss_chunk,
+            label_mask=batch.get("mask"))
+        loss_sum = lax.psum(loss_sum, self.ctx.axis_data)
+        cnt = lax.psum(cnt, self.ctx.axis_data)
+        return loss_sum / jnp.maximum(cnt, 1.0)
+
+    def cache_abstract(self, batch_global: int, seq_len: int, plan):
+        from jax import ShapeDtypeStruct as Sds
+        from jax.sharding import PartitionSpec as P
+        cfg = self.cfg
+        (sds, specs) = super().cache_abstract(batch_global, seq_len, plan)
+        # self-attn cache covers only the self blocks
+        L_self = self.n_super * self.n_self
+        for key in ("k", "v"):
+            s = sds[key]
+            sds[key] = Sds((L_self,) + s.shape[1:], s.dtype)
+        # cross KV cache (computed at prefill, reused each decode step)
+        tok = (("data", "depth", "row") if plan.kind == "decode"
+               else "data" if plan.kind == "decode_dp" else None)
+        cshape = (self.n_super, batch_global, cfg.vision_tokens,
+                  cfg.num_kv_heads, self.D)
+        csp = P(None, tok, None, "col" if self.kv_shard else None, None)
+        sds.update(ck=Sds(cshape, self.cdt), cv=Sds(cshape, self.cdt))
+        specs.update(ck=csp, cv=csp)
+        return sds, specs
+
+    def prefill_cache_specs(self, ops):
+        from jax.sharding import PartitionSpec as P
+        base = super().prefill_cache_specs(ops)
+        csp = P(None, "data", None, "col" if self.kv_shard else None, None)
+        base.update(ck=csp, cv=csp)
+        return base
+
+    def prefill(self, params, batch, ops):
+        # batch: {"tokens", "vision"}
+        tokens, vision = batch["tokens"], batch["vision"]
+        vis = self.shard_vision(ops, vision).astype(self.cdt)
+        x = ops.embed(tokens, params["embed"]).astype(self.cdt)
+        S_loc = x.shape[1]
+        n_seq = (self.ctx.depth * self.ctx.rows if ops.plan.seq_sharded else 1)
+        if self.ctx.mode == "megatron1d" and ops.plan.seq_sharded:
+            n_seq = self.ctx.cols
+        full_kv_pos = jnp.arange(S_loc * n_seq)
+        cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt), t)
+
+        def super_body(xx, sp):
+            def self_body(c, bp):
+                y, kv = DenseLM._block_prefill(self, cast(bp), c, ops,
+                                               full_kv_pos)
+                return y, kv
+            xx, kvs = lax.scan(self_body, xx, sp["selfs"])
+            cp = cast(sp["cross"])
+            ck, cv = self._cross_kv(cp, vis, ops)
+            xx = self._cross_block(cp, xx, vis, ops)
+            return xx, (kvs, (ck.astype(self.cdt), cv.astype(self.cdt)))
+
+        x, (kvs, cross_kv) = lax.scan(super_body, x, params["supers"])
+        x = self._norm(ops, x, params["ln_f"])
+        x_last = ops_last_token(ops, x, self.ctx)
+        ids = ops.head_sample(x_last, params["head"].astype(self.cdt),
+                              vocab_real=self.cfg.vocab_size,
+                              tokens_sharded=False)
+        k = kvs[0].reshape((-1,) + kvs[0].shape[2:])
+        v = kvs[1].reshape((-1,) + kvs[1].shape[2:])
+        return ids[:, None], {"k": k, "v": v, "ck": cross_kv[0],
+                              "cv": cross_kv[1]}
+
+    def _cross_decode(self, p, x, ck, cv, ops):
+        cfg, D = self.cfg, self.D
+        h = self._norm(ops, x, p["ln"])
+        B = h.shape[0]
+        q = ops.linear_up(h, p["wq"]).reshape(B, 1, self._heads_loc(ops), D)
+        kv_map = None if self.kv_shard else self._kv_map(ops)
+        out = cm.decode_attention(q[:, 0], ck, cv,
+                                  cur_pos=ck.shape[1] - 1, kv_map=kv_map)
+        out = out[:, None]
+        x = x + jnp.tanh(p["attn_gate"]) * self._attn_out(
+            p, out, ops, self._head_mask(ops))
+        h2 = self._norm(ops, x, p["ln2"])
+        x = x + jnp.tanh(p["mlp_gate"]) * self._mlp(p, h2, ops)
+        return x
+
+    def decode(self, params, cache, ids, pos, ops):
+        x = ops.embed(ids, params["embed"]).astype(self.cdt)
+        cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt), t)
+        kself = cache["k"].reshape((self.n_super, self.n_self)
+                                   + cache["k"].shape[1:])
+        vself = cache["v"].reshape((self.n_super, self.n_self)
+                                   + cache["v"].shape[1:])
+
+        def super_body(xx, xs):
+            sp, ck_s, cv_s, kc, vc = xs
+
+            def self_body(c, ys):
+                bp, k1, v1 = ys
+                y, cl = DenseLM._block_decode(self, cast(bp), c,
+                                              {"k": k1, "v": v1}, pos, ops)
+                return y, (cl["k"], cl["v"])
+
+            xx, (nk, nv) = lax.scan(self_body, xx, (sp["selfs"], kc, vc))
+            xx = self._cross_decode(cast(sp["cross"]), xx,
+                                    ck_s.astype(self.cdt),
+                                    cv_s.astype(self.cdt), ops)
+            return xx, (nk, nv)
+
+        x, (nk, nv) = lax.scan(super_body, x,
+                               (params["supers"], cache["ck"], cache["cv"],
+                                kself, vself))
+        x = self._norm(ops, x, params["ln_f"])
+        nids = ops.head_sample(x, params["head"].astype(self.cdt),
+                               vocab_real=self.cfg.vocab_size)
+        new_cache = dict(cache,
+                         k=nk.reshape((-1,) + nk.shape[2:]),
+                         v=nv.reshape((-1,) + nv.shape[2:]))
+        return nids, new_cache

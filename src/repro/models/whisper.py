@@ -1,0 +1,316 @@
+"""Whisper-base backbone (enc-dec) on Tesseract.
+
+Frontend stub per the harness: ``input_specs()`` supplies precomputed frame
+embeddings [B, enc_seq=1500, d_model] (the conv1d+GELU frontend is out of
+scope).  Positions are sinusoidal (parameter-free) for both stacks so the
+synthetic 32k-sequence shape cells don't need a 448-entry learned table —
+a documented deviation from the published checkpoint.
+
+Encoder: bidirectional self-attention, layernorm+bias, GELU MLP.
+Decoder: causal self-attention + cross-attention over encoder memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import collectives as cc
+from . import common as cm
+from .transformer import DenseLM, maybe_remat, ops_last_token
+
+
+def sinusoid_pos(positions, dim):
+    """Whisper-style sinusoidal embeddings. positions: [T] -> [T, dim]."""
+    half = dim // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = positions[:, None].astype(jnp.float32) * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class WhisperModel(DenseLM):
+    def __init__(self, cfg, ctx, run):
+        super().__init__(cfg, ctx, run)
+        if ctx.mode == "megatron1d":
+            raise NotImplementedError("audio arch runs in tesseract modes")
+
+    # ------------------------------------------------------------- params
+    def _cross_init(self, key):
+        cfg, D = self.cfg, self.D
+        h = cfg.d_model
+        ks = jax.random.split(key, 4)
+        return {
+            "ln": jnp.ones((h,), self.pdt), "lnb": jnp.zeros((h,), self.pdt),
+            "wq": cm.winit(ks[0], (h, self.Hp * D), dtype=self.pdt),
+            "bq": jnp.zeros((self.Hp * D,), self.pdt),
+            "wk": cm.winit(ks[1], (h, cfg.num_kv_heads * D), dtype=self.pdt),
+            "wv": cm.winit(ks[2], (h, cfg.num_kv_heads * D), dtype=self.pdt),
+            "bv": jnp.zeros((cfg.num_kv_heads * D,), self.pdt),
+            "wo": cm.winit(ks[3], (self.Hp * D, h), dtype=self.pdt),
+            "bo": jnp.zeros((h,), self.pdt),
+        }
+
+    def _dec_block_init(self, key):
+        k1, k2 = jax.random.split(key)
+        p = super()._block_init(k1)
+        p["cross"] = self._cross_init(k2)
+        return p
+
+    def init(self, key):
+        cfg = self.cfg
+        k_e, k_h, k_enc, k_dec = jax.random.split(key, 4)
+        enc = jax.vmap(super()._block_init)(
+            jax.random.split(k_enc, cfg.enc_layers))
+        dec = jax.vmap(self._dec_block_init)(
+            jax.random.split(k_dec, cfg.num_layers))
+        return {
+            "embed": cm.winit_padded(k_e, (cfg.vocab_size, cfg.d_model),
+                                     (self.v_pad, cfg.d_model), dtype=self.pdt),
+            "head": cm.winit_padded(k_h, (cfg.vocab_size, cfg.d_model),
+                                    (self.v_pad, cfg.d_model), dtype=self.pdt),
+            "enc_blocks": enc,
+            "dec_blocks": dec,
+            "ln_enc": jnp.ones((cfg.d_model,), self.pdt),
+            "ln_encb": jnp.zeros((cfg.d_model,), self.pdt),
+            "ln_f": jnp.ones((cfg.d_model,), self.pdt),
+            "ln_fb": jnp.zeros((cfg.d_model,), self.pdt),
+        }
+
+    def _cross_specs(self, ops):
+        kv_spec = (ops.spec_w2d(True) if self.kv_shard
+                   else ops.spec_w_to_replicated(True))
+        return {
+            "ln": ops.spec_norm(True), "lnb": ops.spec_norm(True),
+            "wq": ops.spec_w2d(True), "bq": ops.spec_bias_up(True),
+            "wk": kv_spec,
+            "wv": kv_spec,
+            "bv": (ops.spec_bias_up(True) if self.kv_shard
+                   else ops.spec_vec_replicated(True)),
+            "wo": ops.spec_w_down(True), "bo": ops.spec_bias_down(True),
+        }
+
+    def specs(self, ops):
+        dec = dict(DenseLM._block_specs(self, ops))
+        dec["cross"] = self._cross_specs(ops)
+        return {
+            "embed": ops.spec_embed(), "head": ops.spec_head(),
+            "enc_blocks": DenseLM._block_specs(self, ops),
+            "dec_blocks": dec,
+            "ln_enc": ops.spec_norm(False), "ln_encb": ops.spec_norm(False),
+            "ln_f": ops.spec_norm(False), "ln_fb": ops.spec_norm(False),
+        }
+
+    # ------------------------------------------------------------ encoder
+    def batch_extras(self, shape):
+        from jax.sharding import PartitionSpec as P
+        cfg = self.cfg
+        B = shape.global_batch
+        sd = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+        sp = (P(("data", "depth"), None, None) if shape.kind == "train"
+              else P("data", None, None))
+        return {"audio": (sd, sp)}
+
+    def shard_audio(self, ops, audio):
+        """[B', Te, h] host layout -> [B_loc, Te, h/q]."""
+        a = ops.shard_tokens(audio) if ops.plan.kind == "train" else audio
+        q = self.ctx.cols
+        n = a.shape[-1] // q
+        i = lax.axis_index(self.ctx.axis_col)
+        return lax.dynamic_slice_in_dim(a, i * n, n, axis=a.ndim - 1)
+
+    def _enc_block(self, p, x, ops):
+        """Bidirectional self-attention block (no rope, no seq sharding)."""
+        B, T = x.shape[:2]
+        h = self._norm(ops, x, p["ln1"], p.get("ln1b"))
+        q = ops.linear_up(h, p["wq"], p.get("bq"))
+        if self.kv_shard:
+            k = ops.linear_up(h, p["wk"])
+            v = ops.linear_up(h, p["wv"], p.get("bv"))
+        else:
+            k = ops.linear_to_replicated(h, p["wk"])
+            v = ops.linear_to_replicated(h, p["wv"], p.get("bv"))
+        D = self.D
+        q = q.reshape(B, T, self._heads_loc(ops), D)
+        k = k.reshape(B, T, self._kv_heads_loc(ops), D)
+        v = v.reshape(B, T, self._kv_heads_loc(ops), D)
+        if not self.kv_shard:
+            kv_map = self._kv_map(ops)
+            k = jnp.take(k, kv_map, axis=2)
+            v = jnp.take(v, kv_map, axis=2)
+        pos = jnp.zeros((T,), jnp.int32)
+        out = cm.blockwise_attention(q, k, v, q_pos=pos, kv_pos=pos,
+                                     causal=False, q_chunk=self.run.q_chunk,
+                                     kv_chunk=self.run.kv_chunk)
+        x = x + self._attn_out(p, out, ops, self._head_mask(ops))
+        h2 = self._norm(ops, x, p["ln2"], p.get("ln2b"))
+        return x + self._mlp(p, h2, ops)
+
+    def encode(self, params, audio, ops):
+        cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt)
+                                      if a.dtype == self.pdt else a, t)
+        x = audio.astype(self.cdt)
+        Te = x.shape[1]
+        pos = sinusoid_pos(jnp.arange(Te), self.cfg.d_model)
+        pos = self._slice_features(pos)
+        x = x + pos[None].astype(self.cdt)
+        body = maybe_remat(
+            lambda xx, bp: (self._enc_block(cast(bp), xx, ops), None), self.run)
+        x, _ = lax.scan(body, x, params["enc_blocks"])
+        return self._norm(ops, x, params["ln_enc"], params["ln_encb"])
+
+    def _slice_features(self, t):
+        q = self.ctx.cols
+        n = t.shape[-1] // q
+        i = lax.axis_index(self.ctx.axis_col)
+        return lax.dynamic_slice_in_dim(t, i * n, n, axis=t.ndim - 1)
+
+    # ------------------------------------------------------------ decoder
+    def _cross_block(self, p, x, memory, ops):
+        cfg, D = self.cfg, self.D
+        h = self._norm(ops, x, p["ln"], p.get("lnb"))
+        hg = ops.seq_gather_in(h)
+        B, T = hg.shape[:2]
+        q = ops.linear_up(hg, p["wq"], p.get("bq"))
+        q = q.reshape(B, T, self._heads_loc(ops), D)
+        if self.kv_shard:
+            k = ops.linear_up(memory, p["wk"])
+            v = ops.linear_up(memory, p["wv"], p.get("bv"))
+        else:
+            k = ops.linear_to_replicated(memory, p["wk"])
+            v = ops.linear_to_replicated(memory, p["wv"], p.get("bv"))
+        Tv = memory.shape[1]
+        k = k.reshape(B, Tv, self._kv_heads_loc(ops), D)
+        v = v.reshape(B, Tv, self._kv_heads_loc(ops), D)
+        if not self.kv_shard:
+            kv_map = self._kv_map(ops)
+            k = jnp.take(k, kv_map, axis=2)
+            v = jnp.take(v, kv_map, axis=2)
+        out = cm.blockwise_attention(
+            q, k, v, q_pos=jnp.zeros((T,), jnp.int32),
+            kv_pos=jnp.zeros((Tv,), jnp.int32), causal=False,
+            q_chunk=self.run.q_chunk, kv_chunk=self.run.kv_chunk)
+        return x + self._attn_out(p, out, ops, self._head_mask(ops)), (k, v)
+
+    def _dec_block(self, p, x, memory, ops, full_kv_pos):
+        x, kv_self = self._block_train_attn(p, x, ops, full_kv_pos)
+        x, kv_cross = self._cross_block(p["cross"], x, memory, ops)
+        h2 = self._norm(ops, x, p["ln2"], p.get("ln2b"))
+        x = x + self._mlp(p, h2, ops)
+        return x, (kv_self, kv_cross)
+
+    def _embed_dec(self, params, tokens, ops):
+        x = ops.embed(tokens, params["embed"]).astype(self.cdt)
+        S_loc = x.shape[1]
+        pos = sinusoid_pos(ops.positions(S_loc), self.cfg.d_model)
+        return x + self._slice_features(pos)[None].astype(self.cdt)
+
+    # -------------------------------------------------------------- steps
+    def loss(self, params, batch, ops):
+        cfg = self.cfg
+        memory = self.encode(params, self.shard_audio(ops, batch["audio"]), ops)
+        x = self._embed_dec(params, batch["tokens"], ops)
+        T_loc = x.shape[1]
+        n_seq = (self.ctx.depth * self.ctx.rows if ops.plan.seq_sharded else 1)
+        full_kv_pos = jnp.arange(T_loc * n_seq)
+        cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt)
+                                      if a.dtype == self.pdt else a, t)
+
+        def body(xx, bp):
+            y, _ = self._dec_block(cast(bp), xx, memory, ops, full_kv_pos)
+            return y, None
+
+        x, _ = lax.scan(maybe_remat(body, self.run), x, params["dec_blocks"])
+        x = self._norm(ops, x, params["ln_f"], params["ln_fb"])
+        loss_sum, cnt = ops.ce_loss(
+            x, params["head"].astype(self.cdt), batch["labels"],
+            vocab_real=cfg.vocab_size, loss_chunk=self.run.loss_chunk,
+            label_mask=batch.get("mask"))
+        loss_sum = lax.psum(loss_sum, self.ctx.axis_data)
+        cnt = lax.psum(cnt, self.ctx.axis_data)
+        return loss_sum / jnp.maximum(cnt, 1.0)
+
+    # ------------------------------------------------------------ serving
+    def cache_abstract(self, batch_global: int, seq_len: int, plan):
+        from jax import ShapeDtypeStruct as Sds
+        from jax.sharding import PartitionSpec as P
+        cfg = self.cfg
+        sds, specs = super().cache_abstract(batch_global, seq_len, plan)
+        tok = (("data", "depth", "row") if plan.kind == "decode"
+               else "data" if plan.kind == "decode_dp" else None)
+        cshape = (cfg.num_layers, batch_global, cfg.enc_seq,
+                  cfg.num_kv_heads, self.D)
+        csp = P(None, tok, None, "col" if self.kv_shard else None, None)
+        sds.update(ck=Sds(cshape, self.cdt), cv=Sds(cshape, self.cdt))
+        specs.update(ck=csp, cv=csp)
+        return sds, specs
+
+    def prefill_cache_specs(self, ops):
+        from jax.sharding import PartitionSpec as P
+        base = super().prefill_cache_specs(ops)
+        csp = P(None, "data", None, "col" if self.kv_shard else None, None)
+        base.update(ck=csp, cv=csp)
+        return base
+
+    def prefill(self, params, batch, ops):
+        cfg = self.cfg
+        memory = self.encode(params, self.shard_audio(ops, batch["audio"]), ops)
+        x = self._embed_dec(params, batch["tokens"], ops)
+        S_loc = x.shape[1]
+        n_seq = (self.ctx.depth * self.ctx.rows if ops.plan.seq_sharded else 1)
+        full_kv_pos = jnp.arange(S_loc * n_seq)
+        cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt)
+                                      if a.dtype == self.pdt else a, t)
+
+        def body(xx, bp):
+            y, (kv_self, kv_cross) = self._dec_block(cast(bp), xx, memory, ops,
+                                                     full_kv_pos)
+            return y, (kv_self, (kv_cross[0].astype(self.cdt),
+                                 kv_cross[1].astype(self.cdt)))
+
+        x, (kvs, ckvs) = lax.scan(body, x, params["dec_blocks"])
+        x = self._norm(ops, x, params["ln_f"], params["ln_fb"])
+        x_last = ops_last_token(ops, x, self.ctx)
+        ids = ops.head_sample(x_last, params["head"].astype(self.cdt),
+                              vocab_real=cfg.vocab_size, tokens_sharded=False)
+        return ids[:, None], {"k": kvs[0], "v": kvs[1],
+                              "ck": ckvs[0], "cv": ckvs[1]}
+
+    def _cross_decode(self, p, x, ck, cv, ops):
+        D = self.D
+        h = self._norm(ops, x, p["ln"], p.get("lnb"))
+        B = h.shape[0]
+        q = ops.linear_up(h, p["wq"], p.get("bq"))
+        q = q.reshape(B, self._heads_loc(ops), D)
+        kv_map = None if self.kv_shard else self._kv_map(ops)
+        out = cm.decode_attention(q, ck, cv, cur_pos=ck.shape[1] - 1,
+                                  kv_map=kv_map)
+        return x + self._attn_out(p, out[:, None], ops, self._head_mask(ops))
+
+    def decode(self, params, cache, ids, pos, ops):
+        cfg = self.cfg
+        x = self._embed_dec_decode(params, ids, pos, ops)
+        cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt)
+                                      if a.dtype == self.pdt else a, t)
+
+        def body(xx, xs):
+            bp, k1, v1, ck1, cv1 = xs
+            bp = cast(bp)
+            y, cl = DenseLM._block_decode_attnonly(self, bp, xx,
+                                                   {"k": k1, "v": v1}, pos, ops)
+            y = self._cross_decode(bp["cross"], y, ck1.astype(self.cdt),
+                                   cv1.astype(self.cdt), ops)
+            h2 = self._norm(ops, y, bp["ln2"], bp.get("ln2b"))
+            y = y + self._mlp(bp, h2, ops)
+            return y, (cl["k"], cl["v"])
+
+        x, (nk, nv) = lax.scan(body, x, (params["dec_blocks"], cache["k"],
+                                         cache["v"], cache["ck"], cache["cv"]))
+        x = self._norm(ops, x, params["ln_f"], params["ln_fb"])
+        nids = ops.head_sample(x, params["head"].astype(self.cdt),
+                               vocab_real=cfg.vocab_size)
+        return nids, dict(cache, k=nk, v=nv)
+
+    def _embed_dec_decode(self, params, ids, pos, ops):
+        x = ops.embed(ids, params["embed"]).astype(self.cdt)
+        p = sinusoid_pos(jnp.full((1,), pos, jnp.int32), self.cfg.d_model)
+        return x + self._slice_features(p)[None].astype(self.cdt)

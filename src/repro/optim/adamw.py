@@ -1,0 +1,92 @@
+"""Optimizers in pure JAX: AdamW and LAMB (paper cites LAMB/LARS for large
+batch training).  All updates are elementwise on local shards, so they are
+layout-oblivious — they run inside shard_map on whatever partitioning the
+params use.  Master fp32 copies are kept when params are low-precision.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _zeros_like_f32(p):
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def adamw_init(params, *, master: bool = False):
+    st = {
+        "m": jax.tree.map(_zeros_like_f32, params),
+        "v": jax.tree.map(_zeros_like_f32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if master:
+        st["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return st
+
+
+def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.0):
+    step = state["step"] + 1
+    sf = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** sf
+    c2 = 1.0 - b2 ** sf
+    gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], gf)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], gf)
+    master = state.get("master")
+    pf = master if master is not None else jax.tree.map(
+        lambda p: p.astype(jnp.float32), params)
+    new_pf = jax.tree.map(
+        lambda p, m, v: p - lr * ((m / c1) / (jnp.sqrt(v / c2) + eps)
+                                  + weight_decay * p),
+        pf, new_m, new_v)
+    new_p = jax.tree.map(lambda p0, p: p.astype(p0.dtype), params, new_pf)
+    new_state = dict(state, m=new_m, v=new_v, step=step)
+    if master is not None:
+        new_state["master"] = new_pf
+    return new_p, new_state
+
+
+def lamb_update(params, grads, state, *, lr, b1=0.9, b2=0.999, eps=1e-6,
+                weight_decay=0.0, norm_fn=None):
+    """LAMB: Adam update scaled by the per-leaf trust ratio ||p|| / ||u||.
+
+    norm_fn(leaf) must return the *global* L2 norm of a (possibly sharded)
+    leaf — the caller provides a layout-aware implementation (the default is
+    only correct for unsharded leaves).
+    """
+    step = state["step"] + 1
+    sf = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** sf
+    c2 = 1.0 - b2 ** sf
+    if norm_fn is None:
+        norm_fn = lambda leaf: jnp.sqrt(jnp.sum(leaf.astype(jnp.float32) ** 2))
+    gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], gf)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], gf)
+    master = state.get("master")
+    pf = master if master is not None else jax.tree.map(
+        lambda p: p.astype(jnp.float32), params)
+    upd = jax.tree.map(
+        lambda p, m, v: (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p,
+        pf, new_m, new_v)
+
+    def apply(p, u):
+        pn, un = norm_fn(p), norm_fn(u)
+        trust = jnp.where((pn > 0) & (un > 0), pn / un, 1.0)
+        return p - lr * trust * u
+
+    new_pf = jax.tree.map(apply, pf, upd)
+    new_p = jax.tree.map(lambda p0, p: p.astype(p0.dtype), params, new_pf)
+    new_state = dict(state, m=new_m, v=new_v, step=step)
+    if master is not None:
+        new_state["master"] = new_pf
+    return new_p, new_state
+
+
+def cosine_lr(step, *, base_lr, warmup: int, total: int, min_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = base_lr * s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,81 @@
+"""Three-term roofline model from a compiled dry-run artifact.
+
+Target hardware (TPU v5e-class, per harness):
+    peak bf16 compute : 197 TFLOP/s per chip
+    HBM bandwidth     : 819 GB/s per chip
+    ICI link bandwidth: ~50 GB/s per link
+
+    compute_term    = HLO_FLOPs_per_device / peak
+    memory_term     = HLO_bytes_per_device / HBM_bw
+    collective_term = collective_wire_bytes_per_device / link_bw
+
+cost_analysis() of the partitioned executable is per-device, so no division
+by chip count is needed.  MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE)
+is divided by chips for the per-device comparison.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mode: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # per device
+    hlo_bytes: float            # per device
+    coll_operand_bytes: float   # per device
+    coll_wire_bytes: float      # per device
+    model_flops_total: float    # 6*N*D for the step
+    per_device_bytes: int       # argument+temp memory (memory_analysis)
+    compute_term_s: float = 0.0
+    memory_term_s: float = 0.0
+    collective_term_s: float = 0.0
+    dominant: str = ""
+    useful_flops_frac: float = 0.0
+    collectives: dict = None
+
+    def finalize(self):
+        self.compute_term_s = self.hlo_flops / PEAK_FLOPS
+        self.memory_term_s = self.hlo_bytes / HBM_BW
+        self.collective_term_s = self.coll_wire_bytes / LINK_BW
+        terms = {"compute": self.compute_term_s,
+                 "memory": self.memory_term_s,
+                 "collective": self.collective_term_s}
+        self.dominant = max(terms, key=terms.get)
+        total_hlo = self.hlo_flops * self.chips
+        self.useful_flops_frac = (self.model_flops_total / total_hlo
+                                  if total_hlo else 0.0)
+        return self
+
+    def row(self):
+        return (f"| {self.arch} | {self.shape} | {self.mode} | {self.mesh} | "
+                f"{self.compute_term_s*1e3:.2f} | {self.memory_term_s*1e3:.2f} | "
+                f"{self.collective_term_s*1e3:.2f} | {self.dominant} | "
+                f"{self.useful_flops_frac:.2f} | "
+                f"{self.per_device_bytes/2**30:.1f} |")
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D training flops (fwd+bwd) or 2*N*D serving flops."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence (attention over the cache excluded from
+    # the 2*N*D parametric-flops convention; noted in EXPERIMENTS.md)
+    tokens = shape.global_batch
+    return 2.0 * n_active * tokens

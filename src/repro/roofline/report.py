@@ -1,0 +1,76 @@
+"""Render the §Dry-run / §Roofline sections of EXPERIMENTS.md from the
+cached dry-run JSONs."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+HEADER = ("| arch | shape | mode | mesh | compute ms | memory ms | collective ms "
+          "| dominant | useful-FLOPs frac | GiB/dev | lever for dominant term |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def lever(d):
+    """One sentence: what would move the dominant term down (per harness)."""
+    dom, shape, arch = d["dominant"], d["shape"], d["arch"]
+    moe = arch in ("llama4-scout-17b-a16e", "deepseek-v2-236b")
+    if dom == "compute":
+        if d["useful_flops_frac"] < 0.9:
+            return "dots remat cuts bwd recompute (measured -18.5%, §Perf A6)"
+        return "already ~model-FLOPs bound; next lever is the Pallas tesseract_mm/flash kernels"
+    if dom == "collective":
+        if "decode" in shape or "500k" in shape:
+            return "switch serve layout to 1-D: per-token weight gathers vanish (-99.9%, §Perf B1)"
+        if moe:
+            return "capacity 1.0 + deferred bf16 grad sync (-11%, §Perf C4); structural: top-k"
+        return "deferred bf16 grad sync (-14%, §Perf A8) + overlap behind compute (XLA LHS)"
+    # memory
+    if "prefill" in shape:
+        return "Pallas flash attention keeps score blocks in VMEM (dot traffic down)"
+    if "decode" in shape:
+        return "weight streaming bound: raise batch per chip or quantize weights"
+    return "over-provisioned chips for this model size; shrink TP or raise per-chip batch"
+
+
+def load_cells(mesh=None, mode=None):
+    out = []
+    for p in sorted(RESULTS.glob("*.json")):
+        d = json.loads(p.read_text())
+        if mesh and d["mesh"] != mesh:
+            continue
+        if mode and d["mode"] != mode:
+            continue
+        out.append(d)
+    return out
+
+
+def row(d):
+    return (f"| {d['arch']} | {d['shape']} | {d['mode']} | {d['mesh']} | "
+            f"{d['compute_term_s']*1e3:.2f} | {d['memory_term_s']*1e3:.2f} | "
+            f"{d['collective_term_s']*1e3:.2f} | {d['dominant']} | "
+            f"{d['useful_flops_frac']:.3f} | "
+            f"{d['per_device_bytes']/2**30:.1f} | {lever(d)} |")
+
+
+def table(mesh="16x16", mode="tesseract"):
+    lines = [HEADER]
+    for d in load_cells(mesh, mode):
+        lines.append(row(d))
+    return "\n".join(lines)
+
+
+def summary():
+    cells = load_cells()
+    doms = {}
+    for d in cells:
+        doms.setdefault(d["dominant"], []).append(
+            f"{d['arch']}/{d['shape']}/{d['mesh']}")
+    return doms
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    print(table(mesh=mesh))

@@ -1,0 +1,46 @@
+"""Elastic re-meshing: pick a valid parallel layout for whatever devices
+survive a failure.
+
+Policy (matches the paper's composition, Fig. 6): the tensor-parallel group
+[q, q, d] is the atomic unit — a TP group that lost a member is dropped
+whole — and the data axis absorbs the shrink.  The global batch is kept by
+raising per-replica batch (grad accumulation if it no longer divides).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..core.api import ParallelContext
+
+
+@dataclass
+class Replan:
+    ctx: ParallelContext
+    n_used: int
+    n_idle: int
+    accum_steps: int
+
+
+def replan(n_devices: int, ctx: ParallelContext, *, global_batch: int,
+           seq_sharded: bool = False) -> Replan:
+    """Largest valid layout with the same TP factorization."""
+    tp = ctx.tp
+    if n_devices < tp:
+        raise RuntimeError(
+            f"cannot fit a [{ctx.rows},{ctx.cols},{ctx.depth}] TP group in "
+            f"{n_devices} devices; reduce q/d in the config")
+    data = n_devices // tp
+    # token sharding must divide the global batch
+    while data > 0:
+        shards = data * (ctx.depth * ctx.rows if not seq_sharded else 1)
+        if shards and global_batch % shards == 0:
+            break
+        data -= 1
+    if data == 0:
+        data = 1
+    new_ctx = ctx.replace(data=data)
+    used = data * tp
+    # keep global batch via accumulation if batch-per-step shrank
+    accum = max(1, ctx.data // data)
+    return Replan(ctx=new_ctx, n_used=used, n_idle=n_devices - used,
+                  accum_steps=accum)

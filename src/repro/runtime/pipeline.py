@@ -1,0 +1,66 @@
+"""Pipeline parallelism (paper §3.4: Tesseract composes with PP outermost).
+
+GPipe-style microbatch pipeline expressed *inside* shard_map on a dedicated
+``pipe`` mesh axis: each stage holds its own params (stage-sharded in_specs),
+activations move stage-to-stage with collective_permute, and the schedule is
+a single lax.scan of M + S - 1 ticks.  Reverse-mode AD through the scan +
+ppermute yields the backward pipeline automatically (ppermute transposes to
+the reverse shift), so the same wrapper trains.
+
+The 40-cell dry-run grid runs without PP (the production mesh dedicates all
+16 model chips to Tesseract); examples/pipeline_tesseract.py and
+tests/test_pipeline.py exercise a [pipe x data x depth x row x col] mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def pipeline_apply(stage_fn, stage_params, x_mb, *, axis: str = "pipe"):
+    """Run ``stage_fn(params, x)`` as an S-stage pipeline over M microbatches.
+
+    stage_params : this stage's params (stage-sharded over ``axis``)
+    x_mb         : [M, mb, ...] microbatch inputs (used on stage 0; other
+                   stages ignore their copy)
+    Returns [M, mb, ...] outputs, valid on the LAST stage (replicated there
+    via the caller's reduction; other stages hold garbage).
+    """
+    S = lax.axis_size(axis)
+    sid = lax.axis_index(axis)
+    M = x_mb.shape[0]
+    T = M + S - 1
+    fwd_perm = [(i, i + 1) for i in range(S - 1)]
+
+    def tick(carry, t):
+        buf, outputs = carry
+        mb_i = jnp.clip(t, 0, M - 1)
+        inject = lax.dynamic_index_in_dim(x_mb, mb_i, 0, keepdims=False)
+        inp = jnp.where(sid == 0, inject, buf)
+        y = stage_fn(stage_params, inp)
+        out_i = jnp.clip(t - (S - 1), 0, M - 1)
+        take = (sid == S - 1) & (t >= S - 1)
+        outputs = lax.dynamic_update_index_in_dim(
+            outputs,
+            jnp.where(take, y, lax.dynamic_index_in_dim(outputs, out_i, 0,
+                                                        keepdims=False)),
+            out_i, 0)
+        buf_next = lax.ppermute(y, axis, fwd_perm)
+        return (buf_next, outputs), None
+
+    buf0 = jnp.zeros(x_mb.shape[1:], x_mb.dtype)
+    outs0 = jnp.zeros_like(x_mb)
+    # seed vma so the carry matches the loop body: the pipeline buffer varies
+    # over the pipe axis (stage params differ per stage, ppermute shifts)
+    from ..models.common import vma_like
+    seed = jax.tree.leaves(stage_params)[0]
+    buf0 = vma_like(buf0, x_mb, seed)
+    outs0 = vma_like(outs0, x_mb, seed)
+    (_, outputs), _ = lax.scan(tick, (buf0, outs0), jnp.arange(T))
+    return outputs
+
+
+def bubble_fraction(n_micro: int, n_stages: int) -> float:
+    """GPipe bubble overhead: (S-1)/(M+S-1)."""
+    return (n_stages - 1) / (n_micro + n_stages - 1)

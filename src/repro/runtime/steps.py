@@ -1,0 +1,352 @@
+"""Step builders: wire a model + ParallelContext + shape into jit-able
+train / prefill / decode step functions (shard_map inside jit).
+
+Gradient synchronization design (see DESIGN.md §2 and core/summa.py):
+
+- Replication axes of every param leaf except ``data`` are handled by
+  ``pvary`` at the loss boundary — its transpose inserts one fused psum per
+  (stacked) leaf per step.
+- The ``data`` (DP) axis is synced explicitly after grad computation so it
+  can be compressed (bf16 wire format) — a distributed-optimization lever.
+- ``ctx.reduce_dgrad_in_op=True`` switches the Tesseract matmul weights to
+  the paper's literal per-op all-reduce schedule (baseline measurements).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import RunConfig, ShapeSpec
+from ..core.api import LOGICAL_AXES, ParallelContext
+from ..core.collectives import pvary, grad_sync, axis_size
+from ..core.ops import Plan, make_ops
+from ..optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# spec utilities
+# ---------------------------------------------------------------------------
+
+def spec_axes(spec: P) -> tuple:
+    out = []
+    for entry in spec:
+        if entry is None:
+            continue
+        if isinstance(entry, (tuple, list)):
+            out.extend(entry)
+        else:
+            out.append(entry)
+    return tuple(out)
+
+
+def replicated_axes(spec: P) -> tuple:
+    used = set(spec_axes(spec))
+    return tuple(a for a in LOGICAL_AXES if a not in used)
+
+
+def rep_factor(ctx: ParallelContext, spec: P) -> int:
+    sizes = dict(data=ctx.data, depth=ctx.depth, row=ctx.rows, col=ctx.cols)
+    f = 1
+    for a in replicated_axes(spec):
+        f *= sizes[a]
+    return f
+
+
+def mark_by_name(tree, names: set, default=False):
+    """Bool tree: True where any dict key on the leaf's path is in ``names``."""
+    def f(path, _leaf):
+        for p in path:
+            key = getattr(p, "key", None)
+            if key in names:
+                return True
+        return default
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+def make_plan(ctx: ParallelContext, shape: ShapeSpec) -> Plan:
+    return Plan.for_shape(shape.kind, global_batch=shape.global_batch,
+                          batch_shards=ctx.batch_shards, data=ctx.data)
+
+
+# ---------------------------------------------------------------------------
+# bundles
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StepBundle:
+    fn: Callable                 # jitted
+    abstract_inputs: tuple       # trees of ShapeDtypeStruct (global shapes)
+    in_shardings: tuple
+    out_shardings: Any
+    mesh: Any
+    plan: Plan
+
+
+def _shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_abstract(ops, shape: ShapeSpec, ctx: ParallelContext, model=None):
+    """Global ShapeDtypeStructs + specs for the host-layout token batch."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        t = sds((B, S), jnp.int32)
+        shapes = {"tokens": t, "labels": t}
+        specs = {"tokens": ops.spec_tokens_in(), "labels": ops.spec_tokens_in()}
+    elif shape.kind == "prefill":
+        t = sds((B, S), jnp.int32)
+        shapes, specs = {"tokens": t}, {"tokens": ops.spec_tokens_in()}
+    else:
+        raise ValueError(shape.kind)
+    if model is not None:
+        for name, (sd, sp) in model.batch_extras(shape).items():
+            shapes[name] = sd
+            specs[name] = sp
+    return shapes, specs
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def build_train_step(model, mesh, shape: ShapeSpec):
+    ctx: ParallelContext = model.ctx
+    run: RunConfig = model.run
+    plan = make_plan(ctx, shape)
+    ops = make_ops(ctx, plan)
+
+    specs = model.specs(ops)
+    tess_names = getattr(model, "tess_weight_names", lambda: set())()
+    inop = ctx.reduce_dgrad_in_op and ctx.mode in ("tesseract", "summa2d")
+    is_tess = (mark_by_name(specs, tess_names) if inop
+               else jax.tree.map(lambda _: False, specs))
+
+    rep_tree = jax.tree.map(lambda s: rep_factor(ctx, s), specs)
+
+    def pvary_axes(s, t):
+        if t:  # in-op tesseract weight: custom bwd reduces (data, depth)
+            return ()
+        return replicated_axes(s)
+
+    opt_master = run.param_dtype != "float32"
+
+    # ---- ZeRO-1: optimizer state sharded over (data, depth) ----
+    # Each leaf's LOCAL (row,col)-shard is flattened, zero-padded to a
+    # multiple of data*depth and sliced (free: grads are replicated over
+    # those axes after the sync); the update runs on the slice and fresh
+    # params are re-assembled with one all-gather per leaf — the classic
+    # ZeRO-1 trade of a weight gather for 1/(data*depth) m/v/master memory.
+    import numpy as _np
+    from ..core import collectives as col_mod
+    zero_axes = (ctx.axis_data, ctx.axis_depth)
+    zero_n = ctx.data * ctx.depth
+
+    def _shard_elems(spec, shp):
+        return int(_np.prod(NamedSharding(mesh, spec).shard_shape(tuple(shp))))
+
+    def zslice(x):
+        k = -(-x.size // zero_n)
+        flat = jnp.pad(x.reshape(-1), (0, k * zero_n - x.size))
+        i = col_mod.axis_linear_index(zero_axes)
+        return lax.dynamic_slice_in_dim(flat, i * k, k, axis=0)
+
+    def zunslice(slice_, shp):
+        flat = col_mod.all_gather_inv(slice_, zero_axes, tiled=True, axis=0)
+        n = 1
+        for d in shp:
+            n *= d
+        return flat[:n].reshape(shp)
+
+    def local_step(params, opt_state, batch):
+        def loss_fn(p):
+            # grad_sync: fwd pvary / bwd fused (optionally bf16-compressed)
+            # psum over each leaf's replication axes — the deferred form of
+            # the paper's depth all-reduce, plus the DP reduction.
+            pv = jax.tree.map(
+                lambda x, s, t: grad_sync(x, pvary_axes(s, t),
+                                          run.grad_compression),
+                p, specs, is_tess)
+            return model.loss(pv, batch, ops)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+
+        # --- global grad-norm clip (layout aware) ---
+        def leaf_sq(g, rep, s):
+            val = jnp.sum(g.astype(jnp.float32) ** 2) / rep
+            return pvary(val, replicated_axes(s))
+        sq = sum(jax.tree.leaves(jax.tree.map(leaf_sq, grads, rep_tree, specs)))
+        gnorm = jnp.sqrt(lax.psum(sq, LOGICAL_AXES))
+        scale = jnp.minimum(1.0, run.grad_clip / (gnorm + 1e-6))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+        lr = adamw.cosine_lr(opt_state["step"], base_lr=run.lr,
+                             warmup=100, total=10000)
+        if run.zero1:
+            g_sl = jax.tree.map(zslice, grads)
+            p_sl = jax.tree.map(zslice, params)
+            sq = lambda t: jax.tree.map(lambda x: x[0], t)  # [1,k] -> [k]
+            st = {"step": opt_state["step"], "m": sq(opt_state["m"]),
+                  "v": sq(opt_state["v"])}
+            if "master" in opt_state:
+                # lazy master init: step 0 adopts the param slice
+                is0 = (opt_state["step"] == 0)
+                st["master"] = jax.tree.map(
+                    lambda m, pp: jnp.where(is0, pp.astype(jnp.float32), m),
+                    sq(opt_state["master"]), p_sl)
+            new_psl, new_state = adamw.adamw_update(
+                p_sl, g_sl, st, lr=lr, weight_decay=run.weight_decay)
+            un = lambda t: jax.tree.map(lambda x: x[None], t)  # [k] -> [1,k]
+            new_state = {"step": new_state["step"], "m": un(new_state["m"]),
+                         "v": un(new_state["v"]),
+                         **({"master": un(new_state["master"])}
+                            if "master" in new_state else {})}
+            new_params = jax.tree.map(
+                lambda sl, p0: zunslice(sl, p0.shape).astype(p0.dtype),
+                new_psl, params)
+        else:
+            new_params, new_state = adamw.adamw_update(
+                params, grads, opt_state, lr=lr, weight_decay=run.weight_decay)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_params, new_state, metrics
+
+    if run.zero1:
+        # opt leaves: [n_slices, k] with dim0 mapped over (data, depth) PLUS
+        # the leaf's own sharded axes (row-replicated leaves must stay
+        # row-replicated in their opt slices or the reconstructed param's
+        # vma would spuriously vary over row).
+        def zspec_of(sp):
+            extra = tuple(a for a in spec_axes(sp)
+                          if a not in (ctx.axis_data, ctx.axis_depth))
+            return P((ctx.axis_data, ctx.axis_depth) + extra, None)
+        zspec_tree = jax.tree.map(zspec_of, specs)
+        opt_specs = {"m": zspec_tree, "v": zspec_tree, "step": P(),
+                     **({"master": zspec_tree} if opt_master else {})}
+    else:
+        opt_specs = {
+            "m": specs, "v": specs, "step": P(),
+            **({"master": specs} if opt_master else {}),
+        }
+    batch_sds, batch_specs_ = batch_abstract(ops, shape, ctx, model)
+    metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+
+    smapped = jax.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(specs, opt_specs, batch_specs_),
+        out_specs=(specs, opt_specs, metric_specs))
+    in_sh = (_shardings(mesh, specs), _shardings(mesh, opt_specs),
+             _shardings(mesh, batch_specs_))
+    out_sh = (_shardings(mesh, specs), _shardings(mesh, opt_specs),
+              _shardings(mesh, metric_specs))
+    fn = jax.jit(smapped, donate_argnums=(0, 1), in_shardings=in_sh,
+                 out_shardings=out_sh)
+
+    abs_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if run.zero1:
+        sizes = dict(data=ctx.data, depth=ctx.depth, row=ctx.rows,
+                     col=ctx.cols)
+        def zleaf(ab, sp):
+            k = -(-_shard_elems(sp, ab.shape) // zero_n)
+            n_slices = zero_n
+            for a in spec_axes(sp):
+                if a not in (ctx.axis_data, ctx.axis_depth):
+                    n_slices *= sizes[a]
+            return jax.ShapeDtypeStruct((n_slices, k), jnp.float32)
+        zt = jax.tree.map(zleaf, abs_params, specs)
+        abs_opt = {"m": zt, "v": zt,
+                   "step": jax.ShapeDtypeStruct((), jnp.int32),
+                   **({"master": zt} if opt_master else {})}
+    else:
+        abs_opt = jax.eval_shape(partial(adamw.adamw_init, master=opt_master),
+                                 abs_params)
+    return StepBundle(
+        fn=fn,
+        abstract_inputs=(abs_params, abs_opt, batch_sds),
+        in_shardings=in_sh, out_shardings=out_sh, mesh=mesh, plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(model, mesh, shape: ShapeSpec):
+    ctx = model.ctx
+    plan = make_plan(ctx, shape)
+    ops = make_ops(ctx, plan)
+    specs = model.specs(ops)
+
+    def local_step(params, batch):
+        ids, cache = model.prefill(params, batch, ops)
+        if ids.ndim == 1:
+            ids = ids[:, None]
+        return ids, cache
+
+    # prefill-layout cache: [L, B/data(loc), S, kvh_loc, D]
+    cache_specs = model.prefill_cache_specs(ops)
+    ids_spec = P("data", None) if plan.kind != "long_decode" else P(None, None)
+    batch_sds, batch_specs_ = batch_abstract(ops, shape, ctx, model)
+
+    in_sh = (_shardings(mesh, specs), _shardings(mesh, batch_specs_))
+    out_sh = (NamedSharding(mesh, ids_spec), _shardings(mesh, cache_specs))
+    smapped = jax.shard_map(local_step, mesh=mesh,
+                            in_specs=(specs, batch_specs_),
+                            out_specs=(ids_spec, cache_specs))
+    fn = jax.jit(smapped, in_shardings=in_sh, out_shardings=out_sh)
+    abs_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return StepBundle(fn=fn, abstract_inputs=(abs_params, batch_sds),
+                      in_shardings=in_sh, out_shardings=out_sh,
+                      mesh=mesh, plan=plan)
+
+
+def build_decode_step(model, mesh, shape: ShapeSpec):
+    ctx = model.ctx
+    plan = make_plan(ctx, shape)
+    ops = make_ops(ctx, plan)
+    specs = model.specs(ops)
+    cache_sds, cache_specs = model.cache_abstract(shape.global_batch,
+                                                  shape.seq_len, plan)
+
+    def local_step(params, cache, ids, pos):
+        nids, new_cache = model.decode(params, cache, ids, pos, ops)
+        nids = unshard_ids(ops, ctx, nids, plan)
+        return nids, new_cache
+
+    ids_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    ids_spec = ops.spec_tokens_in()
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+    in_sh = (_shardings(mesh, specs), _shardings(mesh, cache_specs),
+             NamedSharding(mesh, ids_spec), NamedSharding(mesh, P()))
+    out_sh = (NamedSharding(mesh, ids_spec), _shardings(mesh, cache_specs))
+    smapped = jax.shard_map(local_step, mesh=mesh,
+                            in_specs=(specs, cache_specs, ids_spec, P()),
+                            out_specs=(ids_spec, cache_specs))
+    fn = jax.jit(smapped, donate_argnums=(1,), in_shardings=in_sh,
+                 out_shardings=out_sh)
+    abs_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return StepBundle(fn=fn,
+                      abstract_inputs=(abs_params, cache_sds, ids_sds, pos_sds),
+                      in_shardings=in_sh, out_shardings=out_sh,
+                      mesh=mesh, plan=plan)
+
+
+def unshard_ids(ops, ctx, ids, plan):
+    """[B_loc] canonical-sharded -> [B', 1] host token layout.
+
+    Uses a zero-padded psum over row rather than all_gather so the result is
+    vma-invariant over row (all_gather conservatively keeps axes varying)."""
+    if plan.kind in ("long_decode", "decode_dp") or ctx.mode == "megatron1d":
+        return ids[:, None]
+    b_loc = ids.shape[0]
+    buf = jnp.zeros((b_loc * ctx.rows,), ids.dtype)
+    i = lax.axis_index(ctx.axis_row)
+    buf = lax.dynamic_update_slice_in_dim(buf, ids, i * b_loc, 0)
+    buf = lax.psum(buf, ctx.axis_row)
+    return buf[:, None]

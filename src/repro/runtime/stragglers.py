@@ -1,0 +1,40 @@
+"""Straggler detection for multi-host training.
+
+On real clusters per-host step times are collected (e.g. via the coordination
+service); here the monitor is host-agnostic logic unit-tested with injected
+timings.  Policy: a host is flagged when its trailing-window mean exceeds the
+fleet median by ``threshold`` x the fleet MAD (robust to a single outlier
+skewing the mean).  Flagged hosts are candidates for preemptive eviction /
+re-mesh (runtime/elastic.py).
+"""
+from __future__ import annotations
+
+from collections import defaultdict, deque
+
+import numpy as np
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 20, threshold: float = 4.0,
+                 min_samples: int = 5):
+        self.window = window
+        self.threshold = threshold
+        self.min_samples = min_samples
+        self._times = defaultdict(lambda: deque(maxlen=window))
+
+    def record(self, host_id, step_time: float):
+        self._times[host_id].append(step_time)
+
+    def host_means(self):
+        return {h: float(np.mean(t)) for h, t in self._times.items()
+                if len(t) >= self.min_samples}
+
+    def stragglers(self):
+        means = self.host_means()
+        if len(means) < 2:
+            return []
+        vals = np.array(list(means.values()))
+        med = np.median(vals)
+        mad = np.median(np.abs(vals - med)) + 1e-9
+        return [h for h, m in means.items()
+                if (m - med) / (1.4826 * mad) > self.threshold]

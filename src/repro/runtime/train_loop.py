@@ -1,0 +1,119 @@
+"""Fault-tolerant training loop.
+
+Responsibilities at fleet scale, all exercised by tests on this container:
+  * checkpoint/restart: periodic async checkpoints; on failure, rebuild the
+    step and restore the latest checkpoint (reshard-on-restore supports a
+    different mesh after an elastic re-plan)
+  * deterministic data: the stream is keyed by step, so a restart replays
+    exactly the batches after the restored step
+  * straggler monitoring hooks (per-step timing -> StragglerMonitor)
+  * retry budget so a poisoned batch / flaky host cannot loop forever
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from ..checkpoint.ckpt import CheckpointManager
+from ..data.pipeline import Prefetcher, SyntheticLMStream
+from ..optim.adamw import adamw_init
+from .steps import build_train_step
+from .stragglers import StragglerMonitor
+
+
+@dataclass
+class TrainResult:
+    losses: list = field(default_factory=list)
+    restarts: int = 0
+    last_step: int = -1
+    step_times: list = field(default_factory=list)
+
+
+def train(model, mesh, shape, *, steps: int, ckpt_dir=None, ckpt_every: int = 50,
+          log_every: int = 10, max_restarts: int = 3, fault_hook=None,
+          seed: int = 0, stream=None, monitor=None) -> TrainResult:
+    """Run ``steps`` optimizer steps with checkpoint/restart fault tolerance.
+
+    fault_hook(step) may raise to simulate a failure (tests use this).
+    """
+    bundle = build_train_step(model, mesh, shape)
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    monitor = monitor or StragglerMonitor()
+    result = TrainResult()
+
+    batch_sh = bundle.in_shardings[2]
+    if stream is None:
+        extras = {k: (sd, sp) for k, (sd, sp) in model.batch_extras(shape).items()}
+        stream = SyntheticLMStream(model.cfg.vocab_size, shape.global_batch,
+                                   shape.seq_len, seed=seed, extras=extras)
+
+    def init_state():
+        import jax.numpy as jnp
+        params = model.init(jax.random.PRNGKey(seed))
+        params = jax.device_put(params, bundle.in_shardings[0])
+        if model.run.zero1:
+            opt = jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                               bundle.abstract_inputs[1])
+        else:
+            opt = adamw_init(params, master=model.run.param_dtype != "float32")
+        opt = jax.device_put(opt, bundle.in_shardings[1])
+        return params, opt
+
+    def restore_or_init():
+        if mgr is not None:
+            last = mgr.latest_step()
+            if last is not None:
+                abs_p, abs_o, _ = bundle.abstract_inputs
+                state = mgr.restore(last, {"params": abs_p, "opt": abs_o},
+                                    {"params": bundle.in_shardings[0],
+                                     "opt": bundle.in_shardings[1]})
+                return state["params"], state["opt"], last + 1
+        p, o = init_state()
+        return p, o, 0
+
+    params, opt, start = restore_or_init()
+    step = start
+    restarts = 0
+    while step < steps:
+        try:
+            pf = Prefetcher(stream, batch_sh, start_step=step)
+            try:
+                while step < steps:
+                    got_step, batch = pf.next()
+                    assert got_step == step
+                    if fault_hook is not None:
+                        fault_hook(step)
+                    t0 = time.time()
+                    params, opt, metrics = bundle.fn(params, opt, batch)
+                    loss = float(metrics["loss"])  # sync point
+                    dt = time.time() - t0
+                    monitor.record(jax.process_index(), dt)
+                    result.step_times.append(dt)
+                    if not np.isfinite(loss):
+                        raise FloatingPointError(f"non-finite loss at {step}")
+                    result.losses.append(loss)
+                    result.last_step = step
+                    if log_every and step % log_every == 0:
+                        print(f"step {step} loss {loss:.4f} "
+                              f"gnorm {float(metrics['grad_norm']):.3f} "
+                              f"({dt*1e3:.0f} ms)")
+                    step += 1
+                    if mgr is not None and step % ckpt_every == 0:
+                        mgr.save(step - 1, {"params": params, "opt": opt})
+            finally:
+                pf.stop()
+        except (FloatingPointError, RuntimeError, ValueError) as e:
+            restarts += 1
+            result.restarts = restarts
+            print(f"[fault] step {step}: {type(e).__name__}: {e}; "
+                  f"restart {restarts}/{max_restarts}")
+            if restarts > max_restarts:
+                raise
+            params, opt, step = restore_or_init()
+    if mgr is not None:
+        mgr.save(steps - 1, {"params": params, "opt": opt}, blocking=True)
+        mgr.wait()
+    return result

@@ -1,0 +1,446 @@
+"""Multi-device correctness checks, run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=N (so the main pytest
+process keeps a single device).
+
+Usage:  python -m repro.testing.mdchecks <check-name>
+
+Each check asserts and prints "PASS <name>"; nonzero exit on failure.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np  # noqa: E402
+
+
+def _ref_mesh_ctx():
+    """1-device reference context (uses the first of the fake devices)."""
+    import jax
+    from repro.core.api import ParallelContext
+    from repro.core.mesh import logical_mesh
+    ctx = ParallelContext(mode="tesseract", data=1, depth=1, rows=1, cols=1)
+    return ctx, logical_mesh(ctx, jax.devices()[:1])
+
+
+PARALLEL_VARIANTS = {
+    "tesseract_222": dict(mode="tesseract", data=1, depth=2, rows=2, cols=2),
+    "tesseract_221_dp2": dict(mode="tesseract", data=2, depth=2, rows=1, cols=1),
+    "summa2d_22_dp2": dict(mode="summa2d", data=2, depth=1, rows=2, cols=2),
+    "megatron_dp2": dict(mode="megatron1d", data=2, depth=1, rows=1, cols=4),
+}
+
+
+def check_summa_exact():
+    import jax, jax.numpy as jnp
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+    from repro.core.api import ParallelContext
+    from repro.core.mesh import logical_mesh
+    from repro.core.summa import tesseract_matmul, tesseract_matmul_wt
+    from repro.core.collectives import pvary
+
+    E, F, G = 24, 8, 12
+    A = jax.random.normal(jax.random.PRNGKey(0), (2, E, F), jnp.float32)
+    W = jax.random.normal(jax.random.PRNGKey(1), (F, G), jnp.float32)
+    Wt = jax.random.normal(jax.random.PRNGKey(3), (G, F), jnp.float32)
+    S = jax.random.normal(jax.random.PRNGKey(2), (2, E, G), jnp.float32)
+
+    for name, kw in [("d2q2", dict(depth=2, rows=2, cols=2)),
+                     ("d1q2dp2", dict(mode="summa2d", data=2, depth=1, rows=2, cols=2))]:
+        for inop in (True, False):
+            for cache_w in (True, False):
+                ctx = ParallelContext(mode=kw.get("mode", "tesseract"),
+                                      data=kw.get("data", 1), depth=kw["depth"],
+                                      rows=kw["rows"], cols=kw["cols"],
+                                      reduce_dgrad_in_op=inop,
+                                      cache_weight_gather=cache_w)
+                mesh = logical_mesh(ctx)
+                tok = P(None, ("data", "depth", "row"), "col")
+
+                def f(a, w, s):
+                    if not inop:
+                        w = pvary(w, (ctx.axis_data, ctx.axis_depth))
+                    c = tesseract_matmul(ctx, a, w)
+                    return lax.psum(jnp.sum(c * s),
+                                    ("data", "depth", "row", "col"))
+
+                sm = jax.shard_map(f, mesh=mesh,
+                                   in_specs=(tok, P("row", "col"), tok),
+                                   out_specs=P())
+                ga, gw = jax.grad(sm, argnums=(0, 1))(A, W, S)
+                np.testing.assert_allclose(np.asarray(sm(A, W, S)),
+                                           float(jnp.sum((A @ W) * S)),
+                                           rtol=1e-5)
+                np.testing.assert_allclose(ga, np.einsum("beg,fg->bef", S, W),
+                                           rtol=1e-4, atol=1e-5)
+                np.testing.assert_allclose(gw, np.einsum("bef,beg->fg", A, S),
+                                           rtol=1e-4, atol=1e-5)
+
+                def fwt(a, w, s):
+                    if not inop:
+                        w = pvary(w, (ctx.axis_data, ctx.axis_depth))
+                    c = tesseract_matmul_wt(ctx, a, w)
+                    return lax.psum(jnp.sum(c * s),
+                                    ("data", "depth", "row", "col"))
+
+                smt = jax.shard_map(fwt, mesh=mesh,
+                                    in_specs=(tok, P("row", "col"), tok),
+                                    out_specs=P())
+                # A @ Wt^T : Wt [G(row), F(col)]
+                Swt = jax.random.normal(jax.random.PRNGKey(4), (2, E, G), jnp.float32)
+                np.testing.assert_allclose(
+                    np.asarray(smt(A, Wt, Swt)),
+                    float(jnp.sum((A @ Wt.T) * Swt)), rtol=1e-5)
+                ga2, gw2 = jax.grad(smt, argnums=(0, 1))(A, Wt, Swt)
+                np.testing.assert_allclose(ga2, np.einsum("beg,gf->bef", Swt, Wt),
+                                           rtol=1e-4, atol=1e-5)
+                np.testing.assert_allclose(gw2, np.einsum("beg,bef->gf", Swt, A),
+                                           rtol=1e-4, atol=1e-5)
+    print("PASS summa_exact")
+
+
+def _build(arch_name, variant, run_kw=None, family_kw=None):
+    import jax
+    from repro.configs.base import RunConfig
+    from repro.core.api import ParallelContext
+    from repro.core.mesh import logical_mesh
+    from repro.models.registry import get_reduced, build_model
+    arch = get_reduced(arch_name)
+    kw = dict(param_dtype="float32", compute_dtype="float32",
+              loss_chunk=8, q_chunk=8, kv_chunk=8, lr=1e-3)
+    kw.update(run_kw or {})
+    run = RunConfig(**kw)
+    ctx = ParallelContext(**variant)
+    mesh = logical_mesh(ctx, jax.devices()[:ctx.data * ctx.tp])
+    model = build_model(arch.model, ctx, run)
+    return arch, run, ctx, mesh, model
+
+
+def _make_batch(model, shape, key, train=True):
+    import jax, jax.numpy as jnp
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.random.randint(key, (B, S), 0, min(250, model.cfg.vocab_size))
+    batch = {"tokens": tok}
+    if train:
+        batch["labels"] = jnp.roll(tok, -1, 1)
+    for name, (sd, _sp) in model.batch_extras(shape).items():
+        batch[name] = jax.random.normal(jax.random.fold_in(key, 1),
+                                        sd.shape, sd.dtype)
+    return batch
+
+
+def _train_losses(arch_name, variant, batch, n_steps=3, run_kw=None):
+    import jax, jax.numpy as jnp
+    from repro.configs.base import ShapeSpec
+    from repro.runtime.steps import build_train_step
+    from repro.optim.adamw import adamw_init
+    arch, run, ctx, mesh, model = _build(arch_name, variant, run_kw)
+    B, S = batch["tokens"].shape
+    shape = ShapeSpec("t", seq_len=S, global_batch=B, kind="train")
+    if model.batch_extras(shape):
+        batch = dict(batch)
+        batch.update({k: v for k, v in
+                      _make_batch(model, shape, jax.random.PRNGKey(42)).items()
+                      if k not in ("tokens", "labels")})
+    bundle = build_train_step(model, mesh, shape)
+    params = model.init(jax.random.PRNGKey(0))
+    if run.zero1:
+        opt = jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                           bundle.abstract_inputs[1])
+    else:
+        opt = adamw_init(params, master=run.param_dtype != "float32")
+    losses = []
+    p, o = params, opt
+    for _ in range(n_steps):
+        p, o, m = bundle.fn(p, o, batch)
+        losses.append(float(m["loss"]))
+    return np.array(losses), (p, o, model, mesh, ctx, run)
+
+
+def check_dense_parity(arch_name="yi-6b"):
+    import jax, jax.numpy as jnp
+    B, S = 8, 16
+    tok = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0, 250)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
+
+    ref_losses, _ = _train_losses(
+        arch_name, dict(mode="tesseract", data=1, depth=1, rows=1, cols=1),
+        batch)
+    assert np.all(np.isfinite(ref_losses))
+    for name, variant in PARALLEL_VARIANTS.items():
+        losses, _ = _train_losses(arch_name, variant, batch)
+        np.testing.assert_allclose(losses, ref_losses, rtol=2e-4, atol=2e-4,
+                                   err_msg=f"{arch_name}/{name}")
+        print(f"  {arch_name}/{name}: losses match ref {losses}")
+    print(f"PASS dense_parity[{arch_name}]")
+
+
+def check_inop_matches_deferred():
+    import jax, jax.numpy as jnp
+    B, S = 8, 16
+    tok = jax.random.randint(jax.random.PRNGKey(9), (B, S), 0, 250)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
+    base = dict(mode="tesseract", data=1, depth=2, rows=2, cols=2)
+    l_inop, _ = _train_losses("yi-6b", dict(base, reduce_dgrad_in_op=True), batch)
+    l_def, _ = _train_losses("yi-6b", dict(base, reduce_dgrad_in_op=False), batch)
+    np.testing.assert_allclose(l_inop, l_def, rtol=1e-5, atol=1e-6)
+    print("PASS inop_matches_deferred")
+
+
+def check_decode_parity(arch_name="yi-6b"):
+    import jax, jax.numpy as jnp
+    from repro.configs.base import ShapeSpec
+    from repro.runtime.steps import build_decode_step
+    B, S = 8, 32
+
+    def run_variant(variant):
+        arch, run, ctx, mesh, model = _build(arch_name, variant)
+        shape = ShapeSpec("d", seq_len=S, global_batch=B, kind="decode")
+        bundle = build_decode_step(model, mesh, shape)
+        params = model.init(jax.random.PRNGKey(0))
+        cache_sds, _ = model.cache_abstract(B, S, bundle.plan)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_sds)
+        ids = jnp.arange(B, dtype=jnp.int32)[:, None] % 100
+        out = [np.asarray(ids).ravel()]
+        for t in range(3):
+            ids, cache = bundle.fn(params, cache, ids, jnp.int32(t))
+            out.append(np.asarray(ids).ravel())
+        return np.stack(out)
+
+    ref = run_variant(dict(mode="tesseract", data=1, depth=1, rows=1, cols=1))
+    for name, variant in PARALLEL_VARIANTS.items():
+        got = run_variant(variant)
+        np.testing.assert_array_equal(got, ref, err_msg=f"{arch_name}/{name}")
+        print(f"  decode {arch_name}/{name}: ids match")
+    print(f"PASS decode_parity[{arch_name}]")
+
+
+def check_prefill_parity(arch_name="yi-6b"):
+    import jax, jax.numpy as jnp
+    from repro.configs.base import ShapeSpec
+    from repro.runtime.steps import build_prefill_step
+    B, S = 4, 16
+
+    def run_variant(variant):
+        arch, run, ctx, mesh, model = _build(arch_name, variant)
+        shape = ShapeSpec("p", seq_len=S, global_batch=B, kind="prefill")
+        bundle = build_prefill_step(model, mesh, shape)
+        params = model.init(jax.random.PRNGKey(0))
+        tok = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0, 250)
+        ids, cache = bundle.fn(params, {"tokens": tok})
+        return np.asarray(ids), np.asarray(cache["k"]), np.asarray(cache["v"])
+
+    ref = run_variant(dict(mode="tesseract", data=1, depth=1, rows=1, cols=1))
+    for name, variant in PARALLEL_VARIANTS.items():
+        got = run_variant(variant)
+        np.testing.assert_array_equal(got[0], ref[0], err_msg=f"ids {name}")
+        np.testing.assert_allclose(got[1], ref[1], rtol=1e-4, atol=1e-5,
+                                   err_msg=f"cache-k {name}")
+        np.testing.assert_allclose(got[2], ref[2], rtol=1e-4, atol=1e-5,
+                                   err_msg=f"cache-v {name}")
+        print(f"  prefill {arch_name}/{name}: ids+cache match")
+    print(f"PASS prefill_parity[{arch_name}]")
+
+
+def check_moe_parity():
+    """MoE (EP over depth) + MLA parity vs single device.
+
+    capacity_factor is set high enough that no tokens are dropped — with
+    drops, routing depends on the per-group token count and parity cannot
+    hold bitwise (documented behaviour)."""
+    import jax, jax.numpy as jnp
+    run_kw = dict(capacity_factor=16.0)
+    B, S = 8, 16
+    tok = jax.random.randint(jax.random.PRNGKey(11), (B, S), 0, 250)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
+    variants = {
+        "tesseract_222": dict(mode="tesseract", data=1, depth=2, rows=2, cols=2),
+        "summa2d_22_dp2": dict(mode="summa2d", data=2, depth=1, rows=2, cols=2),
+    }
+    for arch in ("llama4-scout-17b-a16e", "deepseek-v2-236b"):
+        ref, _ = _train_losses(
+            arch, dict(mode="tesseract", data=1, depth=1, rows=1, cols=1),
+            batch, run_kw=run_kw)
+        assert np.all(np.isfinite(ref))
+        for name, v in variants.items():
+            losses, _ = _train_losses(arch, v, batch, run_kw=run_kw)
+            np.testing.assert_allclose(losses, ref, rtol=3e-4, atol=3e-4,
+                                       err_msg=f"{arch}/{name}")
+            print(f"  {arch}/{name}: losses match ref {losses}")
+    print("PASS moe_parity")
+
+
+def check_moe_decode():
+    import jax, jax.numpy as jnp
+    from repro.configs.base import ShapeSpec
+    from repro.runtime.steps import build_decode_step
+    B, S = 8, 32
+
+    def run_variant(arch, variant):
+        _, run, ctx, mesh, model = _build(arch, variant,
+                                          dict(capacity_factor=16.0))
+        shape = ShapeSpec("d", seq_len=S, global_batch=B, kind="decode")
+        bundle = build_decode_step(model, mesh, shape)
+        params = model.init(jax.random.PRNGKey(0))
+        cache_sds, _ = model.cache_abstract(B, S, bundle.plan)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_sds)
+        ids = jnp.arange(B, dtype=jnp.int32)[:, None] % 100
+        out = []
+        for t in range(3):
+            ids, cache = bundle.fn(params, cache, ids, jnp.int32(t))
+            out.append(np.asarray(ids).ravel())
+        return np.stack(out)
+
+    for arch in ("llama4-scout-17b-a16e", "deepseek-v2-236b"):
+        ref = run_variant(arch, dict(mode="tesseract", data=1, depth=1,
+                                     rows=1, cols=1))
+        got = run_variant(arch, dict(mode="tesseract", data=1, depth=2,
+                                     rows=2, cols=2))
+        np.testing.assert_array_equal(got, ref, err_msg=arch)
+        print(f"  moe decode {arch}: ids match")
+    print("PASS moe_decode")
+
+
+def check_smollm_padding():
+    """Head padding (15->16) + replicated KV (5) parity."""
+    check_dense_parity("smollm-360m")
+    print("PASS smollm_padding")
+
+
+def check_families_parity():
+    """vision / whisper / ssm / hybrid: train-loss parity vs 1 device."""
+    import jax, jax.numpy as jnp
+    B, S = 8, 16
+    tok = jax.random.randint(jax.random.PRNGKey(13), (B, S), 0, 250)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
+    variants = {
+        "tesseract_222": dict(mode="tesseract", data=1, depth=2, rows=2, cols=2),
+        "summa2d_22_dp2": dict(mode="summa2d", data=2, depth=1, rows=2, cols=2),
+    }
+    for arch in ("llama-3.2-vision-11b", "whisper-base", "mamba2-1.3b",
+                 "recurrentgemma-9b"):
+        ref, _ = _train_losses(
+            arch, dict(mode="tesseract", data=1, depth=1, rows=1, cols=1),
+            batch)
+        assert np.all(np.isfinite(ref)), (arch, ref)
+        for name, v in variants.items():
+            losses, _ = _train_losses(arch, v, batch)
+            np.testing.assert_allclose(losses, ref, rtol=5e-4, atol=5e-4,
+                                       err_msg=f"{arch}/{name}")
+            print(f"  {arch}/{name}: losses match ref {losses}")
+    print("PASS families_parity")
+
+
+def check_families_serve():
+    """prefill (distributed scans!) + decode parity for the new families."""
+    import jax, jax.numpy as jnp
+    from repro.configs.base import ShapeSpec
+    from repro.runtime.steps import build_decode_step, build_prefill_step
+    B, S = 4, 16
+    archs = ("llama-3.2-vision-11b", "whisper-base", "mamba2-1.3b",
+             "recurrentgemma-9b")
+
+    def run_prefill(arch, variant):
+        _, run, ctx, mesh, model = _build(arch, variant)
+        shape = ShapeSpec("p", seq_len=S, global_batch=B, kind="prefill")
+        bundle = build_prefill_step(model, mesh, shape)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = _make_batch(model, shape, jax.random.PRNGKey(5), train=False)
+        ids, cache = bundle.fn(params, batch)
+        flat = [np.asarray(x) for x in jax.tree.leaves(cache)]
+        return np.asarray(ids), flat
+
+    def run_decode(arch, variant):
+        _, run, ctx, mesh, model = _build(arch, variant)
+        shape = ShapeSpec("d", seq_len=24, global_batch=8, kind="decode")
+        bundle = build_decode_step(model, mesh, shape)
+        params = model.init(jax.random.PRNGKey(0))
+        cache_sds, _ = model.cache_abstract(8, 24, bundle.plan)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_sds)
+        ids = jnp.arange(8, dtype=jnp.int32)[:, None] % 100
+        out = []
+        for t in range(3):
+            ids, cache = bundle.fn(params, cache, ids, jnp.int32(t))
+            out.append(np.asarray(ids).ravel())
+        return np.stack(out)
+
+    one = dict(mode="tesseract", data=1, depth=1, rows=1, cols=1)
+    multi = dict(mode="tesseract", data=1, depth=2, rows=2, cols=2)
+    for arch in archs:
+        ids0, c0 = run_prefill(arch, one)
+        ids1, c1 = run_prefill(arch, multi)
+        np.testing.assert_array_equal(ids1, ids0, err_msg=f"prefill ids {arch}")
+        for a, b in zip(c0, c1):
+            np.testing.assert_allclose(b, a, rtol=2e-3, atol=2e-3,
+                                       err_msg=f"prefill cache {arch}")
+        d0 = run_decode(arch, one)
+        d1 = run_decode(arch, multi)
+        np.testing.assert_array_equal(d1, d0, err_msg=f"decode {arch}")
+        print(f"  serve parity {arch}: ok")
+    print("PASS families_serve")
+
+
+def check_zero1_parity():
+    """ZeRO-1 (opt state sharded over data*depth) must match baseline."""
+    import jax, jax.numpy as jnp
+    B, S = 8, 16
+    tok = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0, 250)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
+    v = dict(mode="tesseract", data=2, depth=1, rows=2, cols=2)
+    ref, _ = _train_losses("yi-6b", v, batch, n_steps=4)
+    got, _ = _train_losses("yi-6b", v, batch, n_steps=4,
+                           run_kw=dict(zero1=True))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+    print("PASS zero1_parity", got)
+
+
+def check_moe_local_layout():
+    """Expert-local (beyond-paper) MoE layout == 2d layout numerics."""
+    import jax, jax.numpy as jnp
+    B, S = 8, 16
+    tok = jax.random.randint(jax.random.PRNGKey(11), (B, S), 0, 250)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
+    for arch in ("llama4-scout-17b-a16e", "deepseek-v2-236b"):
+        ref, _ = _train_losses(
+            arch, dict(mode="tesseract", data=1, depth=1, rows=1, cols=1),
+            batch, run_kw=dict(capacity_factor=16.0))
+        got, _ = _train_losses(
+            arch, dict(mode="tesseract", data=1, depth=2, rows=2, cols=2),
+            batch,
+            run_kw=dict(capacity_factor=16.0, moe_expert_layout="local"))
+        np.testing.assert_allclose(got, ref, rtol=3e-4, atol=3e-4)
+        print(f"  moe local layout {arch}: match")
+    print("PASS moe_local_layout")
+
+
+CHECKS = {
+    "summa_exact": check_summa_exact,
+    "dense_parity": check_dense_parity,
+    "inop_matches_deferred": check_inop_matches_deferred,
+    "decode_parity": check_decode_parity,
+    "prefill_parity": check_prefill_parity,
+    "smollm_padding": check_smollm_padding,
+    "moe_parity": check_moe_parity,
+    "moe_decode": check_moe_decode,
+    "families_parity": check_families_parity,
+    "families_serve": check_families_serve,
+    "zero1_parity": check_zero1_parity,
+    "moe_local_layout": check_moe_local_layout,
+}
+
+
+def main():
+    name = sys.argv[1]
+    if name == "all":
+        for n, fn in CHECKS.items():
+            fn()
+    else:
+        CHECKS[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Pallas kernels vs pure-jnp oracles, interpret mode, shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import flash_attention_op, ssd_intra_op, tesseract_mm_op
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("T,E,F,G", [
+    (1, 256, 512, 256), (2, 256, 512, 256), (4, 512, 1024, 512),
+    (2, 512, 512, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tesseract_mm(T, E, F, G, dtype):
+    a = jax.random.normal(KEY, (T, E, F), jnp.float32).astype(dtype)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (T, F, G),
+                          jnp.float32).astype(dtype)
+    got = tesseract_mm_op(a, b)
+    want = ref.tesseract_mm_ref(a, b)
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,H,Tq,Tk,D,causal", [
+    (1, 2, 256, 256, 64, True),
+    (2, 1, 512, 512, 128, True),
+    (1, 2, 256, 512, 64, False),
+    (1, 1, 512, 256, 64, False),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, H, Tq, Tk, D, causal, dtype):
+    q = jax.random.normal(KEY, (B, H, Tq, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (B, H, Tk, D),
+                          jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (B, H, Tk, D),
+                          jnp.float32).astype(dtype)
+    got = flash_attention_op(q, k, v, causal=causal)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 3e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,nc,Q,H,P,N", [
+    (1, 2, 64, 4, 32, 16), (2, 1, 128, 2, 64, 32), (1, 1, 256, 2, 64, 128),
+])
+def test_ssd_intra(B, nc, Q, H, P, N):
+    x = jax.random.normal(KEY, (B, nc, Q, H, P), jnp.float32)
+    la = -jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 4),
+                                    (B, nc, Q, H))) * 0.1
+    Bm = jax.random.normal(jax.random.fold_in(KEY, 5), (B, nc, Q, N))
+    Cm = jax.random.normal(jax.random.fold_in(KEY, 6), (B, nc, Q, N))
+    gy, gs = ssd_intra_op(x, la, Bm, Cm)
+    wy, ws = ref.ssd_intra_ref(x, la, Bm, Cm)
+    np.testing.assert_allclose(gy, wy, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(gs, ws, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_pallas_matches_jnp():
+    """ssd_chunked(use_pallas=True) must equal the pure-jnp path."""
+    from repro.models.ssm import ssd_chunked
+    B, T, H, P, N = 2, 128, 4, 32, 16
+    x = jax.random.normal(KEY, (B, T, H, P), jnp.float32)
+    la = -jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 7), (B, T, H))) * 0.1
+    Bm = jax.random.normal(jax.random.fold_in(KEY, 8), (B, T, N))
+    Cm = jax.random.normal(jax.random.fold_in(KEY, 9), (B, T, N))
+    y0, h0, a0 = ssd_chunked(x, la, Bm, Cm, 32, use_pallas=False)
+    y1, h1, a1 = ssd_chunked(x, la, Bm, Cm, 32, use_pallas=True)
+    np.testing.assert_allclose(y1, y0, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(h1, h0, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    """Chunked SSD == step-by-step linear recurrence."""
+    from repro.models.ssm import ssd_chunked
+    B, T, H, P, N = 1, 64, 2, 16, 8
+    x = jax.random.normal(KEY, (B, T, H, P), jnp.float32)
+    la = -jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 10), (B, T, H))) * 0.2
+    Bm = jax.random.normal(jax.random.fold_in(KEY, 11), (B, T, N))
+    Cm = jax.random.normal(jax.random.fold_in(KEY, 12), (B, T, N))
+    y, h_last, _ = ssd_chunked(x, la, Bm, Cm, 16)
+    # naive
+    h = np.zeros((B, H, P, N), np.float32)
+    ys = []
+    a = np.exp(np.asarray(la))
+    for t in range(T):
+        h = a[:, t][:, :, None, None] * h + np.einsum(
+            "bhp,bn->bhpn", np.asarray(x[:, t]), np.asarray(Bm[:, t]))
+        ys.append(np.einsum("bn,bhpn->bhp", np.asarray(Cm[:, t]), h))
+    y_naive = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y, np.float32), y_naive,
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h_last), h, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,37 @@
+"""Multi-device correctness: each test spawns a subprocess with 8 fake CPU
+devices (XLA_FLAGS is never set in this process — smoke tests see 1 device,
+per the harness requirement)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+CHECKS = [
+    "summa_exact",
+    "dense_parity",
+    "inop_matches_deferred",
+    "decode_parity",
+    "prefill_parity",
+    "smollm_padding",
+    "moe_parity",
+    "moe_decode",
+    "families_parity",
+    "families_serve",
+    "zero1_parity",
+    "moe_local_layout",
+]
+
+
+@pytest.mark.parametrize("check", CHECKS)
+def test_mdcheck(check):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.testing.mdchecks", check],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert r.returncode == 0, f"{check} failed:\n{r.stdout[-3000:]}\n{r.stderr[-3000:]}"
+    assert f"PASS" in r.stdout

@@ -1,0 +1,178 @@
+"""Substrate tests: optimizer, checkpoint manager, data pipeline,
+straggler detection, elastic replan, HLO structural analysis."""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.core.api import ParallelContext
+from repro.data.pipeline import SyntheticLMStream
+from repro.optim import adamw
+from repro.roofline.hlo import analyze_hlo
+from repro.runtime.elastic import replan
+from repro.runtime.stragglers import StragglerMonitor
+
+
+# ----------------------------------------------------------------- optimizer
+
+def test_adamw_decreases_quadratic():
+    w = {"w": jnp.array([3.0, -2.0])}
+    st = adamw.adamw_init(w)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(w)
+        w, st = adamw.adamw_update(w, g, st, lr=0.05)
+    assert float(loss(w)) < 1e-2
+
+
+def test_adamw_master_weights_bf16():
+    w = {"w": jnp.ones((4,), jnp.bfloat16)}
+    st = adamw.adamw_init(w, master=True)
+    g = {"w": jnp.full((4,), 1e-3, jnp.float32)}
+    w2, st2 = adamw.adamw_update(w, g, st, lr=1e-4)
+    assert w2["w"].dtype == jnp.bfloat16
+    assert st2["master"]["w"].dtype == jnp.float32
+    # master accumulates sub-bf16 updates
+    assert not np.allclose(np.asarray(st2["master"]["w"]), 1.0)
+
+
+def test_lamb_runs():
+    w = {"w": jnp.array([3.0, -2.0])}
+    st = adamw.adamw_init(w)
+    g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(w)
+    w2, _ = adamw.lamb_update(w, g, st, lr=0.1)
+    assert np.all(np.isfinite(np.asarray(w2["w"])))
+
+
+def test_cosine_lr():
+    lrs = [float(adamw.cosine_lr(jnp.int32(s), base_lr=1.0, warmup=10,
+                                 total=100)) for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0 and lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0, abs=0.1)
+    assert lrs[-1] == pytest.approx(0.1, abs=0.02)
+
+
+# ---------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+    state = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+             "nested": {"b": jnp.ones((4,), jnp.bfloat16)}}
+    mgr.save(3, state)
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    shardings = jax.tree.map(
+        lambda x: jax.sharding.SingleDeviceSharding(jax.devices()[0]), state)
+    got = mgr.restore(3, abstract, shardings)
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(state["a"]))
+    assert got["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+    s = {"a": jnp.zeros((2,))}
+    for step in (1, 5, 9):
+        mgr.save(step, s)
+    assert mgr.all_steps() == [5, 9]
+    assert mgr.latest_step() == 9
+
+
+def test_checkpoint_partial_write_ignored(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3, async_save=False)
+    mgr.save(2, {"a": jnp.zeros((2,))})
+    # simulate a crash mid-write: tmp dir without manifest
+    (pathlib.Path(tmp_path) / ".tmp-7").mkdir()
+    (pathlib.Path(tmp_path) / "step_00000007").mkdir()
+    assert mgr.latest_step() == 2
+
+
+# ---------------------------------------------------------------------- data
+
+def test_stream_deterministic():
+    s1 = SyntheticLMStream(100, 4, 8, seed=3)
+    s2 = SyntheticLMStream(100, 4, 8, seed=3)
+    b1, b2 = s1.batch(17), s2.batch(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(s1.batch(18)["tokens"], b1["tokens"])
+
+
+# ----------------------------------------------------------------- straggler
+
+def test_straggler_detection():
+    mon = StragglerMonitor(window=10, threshold=3.0)
+    rng = np.random.default_rng(0)
+    for t in range(10):
+        for host in range(8):
+            mon.record(host, 1.0 + 0.01 * rng.standard_normal())
+        mon.record(8, 2.5 + 0.01 * rng.standard_normal())  # slow host
+    assert mon.stragglers() == [8]
+
+
+def test_straggler_no_false_positive():
+    mon = StragglerMonitor(window=10, threshold=4.0)
+    rng = np.random.default_rng(0)
+    for t in range(10):
+        for host in range(8):
+            mon.record(host, 1.0 + 0.05 * rng.standard_normal())
+    assert mon.stragglers() == []
+
+
+# ------------------------------------------------------------------- elastic
+
+def test_replan_shrinks_data_axis():
+    ctx = ParallelContext(mode="tesseract", data=16, depth=4, rows=2, cols=2)
+    r = replan(15 * 16, ctx, global_batch=256)
+    assert r.ctx.tp == 16 and r.ctx.data <= 15
+    assert r.n_used == r.ctx.data * 16
+    assert 256 % (r.ctx.data * r.ctx.depth * r.ctx.rows) == 0
+
+
+def test_replan_too_few_devices():
+    ctx = ParallelContext(mode="tesseract", data=1, depth=4, rows=2, cols=2)
+    with pytest.raises(RuntimeError):
+        replan(8, ctx, global_batch=32)
+
+
+# ---------------------------------------------------------------- hlo parser
+
+def test_hlo_scan_flops_multiplied():
+    from jax import lax
+
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        y, _ = lax.scan(body, x, ws)
+        return y
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((7, 64, 64), jnp.float32)).compile()
+    res = analyze_hlo(comp.as_text(), 1)
+    assert res["flops"] == 7 * 2 * 64 ** 3
+
+
+def test_hlo_nested_scan():
+    from jax import lax
+    ws2 = jnp.ones((5, 64, 64), jnp.float32)
+
+    def g(x, ws):
+        def outer(c, wo):
+            def inner(ci, w):
+                return ci @ w, None
+            y, _ = lax.scan(inner, c, ws2)
+            return y @ wo, None
+        y, _ = lax.scan(outer, x, ws)
+        return y
+
+    comp = jax.jit(g).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((3, 64, 64), jnp.float32)).compile()
+    res = analyze_hlo(comp.as_text(), 1)
+    assert res["flops"] == (3 * 5 + 3) * 2 * 64 ** 3
