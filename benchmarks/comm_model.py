@@ -108,6 +108,149 @@ LINK_BW = 50e9
 HOP_LATENCY = 5e-6   # per ring hop (message latency; differentiates large q)
 
 
+# --------------------------------------------------------------------------
+# schedule-aware matmul cost model: fused all-gather vs overlapped ring
+# (core/summa.py matmul_schedule, DESIGN.md §2b).
+#
+# Accounting assumptions (both schedules, stated in DESIGN.md §2b):
+#   * WEIGHT movement (W gathers / W ring streams) is prefetchable — weights
+#     exist before the step runs, so a double-buffered prefetch hides those
+#     bytes behind earlier compute.  Weight-GRADIENT movement is produced
+#     in-step and cannot prefetch.
+#   * ACTIVATION movement cannot prefetch (produced by the preceding op).
+#
+# fused : activation gathers / reduce-scatters serialize with the einsums —
+#         every activation wire byte is EXPOSED, and the backward holds the
+#         re-gathered A and the [q, ...] dA/dW partial stacks concurrently:
+#         peak schedule temporaries are O(q · block).
+# ring  : per SUMMA step one block pair is in flight while the MXU contracts
+#         the resident pair; per-step exposed communication is
+#         max(0, t_comm_step - t_compute_step).  Only the Cannon skew /
+#         final unskew of activation-sized blocks is unconditionally
+#         exposed.  Peak resident schedule temporaries are 2 blocks per
+#         operand (resident + in-flight) regardless of q — the two-pass
+#         ring backward (core/summa.py) never materializes a [q, ...]
+#         stack.
+#
+# Consequences the model surfaces (and the tests pin):
+#   * peak memory: ring < fused for every q >= 2 in training (2·(a+w) vs
+#     q·(2a+w)); equal at q=2 for inference-only.
+#   * exposed comm: ring wins when per-step arithmetic intensity clears the
+#     machine balance (large g_loc — big models / small q) and for q >= 4;
+#     at q=2 a ring shift IS the fused exchange plus a skew, so the model
+#     honestly recommends fused ("ring_wins": False).
+# --------------------------------------------------------------------------
+
+@dataclass
+class ScheduleCost:
+    schedule: str
+    comm_bytes: float           # total wire bytes per device
+    compute_s: float            # MXU time per device
+    exposed_comm_s: float       # communication time NOT hidden by compute
+    peak_gathered_bytes: float  # resident gathered/streamed operand bytes
+
+    @property
+    def total_s(self) -> float:
+        return self.compute_s + self.exposed_comm_s
+
+
+def _matmul_cost(e_loc: float, fin: int, fout: int, q: int,
+                 *, schedule: str, train: bool, cache_w: bool,
+                 dtype_bytes: int, peak: float = PEAK,
+                 bw: float = LINK_BW, hop: float = HOP_LATENCY) -> ScheduleCost:
+    """Cost of ONE Tesseract matmul (fwd, + both bwd contractions if train)."""
+    a_blk = e_loc * fin / q * dtype_bytes            # [E_loc, F_loc]
+    w_blk = fin * fout / (q * q) * dtype_bytes       # [F_loc, G_loc]
+    step_flops = 2.0 * e_loc * (fin / q) * (fout / q)
+    step_comp = step_flops / peak
+    fwd_comp = q * step_comp
+    bwd_comp = 2.0 * fwd_comp                        # dA + dW contractions
+
+    if schedule == "fused":
+        fwd_bytes = (q - 1) * (a_blk + w_blk)        # AG_A(col) + AG_W(row)
+        exposed = (q - 1) * a_blk / bw + (q - 1) * hop
+        comm = fwd_bytes
+        comp = fwd_comp
+        if train:
+            ag_a = (q - 1) * a_blk                   # re-gather A for dW
+            ag_w = 0.0 if cache_w else (q - 1) * w_blk  # prefetchable
+            rs_da = (q - 1) * a_blk                  # RS dA(col): act grads
+            rs_dw = (q - 1) * w_blk                  # RS dW(row): wgt grads
+            comm += ag_a + ag_w + rs_da + rs_dw
+            # gradients are produced in-step: nothing to prefetch
+            exposed += (ag_a + rs_da + rs_dw) / bw + 3 * (q - 1) * hop
+            comp += bwd_comp
+        # Peak schedule temporaries: fwd holds the two q-gathered operands;
+        # the train bwd holds the re-gathered A and the [q, ...] dA / dW
+        # partial stacks concurrently.
+        peak_bytes = q * (2 * a_blk + w_blk) if train else q * (a_blk + w_blk)
+        return ScheduleCost("fused", comm, comp, exposed, peak_bytes)
+
+    if schedule != "ring":
+        raise ValueError(f"unknown schedule {schedule!r}")
+    if q == 1:
+        comp = fwd_comp + (bwd_comp if train else 0.0)
+        return ScheduleCost("ring", 0.0, comp, 0.0, a_blk + w_blk)
+    # forward: A skew (pipeline fill) exposed; W skew/stream prefetched;
+    # the (q-1) in-flight A shifts overlap with the step contractions.
+    comm = q * (a_blk + w_blk)                       # skews + (q-1) shifts
+    exposed = a_blk / bw + hop \
+        + (q - 1) * max(0.0, a_blk / bw + hop - step_comp)
+    comp = fwd_comp
+    if train:
+        # two-pass bwd: dA pass (W stream prefetched, dA pieces ride the col
+        # accumulator ring), then dW pass (A re-streamed, dW pieces ride the
+        # row accumulator ring).  Accumulator shifts overlap with the next
+        # step's contraction; only the final fixup shifts are exposed.
+        comm += 2.0 * q * (a_blk + w_blk)
+        exposed += (q - 1) * max(0.0, a_blk / bw + hop - step_comp) \
+            + a_blk / bw + hop                       # dA fixup
+        exposed += a_blk / bw + hop \
+            + (q - 1) * max(0.0, (a_blk + w_blk) / bw + hop - step_comp) \
+            + w_blk / bw + hop                       # A skew + dW fixup
+        comp += bwd_comp
+    # Resident + in-flight block per stream; the two-pass bwd never holds
+    # more than one stream + one accumulator ring — O(1) in q.
+    peak_bytes = 2 * (a_blk + w_blk)
+    return ScheduleCost("ring", comm, comp, exposed, peak_bytes)
+
+
+def schedule_layer_cost(d: LayerDims, q: int, depth: int, data: int, *,
+                        schedule: str, train: bool = True,
+                        cache_w: bool = True) -> ScheduleCost:
+    """Aggregate ScheduleCost over the transformer layer's matmuls."""
+    e_loc = d.b * d.s / (data * depth * q)
+    comm = comp = exposed = 0.0
+    peak_g = 0.0
+    for (fin, fout) in _linears(d):
+        c = _matmul_cost(e_loc, fin, fout, q, schedule=schedule, train=train,
+                         cache_w=cache_w, dtype_bytes=d.dtype_bytes)
+        comm += c.comm_bytes
+        comp += c.compute_s
+        exposed += c.exposed_comm_s
+        peak_g = max(peak_g, c.peak_gathered_bytes)
+    return ScheduleCost(schedule, comm, comp, exposed, peak_g)
+
+
+def ring_vs_fused(d: LayerDims, q: int, depth: int, data: int, *,
+                  train: bool = True) -> dict:
+    """Side-by-side schedule comparison for a layer; the analytic answer to
+    'when does ring beat fused for this (q, depth, shape)?'."""
+    fused = schedule_layer_cost(d, q, depth, data, schedule="fused",
+                                train=train)
+    ring = schedule_layer_cost(d, q, depth, data, schedule="ring",
+                               train=train)
+    return {
+        "fused": fused, "ring": ring,
+        "exposed_comm_ratio": (ring.exposed_comm_s / fused.exposed_comm_s
+                               if fused.exposed_comm_s else 1.0),
+        "peak_memory_ratio": (ring.peak_gathered_bytes
+                              / fused.peak_gathered_bytes
+                              if fused.peak_gathered_bytes else 1.0),
+        "ring_wins": ring.total_s < fused.total_s,
+    }
+
+
 def layer_flops(d: LayerDims, train: bool = True) -> float:
     f = 0.0
     for (fin, fout) in _linears(d):
@@ -132,9 +275,22 @@ def layer_hops(mode: str, shape, train: bool = True) -> float:
 
 
 def modeled_layer_time(mode: str, d: LayerDims, shape, data: int = 1,
-                       train: bool = True) -> float:
+                       train: bool = True, schedule: str = "fused") -> float:
     p = math.prod(shape)
-    comm = layer_bytes(mode, d, shape, data, train=train)
     comp = layer_flops(d, train=train) / (p * data * PEAK)
+    if mode != "megatron1d" and schedule == "ring":
+        q, _, depth = shape
+        c = schedule_layer_cost(d, q, depth, data, schedule="ring",
+                                train=train)
+        # the depth all-reduce of dW is schedule-independent (it reduces
+        # over the replicated depth copies, not the [q, q] grid) — charge
+        # it exactly as layer_bytes does for the fused path.
+        ar_depth_s = 0.0
+        if train and depth > 1:
+            ar_bytes = sum(2 * (depth - 1) / depth * fin * fout / (q * q)
+                           for fin, fout in _linears(d)) * d.dtype_bytes
+            ar_depth_s = ar_bytes / LINK_BW + 2 * (depth - 1) * HOP_LATENCY
+        return comp + c.exposed_comm_s + ar_depth_s
+    comm = layer_bytes(mode, d, shape, data, train=train)
     lat = layer_hops(mode, shape, train) * HOP_LATENCY
     return comp + comm / LINK_BW + lat

@@ -95,6 +95,45 @@ def bench_measured_strong():
              f"final_loss={d['final_loss']:.4f}")
 
 
+def bench_matmul_schedules():
+    """Fused vs ring SUMMA schedule: measured host wall-clock (interpret /
+    CPU collectives — indicative) + the analytic overlap model, persisted to
+    BENCH_matmul.json as the start of the schedule perf trajectory."""
+    measured = _sub("matmul_schedules")
+    for sched in ("fused", "ring"):
+        _row(f"matmul_schedule/{sched}", measured[sched]["us_per_call"],
+             f"loss={measured[sched]['loss']:.2f} (8 fake CPU devices)")
+    assert measured["losses_match"], measured
+
+    analytic = {}
+    big = comm_model.LayerDims(b=256, s=4096, h=16384, ff=53248, heads=128,
+                               kv_heads=8, head_dim=128, glu=True)
+    for q, depth, data in [(2, 4, 8), (4, 4, 8), (8, 1, 8)]:
+        r = comm_model.ring_vs_fused(big, q, depth, data=data, train=True)
+        key = f"q{q}_d{depth}_dp{data}"
+        analytic[key] = {
+            "fused_exposed_comm_ms": r["fused"].exposed_comm_s * 1e3,
+            "ring_exposed_comm_ms": r["ring"].exposed_comm_s * 1e3,
+            "fused_peak_gathered_mib": r["fused"].peak_gathered_bytes / 2**20,
+            "ring_peak_gathered_mib": r["ring"].peak_gathered_bytes / 2**20,
+            "ring_wins": r["ring_wins"],
+        }
+        _row(f"matmul_schedule/analytic/{key}", 0.0,
+             f"exposed {r['fused'].exposed_comm_s*1e3:.1f}->"
+             f"{r['ring'].exposed_comm_s*1e3:.1f}ms "
+             f"peak {r['fused'].peak_gathered_bytes/2**20:.0f}->"
+             f"{r['ring'].peak_gathered_bytes/2**20:.0f}MiB "
+             f"ring_wins={r['ring_wins']}")
+
+    out = HERE.parent / "BENCH_matmul.json"
+    payload = {"measured_cpu_interpret": measured, "analytic_v5e": analytic,
+               "note": "measured: 8 fake CPU host devices, wall-clock "
+                       "indicative only; analytic: benchmarks/comm_model.py "
+                       "overlap model (DESIGN.md §2b)"}
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    _row("matmul_schedule/written", 0.0, str(out))
+
+
 def bench_roofline_summary():
     res = HERE / "results" / "dryrun"
     if not res.exists():
@@ -116,6 +155,7 @@ def main() -> None:
     bench_table2()
     bench_roofline_summary()
     if not quick:
+        bench_matmul_schedules()
         bench_fig7_accuracy()
         bench_measured_strong()
 

@@ -19,6 +19,8 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.collectives import shard_map
+from repro.core.mesh import make_mesh
 from repro.runtime.pipeline import bubble_fraction, pipeline_apply
 
 S_PIPE, Q = 2, 2
@@ -26,9 +28,8 @@ M, MB, D = 8, 4, 64
 
 
 def main():
-    mesh = jax.make_mesh((S_PIPE, 1, 1, 1, Q),
-                         ("pipe", "data", "depth", "row", "col"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 5)
+    mesh = make_mesh((S_PIPE, 1, 1, 1, Q),
+                     ("pipe", "data", "depth", "row", "col"))
     ws = jax.random.normal(jax.random.PRNGKey(0), (S_PIPE, D, D)) * 0.2
     x = jax.random.normal(jax.random.PRNGKey(1), (M, MB, D))
     tgt = jax.random.normal(jax.random.PRNGKey(2), (M, MB, D))
@@ -47,7 +48,7 @@ def main():
         l = jnp.sum((outs - tl) ** 2) * (sid == S_PIPE - 1)
         return lax.psum(l, ("pipe", "col"))
 
-    sm = jax.shard_map(loss_fn, mesh=mesh,
+    sm = shard_map(loss_fn, mesh=mesh,
                        in_specs=(P("pipe", None, "col"),
                                  P(None, None, "col"),
                                  P(None, None, None)),

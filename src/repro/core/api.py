@@ -45,6 +45,13 @@ class ParallelContext:
     # matmul bwd: True reduces in bf16 (halves those collective bytes; the
     # local partial products are still fp32-accumulated).  Beyond-paper lever.
     dgrad_rs_bf16: bool = False
+    # SUMMA execution schedule of the Tesseract matmuls (DESIGN.md §2b):
+    #   "fused" — one all_gather per operand, then a single local einsum
+    #             (q× gathered-operand peak memory, zero overlap);
+    #   "ring"  — Cannon-style skewed double ring over (row, col): one
+    #             ppermute'd block per step contracted while the next block
+    #             is in flight (O(2·block) peak, comm/compute overlap).
+    matmul_schedule: str = "fused"
 
     # axis names (fixed; kept here so ops never hard-code strings)
     axis_data: str = AXIS_DATA
@@ -63,6 +70,14 @@ class ParallelContext:
                 raise ValueError("megatron1d uses rows=depth=1, cols=p")
         elif self.mode != "gspmd":
             raise ValueError(f"unknown mode {self.mode!r}")
+        if self.matmul_schedule not in ("fused", "ring"):
+            raise ValueError(
+                f"matmul_schedule must be 'fused' or 'ring', "
+                f"got {self.matmul_schedule!r}")
+        if self.matmul_schedule == "ring" and self.mode == "megatron1d":
+            raise ValueError(
+                "matmul_schedule='ring' is a SUMMA schedule; megatron1d "
+                "has no [q, q] grid to ring over")
 
     # ---- derived sizes ----
     @property

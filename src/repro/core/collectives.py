@@ -14,6 +14,49 @@ try:  # varying -> invariant gather (precise vma; values are identical copies)
 except ImportError:  # pragma: no cover - older jax
     _agi = None
 
+# Does this jax track varying-manifest axes (vma) on avals?  Pre-vma releases
+# (<= 0.4.x) have neither jax.typeof nor lax.pvary; the *_v helpers below fall
+# back to full physical reductions there (every call site in this repo reduces
+# values that physically vary over the listed axes, so the fallback is exact).
+HAS_VMA = hasattr(jax, "typeof") and hasattr(lax, "pvary")
+_HAS_VMA = HAS_VMA  # back-compat alias
+
+
+# ---------------------------------------------------------------------------
+# shard_map compat: jax.shard_map (new) -> jax.sharding.shard_map ->
+# jax.experimental.shard_map.shard_map (<= 0.4.x)
+# ---------------------------------------------------------------------------
+
+def _resolve_shard_map():
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn, True
+    fn = getattr(jax.sharding, "shard_map", None)
+    if fn is not None:
+        return fn, True
+    from jax.experimental.shard_map import shard_map as fn  # noqa: PLC0415
+    return fn, False
+
+
+_SHARD_MAP_IMPL, _SHARD_MAP_NEW = _resolve_shard_map()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kw):
+    """Version-portable ``jax.shard_map``.
+
+    On pre-vma jax the experimental implementation is used with
+    ``check_rep=False``: this codebase is written against vma semantics
+    (custom_vjp collectives, psum-of-masked-value broadcasts) for which the
+    old replication checker has no rules.
+    """
+    if _SHARD_MAP_NEW:
+        return _SHARD_MAP_IMPL(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, **kw)
+    kw.pop("check_vma", None)
+    kw.setdefault("check_rep", False)
+    return _SHARD_MAP_IMPL(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kw)
+
 
 def all_gather_inv(x, axes, *, axis=0, tiled=False):
     """all_gather whose output is vma-INVARIANT over the gathered axes
@@ -39,6 +82,8 @@ def pvary(x, axes):
     """
     if isinstance(axes, str):
         axes = (axes,)
+    if not _HAS_VMA:
+        return x  # no vma tracking: the annotation is a numerical no-op
     axes = tuple(a for a in axes if a not in vma_of(x))  # idempotent
     if not axes:
         return x
@@ -92,36 +137,51 @@ def vma_of(x) -> frozenset:
         return frozenset()
 
 
+def axis_size1(a) -> int:
+    """Static size of one named mesh axis (portable across jax versions)."""
+    try:
+        return lax.axis_size(a)
+    except AttributeError:  # pre-0.5 jax: psum of a literal folds to the size
+        return lax.psum(1, a)
+
+
+def _vary_axes(x, axes) -> tuple:
+    """Subset of ``axes`` that x varies on; all of them on pre-vma jax.
+
+    On pre-vma jax physical variance cannot be queried, so the reductions run
+    over every listed axis.  That is exact at every call site in this repo:
+    the psum_v inputs are genuine partial sums over those axes, and max / min
+    / mean of identical replicated copies are the copies themselves."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    if not _HAS_VMA:
+        return tuple(axes)
+    vma = vma_of(x)
+    return tuple(a for a in axes if a in vma)
+
+
 def psum_v(x, axes):
     """psum over the subset of ``axes`` that x actually varies on.
 
     Ops stay correct whether params were pvary'd (train: grad_sync boundary)
     or not (serve steps): reducing over an axis the value is replicated on
     would either error (vma) or double-count."""
-    if isinstance(axes, str):
-        axes = (axes,)
-    ax = tuple(a for a in axes if a in vma_of(x))
+    ax = _vary_axes(x, axes)
     return lax.psum(x, ax) if ax else x
 
 
 def pmax_v(x, axes):
-    if isinstance(axes, str):
-        axes = (axes,)
-    ax = tuple(a for a in axes if a in vma_of(x))
+    ax = _vary_axes(x, axes)
     return lax.pmax(x, ax) if ax else x
 
 
 def pmin_v(x, axes):
-    if isinstance(axes, str):
-        axes = (axes,)
-    ax = tuple(a for a in axes if a in vma_of(x))
+    ax = _vary_axes(x, axes)
     return lax.pmin(x, ax) if ax else x
 
 
 def pmean_v(x, axes):
-    if isinstance(axes, str):
-        axes = (axes,)
-    ax = tuple(a for a in axes if a in vma_of(x))
+    ax = _vary_axes(x, axes)
     return lax.pmean(x, ax) if ax else x
 
 
@@ -130,7 +190,7 @@ def axis_size(axes):
         axes = (axes,)
     s = 1
     for a in axes:
-        s *= lax.axis_size(a)
+        s *= axis_size1(a)
     return s
 
 
@@ -140,7 +200,7 @@ def axis_linear_index(axes):
         axes = (axes,)
     idx = jnp.int32(0)
     for a in axes:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        idx = idx * axis_size1(a) + lax.axis_index(a)
     return idx
 
 
@@ -204,7 +264,7 @@ def halo_exchange_left(x, axes, halo: int, axis: int):
     """
     if isinstance(axes, str):
         axes = (axes,)
-    sizes = [lax.axis_size(a) for a in axes]
+    sizes = [axis_size1(a) for a in axes]
     n = 1
     for s in sizes:
         n *= s

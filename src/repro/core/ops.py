@@ -143,6 +143,8 @@ class TesseractOps:
         return x  # canonical tesseract activations stay sharded through blocks
 
     def linear(self, x, w, b=None):
+        # ctx.matmul_schedule picks the SUMMA execution schedule inside the
+        # op: "fused" all-gathers, or the overlapped "ring" (DESIGN.md §2b).
         y = tesseract_matmul(self.ctx, x, w)
         if b is not None:
             y = y + b

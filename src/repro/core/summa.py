@@ -8,11 +8,25 @@ Layout (inside ``jax.shard_map`` over the logical mesh, per-device views):
                                           replicated over (data, depth)
     output      C : [..., E_loc, G_loc]   same layout class as A
 
-The paper's q broadcasts of A along each row of the [q, q] grid are fused into
-one ``all_gather`` over ``col``; the q broadcasts of W along each column fuse
-into one ``all_gather`` over ``row``; the SUMMA accumulation loop becomes a
-single local einsum over the gathered block index t (identical bytes, one
-fused collective instead of q serialized broadcasts — see DESIGN.md §2).
+Two execution schedules implement the same math (DESIGN.md §2 / §2b,
+selected by ``ParallelContext.matmul_schedule``):
+
+``fused`` — the paper's q broadcasts of A along each row of the [q, q] grid
+are fused into one ``all_gather`` over ``col``; the q broadcasts of W along
+each column fuse into one ``all_gather`` over ``row``; the SUMMA
+accumulation loop becomes a single local einsum over the gathered block
+index t (identical bytes, one fused collective instead of q serialized
+broadcasts).  Peak gathered-operand memory: O(q · block).
+
+``ring`` — Cannon-style skewed double ring: after one skew ppermute per
+operand, each of the q SUMMA steps contracts the resident (A, W) block pair
+while ``lax.ppermute`` streams the next pair around the ``col`` / ``row``
+rings (double buffering; on TPU the async collective-permute overlaps the
+MXU).  The C accumulator stays in fp32 and only TWO blocks per operand are
+ever resident — O(2 · block) peak.  The backward contractions ride the same
+rings: dA and dW partials are accumulated with shift-and-add rings (the ring
+form of reduce-scatter), so no q×-gathered operand materializes in bwd
+either.
 
 Backward follows the paper exactly:
     A' = C' W^T  : gather W over row, contract, reduce_scatter over col
@@ -23,7 +37,7 @@ Backward follows the paper exactly:
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +55,135 @@ def _einsum(subs, *args, ctx: ParallelContext, out_dtype):
     acc = _maybe_f32(ctx)
     out = jnp.einsum(subs, *args, preferred_element_type=acc)
     return out.astype(out_dtype)
+
+
+# --------------------------------------------------------------------------
+# Ring schedule machinery (matmul_schedule="ring", DESIGN.md §2b).
+#
+# Permutations over the [q, q] (row, col) grid.  ppermute over the axis
+# tuple ("row", "col") takes linearized indices i*q + j (first axis major).
+# The skews give device (i, j) the SUMMA block with feature index
+# t = (i + j) % q so that after s synchronized ring shifts BOTH resident
+# operands carry t = (i + j + s) % q — Cannon's initial alignment, which is
+# what lets a uniform ppermute replace the paper's per-step broadcasts.
+# --------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _perm_shift(q):
+    """Ring step: receive from the next device ((j+1) -> j)."""
+    return tuple((j, (j - 1) % q) for j in range(q))
+
+
+@lru_cache(maxsize=None)
+def _perm_skew_a(q):
+    """dst (i, j) <- src (i, (i+j) % q): row i rotates left by i."""
+    return tuple((i * q + (i + j) % q, i * q + j)
+                 for i in range(q) for j in range(q))
+
+
+@lru_cache(maxsize=None)
+def _perm_unskew_a(q):
+    return tuple((i * q + j, i * q + (i + j) % q)
+                 for i in range(q) for j in range(q))
+
+
+@lru_cache(maxsize=None)
+def _perm_skew_w(q):
+    """dst (i, j) <- src ((i+j) % q, j): column j rotates up by j."""
+    return tuple((((i + j) % q) * q + j, i * q + j)
+                 for i in range(q) for j in range(q))
+
+
+@lru_cache(maxsize=None)
+def _perm_unskew_w(q):
+    return tuple((i * q + j, ((i + j) % q) * q + j)
+                 for i in range(q) for j in range(q))
+
+
+def _rc(ctx):
+    return (ctx.axis_row, ctx.axis_col)
+
+
+def _skew_a(ctx, x):
+    return x if ctx.q == 1 else lax.ppermute(x, _rc(ctx), _perm_skew_a(ctx.q))
+
+
+def _unskew_a(ctx, x):
+    return x if ctx.q == 1 else lax.ppermute(x, _rc(ctx), _perm_unskew_a(ctx.q))
+
+
+def _skew_w(ctx, x):
+    return x if ctx.q == 1 else lax.ppermute(x, _rc(ctx), _perm_skew_w(ctx.q))
+
+
+def _unskew_w(ctx, x):
+    return x if ctx.q == 1 else lax.ppermute(x, _rc(ctx), _perm_unskew_w(ctx.q))
+
+
+def _shift_col(ctx, x):
+    return x if ctx.q == 1 else lax.ppermute(x, ctx.axis_col, _perm_shift(ctx.q))
+
+
+def _shift_row(ctx, x):
+    return x if ctx.q == 1 else lax.ppermute(x, ctx.axis_row, _perm_shift(ctx.q))
+
+
+def _ring_fwd(ctx, a, w, subs_step):
+    """C = sum_t A_t W_t via the skewed double ring; fp32 accumulator.
+
+    Per step: launch the next-block ppermutes, contract the resident pair
+    (XLA overlaps the async collective-permute with the einsum on TPU),
+    accumulate.  Only two blocks per operand are live at any time."""
+    q = ctx.q
+    a_cur = _skew_a(ctx, a)
+    w_cur = _skew_w(ctx, w)
+    acc = None
+    for s in range(q):
+        a_nxt = _shift_col(ctx, a_cur) if s < q - 1 else None
+        w_nxt = _shift_row(ctx, w_cur) if s < q - 1 else None
+        part = jnp.einsum(subs_step, a_cur, w_cur,
+                          preferred_element_type=_maybe_f32(ctx))
+        acc = part if acc is None else acc + part
+        a_cur, w_cur = a_nxt, w_nxt
+    return acc.astype(a.dtype)
+
+
+def _ring_bwd(ctx, a, w, dc, da_subs, dw_subs):
+    """dA and dW on the same rings (transpose of _ring_fwd), TWO passes.
+
+    The per-step cotangent pieces are pushed around shift-and-add
+    accumulator rings — the ring form of the fused schedule's
+    psum_scatters — so each device ends holding exactly its own dA / dW
+    block and no [q, ...] partial stack is ever resident.  Running the dA
+    pass (W stream) and the dW pass (A stream) sequentially keeps the peak
+    at two live blocks per operand (stream + accumulator), vs. the fused
+    backward's simultaneous re-gathered A and [q, ...] dA stack.  Final
+    single-shift + unskew undo the Cannon alignment."""
+    q = ctx.q
+    rs_dtype = jnp.bfloat16 if ctx.dgrad_rs_bf16 else jnp.float32
+
+    # pass 1 — dA: stream W around the row ring, dA pieces ride a col
+    # accumulator ring.
+    w_cur = _skew_w(ctx, w)
+    b_da = None
+    for s in range(q):
+        w_nxt = _shift_row(ctx, w_cur) if s < q - 1 else None
+        g = _einsum(da_subs, dc, w_cur, ctx=ctx, out_dtype=dc.dtype)
+        b_da = g if b_da is None else _shift_col(ctx, b_da) + g
+        w_cur = w_nxt
+    da = _unskew_a(ctx, _shift_col(ctx, b_da))
+
+    # pass 2 — dW: stream A around the col ring, dW pieces ride a row
+    # accumulator ring.
+    a_cur = _skew_a(ctx, a)
+    b_dw = None
+    for s in range(q):
+        a_nxt = _shift_col(ctx, a_cur) if s < q - 1 else None
+        h = _einsum(dw_subs, a_cur, dc, ctx=ctx, out_dtype=rs_dtype)
+        b_dw = h if b_dw is None else _shift_row(ctx, b_dw) + h
+        a_cur = a_nxt
+    dw = _unskew_w(ctx, _shift_row(ctx, b_dw))
+    return da, dw
 
 
 # --------------------------------------------------------------------------
@@ -65,6 +208,9 @@ def _gather_w(ctx, w):
 
 
 def _tess_fwd(ctx: ParallelContext, a, w):
+    if ctx.matmul_schedule == "ring":
+        # Blocks stay resident; nothing gathered, nothing worth caching.
+        return _ring_fwd(ctx, a, w, "...ef,fg->...eg"), (a, w)
     ag = _gather_a(ctx, a)
     wg = _gather_w(ctx, w)
     # C_{h,j} = sum_t A_{h,t} W_{t,j}
@@ -76,17 +222,23 @@ def _tess_fwd(ctx: ParallelContext, a, w):
 
 def _tess_bwd(ctx: ParallelContext, res, dc):
     ar, wr = res
-    ag = ar if ctx.cache_act_gather else _gather_a(ctx, ar)
-    wg = wr if ctx.cache_weight_gather else _gather_w(ctx, wr)
-    # dA_{h,t} = sum_j dC_{h,j} W_{t,j}^T   (paper's C = A * B^T form)
-    da_part = _einsum("...eg,tfg->t...ef", dc, wg, ctx=ctx, out_dtype=dc.dtype)
-    da = lax.psum_scatter(da_part, ctx.axis_col, scatter_dimension=0,
-                          tiled=False)
-    # dW_{t,j} = sum_h A_{h,t}^T dC_{h,j}   (paper's C = A^T * B form)
-    rs_dtype = jnp.bfloat16 if ctx.dgrad_rs_bf16 else jnp.float32
-    dw_part = _einsum("t...ef,...eg->tfg", ag, dc, ctx=ctx, out_dtype=rs_dtype)
-    dw = lax.psum_scatter(dw_part, ctx.axis_row, scatter_dimension=0,
-                          tiled=False)
+    if ctx.matmul_schedule == "ring":
+        da, dw = _ring_bwd(ctx, ar, wr, dc,
+                           "...eg,fg->...ef", "...ef,...eg->fg")
+    else:
+        ag = ar if ctx.cache_act_gather else _gather_a(ctx, ar)
+        wg = wr if ctx.cache_weight_gather else _gather_w(ctx, wr)
+        # dA_{h,t} = sum_j dC_{h,j} W_{t,j}^T   (paper's C = A * B^T form)
+        da_part = _einsum("...eg,tfg->t...ef", dc, wg, ctx=ctx,
+                          out_dtype=dc.dtype)
+        da = lax.psum_scatter(da_part, ctx.axis_col, scatter_dimension=0,
+                              tiled=False)
+        # dW_{t,j} = sum_h A_{h,t}^T dC_{h,j}   (paper's C = A^T * B form)
+        rs_dtype = jnp.bfloat16 if ctx.dgrad_rs_bf16 else jnp.float32
+        dw_part = _einsum("t...ef,...eg->tfg", ag, dc, ctx=ctx,
+                          out_dtype=rs_dtype)
+        dw = lax.psum_scatter(dw_part, ctx.axis_row, scatter_dimension=0,
+                              tiled=False)
     if ctx.reduce_dgrad_in_op:
         # Paper-faithful per-op reduction: "all_reduce after the computation
         # of B' on processors with same row and column but different depth"
@@ -114,6 +266,8 @@ def tesseract_matmul_experts(ctx: ParallelContext, a, w):
 
 
 def _tess_exp_fwd(ctx, a, w):
+    if ctx.matmul_schedule == "ring":
+        return _ring_fwd(ctx, a, w, "nef,nfg->neg"), (a, w)
     ag = all_gather_inv(a, ctx.axis_col)      # [q, N, T, F_loc]
     wg = all_gather_inv(w, ctx.axis_row)      # [q, N, F_loc, G_loc]
     c = _einsum("tnef,tnfg->neg", ag, wg, ctx=ctx, out_dtype=a.dtype)
@@ -124,6 +278,10 @@ def _tess_exp_fwd(ctx, a, w):
 
 def _tess_exp_bwd(ctx, res, dc):
     ar, wr = res
+    if ctx.matmul_schedule == "ring":
+        da, dw = _ring_bwd(ctx, ar, wr, dc,
+                           "neg,nfg->nef", "nef,neg->nfg")
+        return da, dw.astype(wr.dtype)
     ag = ar if ctx.cache_act_gather else all_gather_inv(ar, ctx.axis_col)
     wg = wr if ctx.cache_weight_gather else all_gather_inv(wr, ctx.axis_row)
     da_part = _einsum("neg,tnfg->tnef", dc, wg, ctx=ctx, out_dtype=dc.dtype)
@@ -148,7 +306,49 @@ def tesseract_matmul_wt(ctx: ParallelContext, a, w):
     return c
 
 
+def _ring_wt_fwd(ctx, a, w):
+    """C = A @ W^T on the ring: W streams around the row ring while the
+    output blocks ride a col accumulator ring (the ring form of the fused
+    schedule's psum_scatter).  The final unskew+shift undoes the Cannon
+    alignment so each device ends with its own C block."""
+    q = ctx.q
+    w_cur = _skew_w(ctx, w)
+    b = None
+    for s in range(q):
+        w_nxt = _shift_row(ctx, w_cur) if s < q - 1 else None
+        part = _einsum("...ef,gf->...eg", a, w_cur, ctx=ctx, out_dtype=a.dtype)
+        b = part if b is None else _shift_col(ctx, b) + part
+        w_cur = w_nxt
+    return _unskew_a(ctx, _shift_col(ctx, b))
+
+
+def _ring_wt_bwd(ctx, a, w, dc):
+    """dA accumulates locally off the synchronized (dC, W) streams; dW
+    partials ride a row accumulator ring (ring reduce-scatter over row)."""
+    q = ctx.q
+    rs_dtype = jnp.bfloat16 if ctx.dgrad_rs_bf16 else jnp.float32
+    # dC blocks live at their own col index (like A blocks): same skew.
+    dc_cur = _skew_a(ctx, dc)
+    w_cur = _skew_w(ctx, w)
+    acc_da = None
+    b_dw = None
+    for s in range(q):
+        dc_nxt = _shift_col(ctx, dc_cur) if s < q - 1 else None
+        w_nxt = _shift_row(ctx, w_cur) if s < q - 1 else None
+        part = jnp.einsum("...eg,gf->...ef", dc_cur, w_cur,
+                          preferred_element_type=_maybe_f32(ctx))
+        acc_da = part if acc_da is None else acc_da + part
+        h = _einsum("...eg,...ef->gf", dc_cur, a, ctx=ctx, out_dtype=rs_dtype)
+        b_dw = h if b_dw is None else _shift_row(ctx, b_dw) + h
+        dc_cur, w_cur = dc_nxt, w_nxt
+    da = acc_da.astype(dc.dtype)
+    dw = _unskew_w(ctx, _shift_row(ctx, b_dw))
+    return da, dw
+
+
 def _tess_wt_fwd(ctx, a, w):
+    if ctx.matmul_schedule == "ring":
+        return _ring_wt_fwd(ctx, a, w), (a, w)
     # C_{h,t} = sum_j A_{h,j} W_{t,j}^T : broadcast W within its column,
     # compute, then reduce partial C within the row (paper 3.1, C = A*B^T).
     wg = all_gather_inv(w, ctx.axis_row)            # [q(t), G_loc, F_loc]
@@ -160,13 +360,17 @@ def _tess_wt_fwd(ctx, a, w):
 
 def _tess_wt_bwd(ctx, res, dc):
     a, wr = res
-    wg = wr if ctx.cache_weight_gather else all_gather_inv(wr, ctx.axis_row)
-    dcg = all_gather_inv(dc, ctx.axis_col)          # [q(t), ..., E, G_loc]
-    da = _einsum("t...eg,tgf->...ef", dcg, wg, ctx=ctx, out_dtype=dc.dtype)
-    rs_dtype = jnp.bfloat16 if ctx.dgrad_rs_bf16 else jnp.float32
-    dw_part = _einsum("t...eg,...ef->tgf", dcg, a, ctx=ctx, out_dtype=rs_dtype)
-    dw = lax.psum_scatter(dw_part, ctx.axis_row, scatter_dimension=0,
-                          tiled=False)
+    if ctx.matmul_schedule == "ring":
+        da, dw = _ring_wt_bwd(ctx, a, wr, dc)
+    else:
+        wg = wr if ctx.cache_weight_gather else all_gather_inv(wr, ctx.axis_row)
+        dcg = all_gather_inv(dc, ctx.axis_col)      # [q(t), ..., E, G_loc]
+        da = _einsum("t...eg,tgf->...ef", dcg, wg, ctx=ctx, out_dtype=dc.dtype)
+        rs_dtype = jnp.bfloat16 if ctx.dgrad_rs_bf16 else jnp.float32
+        dw_part = _einsum("t...eg,...ef->tgf", dcg, a, ctx=ctx,
+                          out_dtype=rs_dtype)
+        dw = lax.psum_scatter(dw_part, ctx.axis_row, scatter_dimension=0,
+                              tiled=False)
     if ctx.reduce_dgrad_in_op:
         dw = lax.psum(dw, (ctx.axis_data, ctx.axis_depth))
     return da, dw.astype(wr.dtype)

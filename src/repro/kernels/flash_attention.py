@@ -65,7 +65,9 @@ def flash_attention(q, k, v, *, causal=True, bq=DEFAULT_BQ, bk=DEFAULT_BK,
     B, H, Tq, D = q.shape
     Tk = k.shape[2]
     bq, bk = min(bq, Tq), min(bk, Tk)
-    assert Tq % bq == 0 and Tk % bk == 0
+    from .tesseract_mm import check_tiling
+    check_tiling("flash_attention", [("Tq", Tq, "bq", bq),
+                                     ("Tk", Tk, "bk", bk)])
     scale = 1.0 / math.sqrt(D)
     qf = q.reshape(B * H, Tq, D)
     kf = k.reshape(B * H, Tk, D)

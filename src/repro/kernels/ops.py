@@ -11,7 +11,7 @@ import jax
 
 from .flash_attention import flash_attention
 from .ssd import ssd_intra
-from .tesseract_mm import tesseract_mm
+from .tesseract_mm import tesseract_mm, tesseract_mm_stream
 
 
 def _interpret() -> bool:
@@ -20,6 +20,17 @@ def _interpret() -> bool:
 
 def tesseract_mm_op(a, b, **kw):
     return tesseract_mm(a, b, interpret=_interpret(), **kw)
+
+
+def tesseract_mm_stream_op(a, b, c, **kw):
+    """One ring-SUMMA step: c += a @ b with a donated fp32 accumulator.
+
+    Standalone TPU counterpart of matmul_schedule="ring"'s per-step
+    contraction (the gathered [T, E, F] operand of the fused kernel never
+    materializes).  Not yet wired into core/summa.py — the ring schedule
+    currently contracts with jnp.einsum, like the fused path does with
+    this module's fused kernel."""
+    return tesseract_mm_stream(a, b, c, interpret=_interpret(), **kw)
 
 
 def flash_attention_op(q, k, v, *, causal=True, **kw):

@@ -28,6 +28,22 @@ DEFAULT_BF = 512
 DEFAULT_BG = 256
 
 
+def check_tiling(name: str, checks) -> None:
+    """Raise an actionable ValueError when a dim does not tile into its
+    VMEM block (TPU blocks must divide the operand shape).
+
+    ``checks``: iterable of (dim_name, size, block_kwarg, block_size)."""
+    bad = [(d, n, kw, b) for (d, n, kw, b) in checks if n % b]
+    if bad:
+        detail = ", ".join(f"{d}={n} is not a multiple of block {kw}={b}"
+                           for d, n, kw, b in bad)
+        kwargs = ", ".join(f"{kw}=..." for _, _, kw, _ in bad)
+        raise ValueError(
+            f"{name}: {detail}. Pad the operands to a multiple of the block "
+            f"size (configs.base.round_up) or pass explicit block sizes "
+            f"({kwargs}) that divide the shape.")
+
+
 def _kernel(a_ref, b_ref, o_ref, acc_ref, *, n_inner):
     @pl.when(pl.program_id(2) == 0)
     def _zero():
@@ -49,7 +65,8 @@ def tesseract_mm(a, b, *, be=DEFAULT_BE, bf=DEFAULT_BF, bg=DEFAULT_BG,
     T, E, F = a.shape
     G = b.shape[-1]
     be, bf, bg = min(be, E), min(bf, F), min(bg, G)
-    assert E % be == 0 and F % bf == 0 and G % bg == 0, (E, F, G, be, bf, bg)
+    check_tiling("tesseract_mm", [("E", E, "be", be), ("F", F, "bf", bf),
+                                  ("G", G, "bg", bg)])
     nf = F // bf
     # fold (t, f) into one inner reduction axis so accumulation order is
     # purely sequential on TPU
@@ -75,3 +92,60 @@ def tesseract_mm(a, b, *, be=DEFAULT_BE, bf=DEFAULT_BF, bg=DEFAULT_BG,
         interpret=interpret,
     )(a, b)
     return out
+
+
+# --------------------------------------------------------------------------
+# Streaming variant: one SUMMA step at a time (matmul_schedule="ring").
+#
+# The ring schedule never materializes the [T, E, F] gathered operand: each
+# ppermute delivers ONE (A_t, W_t) block pair, and this kernel contracts it
+# into a persistent fp32 accumulator (C += A_t @ W_t).  The accumulator is
+# donated via input_output_aliasing, so across the q ring steps exactly one
+# [E, G] fp32 buffer lives in HBM — peak operand memory is O(2 · block)
+# instead of the fused kernel's O(q · block).
+#
+# Standalone for now: core/summa.py's ring schedule contracts with
+# jnp.einsum (mirroring the fused path, which likewise does not call the
+# fused kernel above); this is the drop-in TPU building block for when the
+# per-step contraction is kernelized.
+# --------------------------------------------------------------------------
+
+def _stream_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, nf):
+    @pl.when(pl.program_id(2) == 0)
+    def _load():
+        acc_ref[...] = c_ref[...]          # carry in the ring accumulator
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nf - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("be", "bf", "bg", "interpret"),
+                   donate_argnums=(2,))
+def tesseract_mm_stream(a, b, c, *, be=DEFAULT_BE, bf=DEFAULT_BF,
+                        bg=DEFAULT_BG, interpret=False):
+    """One ring step: c + a @ b.  a: [E, F]; b: [F, G]; c: [E, G] fp32."""
+    E, F = a.shape
+    G = b.shape[-1]
+    be, bf, bg = min(be, E), min(bf, F), min(bg, G)
+    check_tiling("tesseract_mm_stream",
+                 [("E", E, "be", be), ("F", F, "bf", bf), ("G", G, "bg", bg)])
+    nf = F // bf
+    grid = (E // be, G // bg, nf)
+    return pl.pallas_call(
+        functools.partial(_stream_kernel, nf=nf),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((be, bf), lambda e, g, i: (e, i)),
+            pl.BlockSpec((bf, bg), lambda e, g, i: (i, g)),
+            pl.BlockSpec((be, bg), lambda e, g, i: (e, g)),
+        ],
+        out_specs=pl.BlockSpec((be, bg), lambda e, g, i: (e, g)),
+        out_shape=jax.ShapeDtypeStruct((E, G), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((be, bg), jnp.float32)],
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(a, b, c.astype(jnp.float32))

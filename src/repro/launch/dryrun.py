@@ -156,6 +156,7 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool, mode: str,
         model_flops_total=model_flops(arch.model, shape),
         per_device_bytes=per_dev_bytes,
         collectives=stats,
+        matmul_schedule=ctx.matmul_schedule,
     ).finalize()
     rl_d = rl.to_dict()
     rl_d["cost_analysis_raw"] = {"flops": ca_flops, "bytes": ca_bytes}

@@ -24,6 +24,8 @@ def main():
     ap.add_argument("--rows", type=int, default=1)
     ap.add_argument("--cols", type=int, default=1)
     ap.add_argument("--depth", type=int, default=1)
+    ap.add_argument("--matmul-schedule", default="fused",
+                    choices=("fused", "ring"))
     args = ap.parse_args()
 
     import jax
@@ -38,10 +40,12 @@ def main():
 
     arch = get_reduced(args.arch) if args.reduced else get_arch(args.arch)
     ctx = ParallelContext(mode=args.mode, data=args.data, depth=args.depth,
-                          rows=args.rows, cols=args.cols)
+                          rows=args.rows, cols=args.cols,
+                          matmul_schedule=args.matmul_schedule)
     mesh = logical_mesh(ctx)
     run = RunConfig(param_dtype="float32", compute_dtype="float32",
-                    loss_chunk=64, q_chunk=32, kv_chunk=32)
+                    loss_chunk=64, q_chunk=32, kv_chunk=32,
+                    matmul_schedule=args.matmul_schedule)
     model = build_model(arch.model, ctx, run)
     params = model.init(jax.random.PRNGKey(0))
 

@@ -31,6 +31,8 @@ def main():
     ap.add_argument("--depth", type=int, default=1)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--matmul-schedule", default="fused",
+                    choices=("fused", "ring"))
     ap.add_argument("--lr", type=float, default=3e-4)
     args = ap.parse_args()
 
@@ -46,11 +48,12 @@ def main():
 
     arch = get_reduced(args.arch) if args.reduced else get_arch(args.arch)
     ctx = ParallelContext(mode=args.mode, data=args.data, depth=args.depth,
-                          rows=args.rows, cols=args.cols)
+                          rows=args.rows, cols=args.cols,
+                          matmul_schedule=args.matmul_schedule)
     mesh = logical_mesh(ctx)
     run = RunConfig(param_dtype="float32", compute_dtype="float32",
                     loss_chunk=128, q_chunk=64, kv_chunk=64, lr=args.lr,
-                    zero1=args.zero1)
+                    zero1=args.zero1, matmul_schedule=args.matmul_schedule)
     model = build_model(arch.model, ctx, run)
     shape = ShapeSpec("train", seq_len=args.seq, global_batch=args.batch,
                       kind="train")

@@ -31,6 +31,12 @@ def get_reduced(name: str) -> ArchConfig:
 
 
 def build_model(cfg: ModelConfig, ctx: ParallelContext, run: RunConfig):
+    # RunConfig.matmul_schedule is the config-surface default for the SUMMA
+    # schedule; an explicit non-default ctx.matmul_schedule wins (the per-op
+    # dispatch reads ctx, DESIGN.md §2b).
+    if run.matmul_schedule != "fused" and ctx.matmul_schedule == "fused" \
+            and ctx.mode != "megatron1d":
+        ctx = ctx.replace(matmul_schedule=run.matmul_schedule)
     if cfg.family in ("dense",):
         from .transformer import DenseLM
         return DenseLM(cfg, ctx, run)

@@ -27,7 +27,8 @@ def pipeline_apply(stage_fn, stage_params, x_mb, *, axis: str = "pipe"):
     Returns [M, mb, ...] outputs, valid on the LAST stage (replicated there
     via the caller's reduction; other stages hold garbage).
     """
-    S = lax.axis_size(axis)
+    from ..core.collectives import axis_size1
+    S = axis_size1(axis)
     sid = lax.axis_index(axis)
     M = x_mb.shape[0]
     T = M + S - 1

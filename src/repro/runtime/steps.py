@@ -24,7 +24,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import RunConfig, ShapeSpec
 from ..core.api import LOGICAL_AXES, ParallelContext
-from ..core.collectives import pvary, grad_sync, axis_size
+from ..core.collectives import pvary, grad_sync, axis_size, shard_map
 from ..core.ops import Plan, make_ops
 from ..optim import adamw
 
@@ -178,6 +178,15 @@ def build_train_step(model, mesh, shape: ShapeSpec):
 
         loss, grads = jax.value_and_grad(loss_fn)(params)
 
+        if not col_mod.HAS_VMA:
+            # Pre-vma jax seeds ALL p replicated copies of the loss scalar
+            # (psum transposes to psum), so value_and_grad returns exactly
+            # p x the true gradient for every leaf; vma jax seeds the one
+            # invariant scalar and needs no correction.
+            p_rep = ctx.data * ctx.depth * ctx.rows * ctx.cols
+            if p_rep > 1:
+                grads = jax.tree.map(lambda g: g / p_rep, grads)
+
         # --- global grad-norm clip (layout aware) ---
         def leaf_sq(g, rep, s):
             val = jnp.sum(g.astype(jnp.float32) ** 2) / rep
@@ -237,7 +246,7 @@ def build_train_step(model, mesh, shape: ShapeSpec):
     batch_sds, batch_specs_ = batch_abstract(ops, shape, ctx, model)
     metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
 
-    smapped = jax.shard_map(
+    smapped = shard_map(
         local_step, mesh=mesh,
         in_specs=(specs, opt_specs, batch_specs_),
         out_specs=(specs, opt_specs, metric_specs))
@@ -295,7 +304,7 @@ def build_prefill_step(model, mesh, shape: ShapeSpec):
 
     in_sh = (_shardings(mesh, specs), _shardings(mesh, batch_specs_))
     out_sh = (NamedSharding(mesh, ids_spec), _shardings(mesh, cache_specs))
-    smapped = jax.shard_map(local_step, mesh=mesh,
+    smapped = shard_map(local_step, mesh=mesh,
                             in_specs=(specs, batch_specs_),
                             out_specs=(ids_spec, cache_specs))
     fn = jax.jit(smapped, in_shardings=in_sh, out_shardings=out_sh)
@@ -325,7 +334,7 @@ def build_decode_step(model, mesh, shape: ShapeSpec):
     in_sh = (_shardings(mesh, specs), _shardings(mesh, cache_specs),
              NamedSharding(mesh, ids_spec), NamedSharding(mesh, P()))
     out_sh = (NamedSharding(mesh, ids_spec), _shardings(mesh, cache_specs))
-    smapped = jax.shard_map(local_step, mesh=mesh,
+    smapped = shard_map(local_step, mesh=mesh,
                             in_specs=(specs, cache_specs, ids_spec, P()),
                             out_specs=(ids_spec, cache_specs))
     fn = jax.jit(smapped, donate_argnums=(1,), in_shardings=in_sh,

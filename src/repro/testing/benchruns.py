@@ -78,6 +78,58 @@ def strong_scaling():
     print(json.dumps(out))
 
 
+def matmul_schedules():
+    """fused vs ring Tesseract matmul (fwd + both grads) on a [2, 2, 2]
+    grid of 8 fake CPU devices.  Host wall-clock is indicative only (no
+    async collective-permute on CPU); the analytic overlap model in
+    benchmarks/comm_model.py is the perf artifact."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+    from repro.core.api import ParallelContext
+    from repro.core.collectives import grad_sync, shard_map
+    from repro.core.mesh import logical_mesh
+    from repro.core.summa import tesseract_matmul
+
+    B, E, F, G = 2, 512, 512, 512
+    A = jax.random.normal(jax.random.PRNGKey(0), (B, E, F), jnp.float32)
+    W = jax.random.normal(jax.random.PRNGKey(1), (F, G), jnp.float32)
+    S = jax.random.normal(jax.random.PRNGKey(2), (B, E, G), jnp.float32)
+    out = {}
+    for sched in ("fused", "ring"):
+        ctx = ParallelContext(mode="tesseract", data=1, depth=2, rows=2,
+                              cols=2, reduce_dgrad_in_op=False,
+                              matmul_schedule=sched)
+        mesh = logical_mesh(ctx, jax.devices()[:8])
+        tok = P(None, ("data", "depth", "row"), "col")
+
+        def local(a, w, s):
+            def loss(a_, w_):
+                w_ = grad_sync(w_, (ctx.axis_data, ctx.axis_depth))
+                return jnp.sum(tesseract_matmul(ctx, a_, w_) * s)
+            l, grads = jax.value_and_grad(loss, argnums=(0, 1))(a, w)
+            return lax.psum(l, ("data", "depth", "row", "col")), grads
+
+        fn = jax.jit(shard_map(local, mesh=mesh,
+                               in_specs=(tok, P("row", "col"), tok),
+                               out_specs=(P(), (tok, P("row", "col")))))
+        l, _ = fn(A, W, S)
+        float(l)  # compile + sync
+        times = []
+        for _ in range(10):
+            t0 = time.perf_counter()
+            l, g = fn(A, W, S)
+            jax.block_until_ready(g)
+            times.append(time.perf_counter() - t0)
+        out[sched] = {"us_per_call": sum(times[2:]) / len(times[2:]) * 1e6,
+                      "loss": float(l)}
+    out["losses_match"] = abs(out["fused"]["loss"] - out["ring"]["loss"]) \
+        <= 1e-3 * abs(out["fused"]["loss"])
+    print(json.dumps(out))
+
+
 if __name__ == "__main__":
     {"accuracy_equiv": accuracy_equiv,
-     "strong_scaling": strong_scaling}[sys.argv[1]]()
+     "strong_scaling": strong_scaling,
+     "matmul_schedules": matmul_schedules}[sys.argv[1]]()

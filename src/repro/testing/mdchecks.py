@@ -34,14 +34,21 @@ PARALLEL_VARIANTS = {
 }
 
 
-def check_summa_exact():
+def check_summa_exact(schedules=("fused", "ring")):
+    """Distributed matmul == dense reference, loss AND grads.
+
+    Grads are computed INSIDE shard_map (the production pattern: the step
+    functions run value_and_grad in the local view), with the deferred
+    (data, depth) weight reduction supplied by grad_sync — identical
+    semantics on vma and pre-vma jax."""
     import jax, jax.numpy as jnp
     from jax import lax
     from jax.sharding import PartitionSpec as P
     from repro.core.api import ParallelContext
     from repro.core.mesh import logical_mesh
     from repro.core.summa import tesseract_matmul, tesseract_matmul_wt
-    from repro.core.collectives import pvary
+    from repro.core.collectives import grad_sync
+    from repro.core.collectives import shard_map
 
     E, F, G = 24, 8, 12
     A = jax.random.normal(jax.random.PRNGKey(0), (2, E, F), jnp.float32)
@@ -49,58 +56,174 @@ def check_summa_exact():
     Wt = jax.random.normal(jax.random.PRNGKey(3), (G, F), jnp.float32)
     S = jax.random.normal(jax.random.PRNGKey(2), (2, E, G), jnp.float32)
 
-    for name, kw in [("d2q2", dict(depth=2, rows=2, cols=2)),
-                     ("d1q2dp2", dict(mode="summa2d", data=2, depth=1, rows=2, cols=2))]:
-        for inop in (True, False):
-            for cache_w in (True, False):
-                ctx = ParallelContext(mode=kw.get("mode", "tesseract"),
-                                      data=kw.get("data", 1), depth=kw["depth"],
-                                      rows=kw["rows"], cols=kw["cols"],
-                                      reduce_dgrad_in_op=inop,
-                                      cache_weight_gather=cache_w)
-                mesh = logical_mesh(ctx)
-                tok = P(None, ("data", "depth", "row"), "col")
+    variants = [("d2q2", dict(depth=2, rows=2, cols=2)),
+                ("d1q2dp2", dict(mode="summa2d", data=2, depth=1, rows=2, cols=2))]
+    for sched in schedules:
+        for name, kw in variants:
+            for inop in (True, False):
+                for cache_w in (True, False):
+                    ctx = ParallelContext(mode=kw.get("mode", "tesseract"),
+                                          data=kw.get("data", 1), depth=kw["depth"],
+                                          rows=kw["rows"], cols=kw["cols"],
+                                          reduce_dgrad_in_op=inop,
+                                          cache_weight_gather=cache_w,
+                                          matmul_schedule=sched)
+                    mesh = logical_mesh(ctx)
+                    tok = P(None, ("data", "depth", "row"), "col")
 
-                def f(a, w, s):
-                    if not inop:
-                        w = pvary(w, (ctx.axis_data, ctx.axis_depth))
-                    c = tesseract_matmul(ctx, a, w)
-                    return lax.psum(jnp.sum(c * s),
-                                    ("data", "depth", "row", "col"))
+                    def make(op):
+                        def local(a, w, s):
+                            def loss(a_, w_):
+                                if not inop:
+                                    w_ = grad_sync(w_, (ctx.axis_data,
+                                                        ctx.axis_depth))
+                                c = op(ctx, a_, w_)
+                                # differentiate the LOCAL contribution: the
+                                # cross-device reductions live in the ops'
+                                # custom bwds (grad_sync / in-op psum), the
+                                # same discipline the train step uses.
+                                return jnp.sum(c * s)
+                            l, (ga_, gw_) = jax.value_and_grad(
+                                loss, argnums=(0, 1))(a, w)
+                            l = lax.psum(l, ("data", "depth", "row", "col"))
+                            return l, ga_, gw_
+                        return shard_map(
+                            local, mesh=mesh,
+                            in_specs=(tok, P("row", "col"), tok),
+                            out_specs=(P(), tok, P("row", "col")))
 
-                sm = jax.shard_map(f, mesh=mesh,
-                                   in_specs=(tok, P("row", "col"), tok),
-                                   out_specs=P())
-                ga, gw = jax.grad(sm, argnums=(0, 1))(A, W, S)
-                np.testing.assert_allclose(np.asarray(sm(A, W, S)),
-                                           float(jnp.sum((A @ W) * S)),
-                                           rtol=1e-5)
-                np.testing.assert_allclose(ga, np.einsum("beg,fg->bef", S, W),
-                                           rtol=1e-4, atol=1e-5)
-                np.testing.assert_allclose(gw, np.einsum("bef,beg->fg", A, S),
-                                           rtol=1e-4, atol=1e-5)
+                    tag = f"{sched}/{name}/inop={inop}/cache_w={cache_w}"
+                    l, ga, gw = make(tesseract_matmul)(A, W, S)
+                    np.testing.assert_allclose(np.asarray(l),
+                                               float(jnp.sum((A @ W) * S)),
+                                               rtol=1e-5, err_msg=tag)
+                    np.testing.assert_allclose(ga, np.einsum("beg,fg->bef", S, W),
+                                               rtol=1e-4, atol=1e-5, err_msg=tag)
+                    np.testing.assert_allclose(gw, np.einsum("bef,beg->fg", A, S),
+                                               rtol=1e-4, atol=1e-5, err_msg=tag)
 
-                def fwt(a, w, s):
-                    if not inop:
-                        w = pvary(w, (ctx.axis_data, ctx.axis_depth))
-                    c = tesseract_matmul_wt(ctx, a, w)
-                    return lax.psum(jnp.sum(c * s),
-                                    ("data", "depth", "row", "col"))
-
-                smt = jax.shard_map(fwt, mesh=mesh,
-                                    in_specs=(tok, P("row", "col"), tok),
-                                    out_specs=P())
-                # A @ Wt^T : Wt [G(row), F(col)]
-                Swt = jax.random.normal(jax.random.PRNGKey(4), (2, E, G), jnp.float32)
-                np.testing.assert_allclose(
-                    np.asarray(smt(A, Wt, Swt)),
-                    float(jnp.sum((A @ Wt.T) * Swt)), rtol=1e-5)
-                ga2, gw2 = jax.grad(smt, argnums=(0, 1))(A, Wt, Swt)
-                np.testing.assert_allclose(ga2, np.einsum("beg,gf->bef", Swt, Wt),
-                                           rtol=1e-4, atol=1e-5)
-                np.testing.assert_allclose(gw2, np.einsum("beg,bef->gf", Swt, A),
-                                           rtol=1e-4, atol=1e-5)
+                    # A @ Wt^T : Wt [G(row), F(col)]
+                    Swt = jax.random.normal(jax.random.PRNGKey(4), (2, E, G),
+                                            jnp.float32)
+                    l2, ga2, gw2 = make(tesseract_matmul_wt)(A, Wt, Swt)
+                    np.testing.assert_allclose(
+                        np.asarray(l2),
+                        float(jnp.sum((A @ Wt.T) * Swt)), rtol=1e-5, err_msg=tag)
+                    np.testing.assert_allclose(ga2, np.einsum("beg,gf->bef", Swt, Wt),
+                                               rtol=1e-4, atol=1e-5, err_msg=tag)
+                    np.testing.assert_allclose(gw2, np.einsum("beg,bef->gf", Swt, A),
+                                               rtol=1e-4, atol=1e-5, err_msg=tag)
     print("PASS summa_exact")
+
+
+def check_ring_schedule():
+    """matmul_schedule="ring" == "fused" == dense reference for q in
+    {1, 2, 4} (q=4 needs 16 fake devices), all three op variants, forward
+    AND both backward contractions."""
+    import jax, jax.numpy as jnp
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+    from repro.core.api import ParallelContext
+    from repro.core.mesh import logical_mesh
+    from repro.core.summa import (tesseract_matmul, tesseract_matmul_experts,
+                                  tesseract_matmul_wt)
+    from repro.core.collectives import grad_sync, shard_map
+
+    ndev = jax.device_count()
+    grids = [dict(data=1, depth=1, rows=1, cols=1),
+             dict(data=1, depth=2, rows=2, cols=2),
+             dict(mode="summa2d", data=2, depth=1, rows=2, cols=2)]
+    if ndev >= 16:
+        grids.append(dict(data=1, depth=1, rows=4, cols=4))
+    else:
+        print("  (16 devices unavailable: q=4 grid skipped)")
+
+    E, F, G = 24, 16, 24
+    A = jax.random.normal(jax.random.PRNGKey(0), (2, E, F), jnp.float32)
+    W = jax.random.normal(jax.random.PRNGKey(1), (F, G), jnp.float32)
+    Wt = jax.random.normal(jax.random.PRNGKey(2), (G, F), jnp.float32)
+    S = jax.random.normal(jax.random.PRNGKey(3), (2, E, G), jnp.float32)
+    N, T = 4, 12
+    Ae = jax.random.normal(jax.random.PRNGKey(4), (N, T, F), jnp.float32)
+    We = jax.random.normal(jax.random.PRNGKey(5), (N, F, G), jnp.float32)
+    Se = jax.random.normal(jax.random.PRNGKey(6), (N, T, G), jnp.float32)
+
+    refs_plain = (float(jnp.sum((A @ W) * S)),
+                  np.einsum("beg,fg->bef", S, W),
+                  np.einsum("bef,beg->fg", A, S))
+    Swt = jax.random.normal(jax.random.PRNGKey(7), (2, E, G), jnp.float32)
+    refs_wt = (float(jnp.sum((A @ Wt.T) * Swt)),
+               np.einsum("beg,gf->bef", Swt, Wt),
+               np.einsum("beg,bef->gf", Swt, A))
+    refs_exp = (float(jnp.sum(jnp.einsum("ntf,nfg->ntg", Ae, We) * Se)),
+                np.einsum("neg,nfg->nef", Se, We),
+                np.einsum("nef,neg->nfg", Ae, Se))
+
+    for g in grids:
+        for sched in ("fused", "ring"):
+            # deferred dW sync (grad_sync below); in-op mode is covered by
+            # check_summa_exact for both schedules.
+            ctx = ParallelContext(mode=g.get("mode", "tesseract"),
+                                  data=g["data"], depth=g["depth"],
+                                  rows=g["rows"], cols=g["cols"],
+                                  reduce_dgrad_in_op=False,
+                                  matmul_schedule=sched)
+            mesh = logical_mesh(ctx, jax.devices()[:ctx.data * ctx.tp])
+            tok = P(None, ("data", "depth", "row"), "col")
+            wspec = P("row", "col")
+            tag = f"ring_schedule q={ctx.q} d={ctx.depth} dp={ctx.data} {sched}"
+
+            def run(op, a, w, s):
+                def local(a_l, w_l, s_l):
+                    def loss(a_, w_):
+                        w_ = grad_sync(w_, (ctx.axis_data, ctx.axis_depth))
+                        return jnp.sum(op(ctx, a_, w_) * s_l)
+                    l, (ga, gw) = jax.value_and_grad(loss, argnums=(0, 1))(
+                        a_l, w_l)
+                    return (lax.psum(l, ("data", "depth", "row", "col")),
+                            ga, gw)
+                sm = shard_map(local, mesh=mesh, in_specs=(tok, wspec, tok),
+                               out_specs=(P(), tok, wspec))
+                return sm(a, w, s)
+
+            for op, w_in, s_in, refs, nm in (
+                    (tesseract_matmul, W, S, refs_plain, "plain"),
+                    (tesseract_matmul_wt, Wt, Swt, refs_wt, "wt")):
+                l, ga, gw = run(op, A, w_in, s_in)
+                np.testing.assert_allclose(np.asarray(l), refs[0], rtol=1e-5,
+                                           err_msg=f"{tag}/{nm}/loss")
+                np.testing.assert_allclose(ga, refs[1], rtol=1e-4, atol=1e-5,
+                                           err_msg=f"{tag}/{nm}/dA")
+                np.testing.assert_allclose(gw, refs[2], rtol=1e-4, atol=1e-5,
+                                           err_msg=f"{tag}/{nm}/dW")
+
+            if ctx.data == 1:  # experts: EP over depth, no data factor
+                espec = P("depth", "row", "col")
+
+                def local_e(a_l, w_l, s_l):
+                    def loss(a_, w_):
+                        return jnp.sum(
+                            tesseract_matmul_experts(ctx, a_, w_) * s_l)
+                    l, (ga, gw) = jax.value_and_grad(loss, argnums=(0, 1))(
+                        a_l, w_l)
+                    return (lax.psum(l, ("data", "depth", "row", "col")),
+                            ga, gw)
+                sm = shard_map(local_e, mesh=mesh,
+                               in_specs=(espec, espec, espec),
+                               out_specs=(P(), espec, espec))
+                l, ga, gw = sm(Ae, We, Se)
+                np.testing.assert_allclose(np.asarray(l), refs_exp[0],
+                                           rtol=1e-5,
+                                           err_msg=f"{tag}/experts/loss")
+                np.testing.assert_allclose(ga, refs_exp[1], rtol=1e-4,
+                                           atol=1e-5,
+                                           err_msg=f"{tag}/experts/dA")
+                np.testing.assert_allclose(gw, refs_exp[2], rtol=1e-4,
+                                           atol=1e-5,
+                                           err_msg=f"{tag}/experts/dW")
+            print(f"  {tag}: plain+wt" +
+                  ("+experts ok" if ctx.data == 1 else " ok"))
+    print("PASS ring_schedule")
 
 
 def _build(arch_name, variant, run_kw=None, family_kw=None):
@@ -384,6 +507,23 @@ def check_families_serve():
     print("PASS families_serve")
 
 
+def check_ring_train_parity():
+    """Full train steps with matmul_schedule="ring" == "fused" (yi-6b
+    reduced, tesseract [2,2,2]) — the schedule swaps transparently under
+    jit + remat + custom-vjp + grad clip."""
+    import jax, jax.numpy as jnp
+    B, S = 8, 16
+    tok = jax.random.randint(jax.random.PRNGKey(21), (B, S), 0, 250)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
+    base = dict(mode="tesseract", data=1, depth=2, rows=2, cols=2)
+    l_fused, _ = _train_losses("yi-6b", dict(base, matmul_schedule="fused"),
+                               batch)
+    l_ring, _ = _train_losses("yi-6b", dict(base, matmul_schedule="ring"),
+                              batch)
+    np.testing.assert_allclose(l_ring, l_fused, rtol=2e-5, atol=2e-5)
+    print("PASS ring_train_parity", l_ring)
+
+
 def check_zero1_parity():
     """ZeRO-1 (opt state sharded over data*depth) must match baseline."""
     import jax, jax.numpy as jnp
@@ -419,6 +559,8 @@ def check_moe_local_layout():
 
 CHECKS = {
     "summa_exact": check_summa_exact,
+    "ring_schedule": check_ring_schedule,
+    "ring_train_parity": check_ring_train_parity,
     "dense_parity": check_dense_parity,
     "inop_matches_deferred": check_inop_matches_deferred,
     "decode_parity": check_decode_parity,

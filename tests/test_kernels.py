@@ -5,9 +5,45 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.ops import flash_attention_op, ssd_intra_op, tesseract_mm_op
+from repro.kernels.ops import (flash_attention_op, ssd_intra_op,
+                               tesseract_mm_op, tesseract_mm_stream_op)
 
 KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("T,E,F,G", [(2, 256, 512, 256), (4, 512, 512, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tesseract_mm_stream_matches_fused(T, E, F, G, dtype):
+    """Accumulating the per-t blocks one ring step at a time must equal the
+    fused kernel over the full [T, E, F] gathered operand."""
+    a = jax.random.normal(KEY, (T, E, F), jnp.float32).astype(dtype)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (T, F, G),
+                          jnp.float32).astype(dtype)
+    acc = jnp.zeros((E, G), jnp.float32)
+    for t in range(T):
+        acc = tesseract_mm_stream_op(a[t], b[t], acc)
+    want = tesseract_mm_op(a, b)
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_tesseract_mm_rejects_non_aligned():
+    a = jax.random.normal(KEY, (2, 300, 512), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 512, 256),
+                          jnp.float32)
+    with pytest.raises(ValueError, match="tesseract_mm.*Pad"):
+        tesseract_mm_op(a, b)
+    with pytest.raises(ValueError, match="tesseract_mm_stream.*Pad"):
+        tesseract_mm_stream_op(a[0], b[0], jnp.zeros((300, 256), jnp.float32))
+
+
+def test_flash_attention_rejects_non_aligned():
+    q = jax.random.normal(KEY, (1, 1, 300, 64), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 1, 256, 64),
+                          jnp.float32)
+    with pytest.raises(ValueError, match="flash_attention.*Pad"):
+        flash_attention_op(q, k, k)
 
 
 @pytest.mark.parametrize("T,E,F,G", [

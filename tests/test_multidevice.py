@@ -21,6 +21,7 @@ CHECKS = [
     "moe_decode",
     "families_parity",
     "families_serve",
+    "ring_train_parity",
     "zero1_parity",
     "moe_local_layout",
 ]

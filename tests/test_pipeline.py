@@ -12,11 +12,12 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.core.collectives import shard_map
+from repro.core.mesh import make_mesh
 from repro.runtime.pipeline import pipeline_apply
 
 S, M, mb, d = 4, 8, 2, 16
-mesh = jax.make_mesh((S,), ("pipe",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((S,), ("pipe",))
 ws = jax.random.normal(jax.random.PRNGKey(0), (S, d, d), jnp.float32) * 0.3
 x = jax.random.normal(jax.random.PRNGKey(1), (M, mb, d), jnp.float32)
 tgt = jax.random.normal(jax.random.PRNGKey(2), (M, mb, d), jnp.float32)
@@ -31,7 +32,7 @@ def loss_fn(ws_local, x_, tgt_):
     l = jnp.sum((outs - tgt_) ** 2) * (sid == S - 1)
     return lax.psum(l, "pipe")
 
-sm = jax.shard_map(loss_fn, mesh=mesh,
+sm = shard_map(loss_fn, mesh=mesh,
                    in_specs=(P("pipe", None, None), P(None, None, None),
                              P(None, None, None)),
                    out_specs=P())

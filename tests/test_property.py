@@ -1,7 +1,9 @@
 """Property-based tests (hypothesis) on system invariants."""
 import math
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
@@ -111,7 +113,8 @@ def test_ce_loss_chunk_invariance(chunk, seed):
             # ce_loss leaves the sums varying over data; reduce like the
             # models do
             return jax.lax.psum(ls, "data") / jax.lax.psum(cnt, "data")
-        return jax.shard_map(f, mesh=mesh,
+        from repro.core.collectives import shard_map
+        return shard_map(f, mesh=mesh,
                              in_specs=(P(None, None, None), P(None, None),
                                        P(None, None)),
                              out_specs=P())
