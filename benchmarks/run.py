@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig7_accuracy     — Fig. 7 analogue (measured: identical training curves
                       single-device vs Tesseract [2,2,1] / [2,2,2])
   measured_strong   — measured step times on 8 fake devices (indicative)
+  serve             — continuous batching vs static decode loop
+                      (tokens/s, p50/p95 latency) -> BENCH_serve.json
   roofline_summary  — dry-run roofline terms for the three hillclimb cells
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--quick]
@@ -134,6 +136,36 @@ def bench_matmul_schedules():
     _row("matmul_schedule/written", 0.0, str(out))
 
 
+def bench_serve():
+    """Continuous batching vs the static-batch decode loop on a mixed-length
+    workload (tokens/s and p50/p95 per-token latency per batch size),
+    persisted to BENCH_serve.json.  Greedy tokens are asserted identical
+    inside the subprocess; the engine must win tokens/s."""
+    out = _sub("serve_throughput")
+    payload = {**out,
+               "note": "8 fake CPU host devices, tesseract [2,2,1] x dp2, "
+                       "yi-6b reduced; wall-clock indicative only; greedy "
+                       "token parity engine==static asserted in-run"}
+    path = HERE.parent / "BENCH_serve.json"
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    losses = []
+    for key, d in out.items():
+        if not key.startswith("slots"):
+            continue
+        e, s = d["engine"], d["static"]
+        _row(f"serve/{key}/engine", 0.0,
+             f"{e['tokens_per_s']:.1f} tok/s p50={e['p50_ms']:.1f}ms "
+             f"p95={e['p95_ms']:.1f}ms")
+        _row(f"serve/{key}/static", 0.0,
+             f"{s['tokens_per_s']:.1f} tok/s p50={s['p50_ms']:.1f}ms "
+             f"p95={s['p95_ms']:.1f}ms")
+        if not d["engine_wins"]:
+            losses.append(key)
+    _row("serve/written", 0.0, str(path))
+    # persisted first so a noisy wall-clock loss stays diagnosable
+    assert not losses, f"continuous batching lost at {losses}: see {path}"
+
+
 def bench_roofline_summary():
     res = HERE / "results" / "dryrun"
     if not res.exists():
@@ -156,6 +188,7 @@ def main() -> None:
     bench_roofline_summary()
     if not quick:
         bench_matmul_schedules()
+        bench_serve()
         bench_fig7_accuracy()
         bench_measured_strong()
 

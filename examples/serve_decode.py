@@ -1,5 +1,10 @@
 """Serving example: batched prefill + greedy decode with a KV cache.
 
+The prefill cache (sequence-sharded layout) is RESHARDED into the decode
+layout with one jitted scatter (`build_dense_cache_reshard`) and decode
+continues from position S_prompt — no prompt replay.  The replay path is
+kept below as the reference and the two must agree token for token.
+
     PYTHONPATH=src python examples/serve_decode.py
 """
 import pathlib
@@ -15,7 +20,8 @@ from repro.configs.base import RunConfig, ShapeSpec
 from repro.core.api import ParallelContext
 from repro.core.mesh import logical_mesh
 from repro.models.registry import build_model, get_reduced
-from repro.runtime.steps import build_decode_step, build_prefill_step
+from repro.runtime.steps import (build_decode_step, build_dense_cache_reshard,
+                                 build_prefill_step)
 
 
 def main():
@@ -28,28 +34,42 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
 
     B, S_prompt, S_total, n_new = 4, 16, 48, 16
-    pre = build_prefill_step(model, mesh,
-                             ShapeSpec("p", S_prompt, B, "prefill"))
+    pshape = ShapeSpec("p", S_prompt, B, "prefill")
+    pre = build_prefill_step(model, mesh, pshape)
     prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S_prompt), 0, 250)
     first_ids, pcache = pre.fn(params, {"tokens": prompts})
     print("prefill done; first sampled token per request:",
           np.asarray(first_ids).ravel())
 
-    # decode continues in a fresh (decode-layout) cache re-filled by replaying
-    # the prompt; a production server would reshard the prefill cache instead.
+    # --- reshard path: prefill cache -> decode layout, continue from S_prompt
     dec = build_decode_step(model, mesh, ShapeSpec("d", S_total, B, "decode"))
+    reshard, _ = build_dense_cache_reshard(model, mesh, pshape, S_total)
+    cache = reshard(pcache)
+    ids = np.asarray(first_ids).reshape(B, 1)
+    generated = [ids.ravel().copy()]
+    for t in range(S_prompt, S_prompt + n_new - 1):
+        nxt, cache = dec.fn(params, cache, jnp.asarray(ids), jnp.int32(t))
+        ids = np.asarray(nxt)
+        generated.append(ids.ravel().copy())
+    generated = np.stack(generated).T
+    print("generated tokens (reshard path):")
+    print(generated)
+
+    # --- reference: the old replay-the-prompt loop
     cache_sds, _ = model.cache_abstract(B, S_total, dec.plan)
-    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_sds)
+    cache_r = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_sds)
     ids = prompts[:, :1]
-    generated = []
-    for t in range(S_prompt + n_new):
-        nxt, cache = dec.fn(params, cache, ids, jnp.int32(t))
-        # teacher-force the prompt, then free-run
+    replay = []
+    for t in range(S_prompt + n_new - 1):
+        nxt, cache_r = dec.fn(params, cache_r, ids, jnp.int32(t))
         ids = prompts[:, t + 1:t + 2] if t + 1 < S_prompt else nxt
         if t + 1 >= S_prompt:
-            generated.append(np.asarray(nxt).ravel())
-    print("generated tokens:")
-    print(np.stack(generated).T)
+            replay.append(np.asarray(nxt).ravel())
+    replay = np.stack(replay).T
+
+    assert np.array_equal(generated, replay), \
+        f"reshard path diverged from replay:\n{generated}\nvs\n{replay}"
+    print("token-level parity with the replay path: OK")
 
 
 if __name__ == "__main__":

@@ -137,9 +137,10 @@ class RunConfig:
     # tokens split over col (beyond-paper; trades weight gathers for much
     # smaller token gathers — see EXPERIMENTS.md §Perf)
     moe_expert_layout: str = "2d"
-    # SUMMA execution schedule of the Tesseract matmuls ("fused" | "ring");
-    # the config-surface default that launchers apply to ParallelContext
-    # (the per-op dispatch lives on ctx.matmul_schedule, DESIGN.md §2b).
+    # SUMMA execution schedule of the Tesseract matmuls ("fused" | "ring" |
+    # "auto"); the config-surface default that launchers apply to
+    # ParallelContext (the per-op dispatch lives on ctx.matmul_schedule,
+    # DESIGN.md §2b; "auto" resolves per-op from the token-block size).
     matmul_schedule: str = "fused"
 
 

@@ -50,7 +50,10 @@ class ParallelContext:
     #             (q× gathered-operand peak memory, zero overlap);
     #   "ring"  — Cannon-style skewed double ring over (row, col): one
     #             ppermute'd block per step contracted while the next block
-    #             is in flight (O(2·block) peak, comm/compute overlap).
+    #             is in flight (O(2·block) peak, comm/compute overlap);
+    #   "auto"  — per-op: ring for training/prefill-sized token blocks on
+    #             q >= 4 grids, fused for decode-sized ones (a single-token
+    #             step can't hide the skew/shift latency — DESIGN.md §2b/§7).
     matmul_schedule: str = "fused"
 
     # axis names (fixed; kept here so ops never hard-code strings)
@@ -70,14 +73,14 @@ class ParallelContext:
                 raise ValueError("megatron1d uses rows=depth=1, cols=p")
         elif self.mode != "gspmd":
             raise ValueError(f"unknown mode {self.mode!r}")
-        if self.matmul_schedule not in ("fused", "ring"):
+        if self.matmul_schedule not in ("fused", "ring", "auto"):
             raise ValueError(
-                f"matmul_schedule must be 'fused' or 'ring', "
+                f"matmul_schedule must be 'fused', 'ring' or 'auto', "
                 f"got {self.matmul_schedule!r}")
-        if self.matmul_schedule == "ring" and self.mode == "megatron1d":
+        if self.matmul_schedule in ("ring", "auto") and self.mode == "megatron1d":
             raise ValueError(
-                "matmul_schedule='ring' is a SUMMA schedule; megatron1d "
-                "has no [q, q] grid to ring over")
+                f"matmul_schedule={self.matmul_schedule!r} is a SUMMA "
+                "schedule selector; megatron1d has no [q, q] grid to ring over")
 
     # ---- derived sizes ----
     @property

@@ -52,6 +52,21 @@ class Plan:
         raise ValueError(kind)
 
 
+def kv_group_axes(ctx: ParallelContext, plan: Plan) -> tuple:
+    """Mesh axes sharding the decode-layout KV batch/pool dim for ``plan``.
+
+    Devices sharing one coordinate along these axes form a *KV group*: a
+    paged pool's block axis is sharded over them, and a batch slot's pages
+    live entirely inside its group's shard (serve/kv_cache.py allocates
+    from the co-located freelist, so cache reads never cross groups).
+    """
+    if plan.kind == "decode":
+        return ctx.token_axes
+    if plan.kind == "decode_dp":
+        return (ctx.axis_data,)
+    return ()                                 # long_decode: replicated pool
+
+
 def _f32_einsum(subs, *args, out_dtype):
     return jnp.einsum(subs, *args, preferred_element_type=jnp.float32).astype(out_dtype)
 
@@ -348,6 +363,23 @@ class TesseractOps:
         (loss_sum, count), _ = lax.scan(body, (zero, zero), (xc, lc, mc))
         return loss_sum, count
 
+    def _sharded_logits(self, x, w_head, vocab_real, tokens_sharded):
+        """Per-shard decode logits [B(_dd), v_loc] (pad masked -inf) + this
+        shard's global vocab offset.  The single head implementation that
+        both head_sample's distributed argmax and head_logits' gathered
+        full-vocab rows reduce — their bit-parity contract rests on it."""
+        ctx = self.ctx
+        gather_axes = (ctx.axis_depth, ctx.axis_row)
+        model_axes = (ctx.axis_depth, ctx.axis_row, ctx.axis_col)
+        xg = col.all_gather_inv(x[:, 0, :], ctx.axis_col, tiled=True, axis=1)
+        if tokens_sharded:
+            xg = col.all_gather_cat(xg, gather_axes, axis=0)        # [B_dd, h]
+        logits = _f32_einsum("bh,vh->bv", xg, w_head, out_dtype=jnp.float32)
+        v_loc = w_head.shape[0]
+        v_off = col.axis_linear_index(model_axes) * v_loc
+        vmask = (v_off + jnp.arange(v_loc)) < vocab_real
+        return jnp.where(vmask[None, :], logits, -jnp.inf), v_off
+
     def head_sample(self, x, w_head, *, vocab_real: int, temperature: float = 0.0,
                     rng=None, tokens_sharded: bool = None):
         """Decode-time next-token selection. x: [B_loc, 1, h/q].
@@ -358,16 +390,9 @@ class TesseractOps:
         ctx = self.ctx
         if tokens_sharded is None:
             tokens_sharded = self.plan.kind == "decode"
-        gather_axes = (ctx.axis_depth, ctx.axis_row)
         model_axes = (ctx.axis_depth, ctx.axis_row, ctx.axis_col)
-        xg = col.all_gather_inv(x[:, 0, :], ctx.axis_col, tiled=True, axis=1)  # [B_loc, h]
-        if tokens_sharded:
-            xg = col.all_gather_cat(xg, gather_axes, axis=0)                # [B_dd, h]
-        logits = _f32_einsum("bh,vh->bv", xg, w_head, out_dtype=jnp.float32)
-        v_loc = w_head.shape[0]
-        v_off = col.axis_linear_index(model_axes) * v_loc
-        vmask = (v_off + jnp.arange(v_loc)) < vocab_real
-        logits = jnp.where(vmask[None, :], logits, -jnp.inf)
+        logits, v_off = self._sharded_logits(x, w_head, vocab_real,
+                                             tokens_sharded)
         if temperature > 0.0 and rng is not None:
             g = jax.random.gumbel(rng, logits.shape, jnp.float32)
             logits = logits / temperature + g
@@ -378,6 +403,27 @@ class TesseractOps:
         i = self.seq_shard_index()
         b_loc = x.shape[0]
         return lax.dynamic_slice_in_dim(ids, i * b_loc, b_loc, axis=0)
+
+    def head_logits(self, x, w_head, *, vocab_real: int, tokens_sharded=None):
+        """Full-vocab decode logits for the serve sampler. x: [B_loc, 1, h/q].
+
+        Returns [B_loc, v_pad] float32, padded vocab masked to -inf; the
+        greedy argmax of a row is bit-identical to head_sample's distributed
+        argmax (same per-shard values, ties toward the smallest index)."""
+        ctx = self.ctx
+        if tokens_sharded is None:
+            tokens_sharded = self.plan.kind == "decode"
+        model_axes = (ctx.axis_depth, ctx.axis_row, ctx.axis_col)
+        logits, _ = self._sharded_logits(x, w_head, vocab_real,
+                                         tokens_sharded)
+        # vocab shards are laid out lexicographically over (depth, row, col),
+        # matching all_gather_cat's concatenation order.
+        full = col.all_gather_cat(logits, model_axes, axis=1)       # [B_dd, V]
+        if not tokens_sharded:
+            return full
+        i = self.seq_shard_index()
+        b_loc = x.shape[0]
+        return lax.dynamic_slice_in_dim(full, i * b_loc, b_loc, axis=0)
 
 
 # ===========================================================================
@@ -630,19 +676,28 @@ class MegatronOps:
         (loss_sum, count), _ = lax.scan(body, (zero, zero), (xc, lc, mc))
         return loss_sum, count
 
-    def head_sample(self, x, w_head, *, vocab_real: int, temperature: float = 0.0,
-                    rng=None, tokens_sharded: bool = None):
-        ctx = self.ctx
+    def _sharded_logits(self, x, w_head, vocab_real):
+        """Per-shard decode logits + vocab offset (see TesseractOps)."""
         xg = x[:, 0, :]                                   # [B_loc, h]
         logits = _f32_einsum("bh,vh->bv", xg, w_head, out_dtype=jnp.float32)
         v_loc = w_head.shape[0]
-        v_off = lax.axis_index(ctx.axis_col) * v_loc
+        v_off = col.axis_linear_index(self.tp_axes) * v_loc
         vmask = (v_off + jnp.arange(v_loc)) < vocab_real
-        logits = jnp.where(vmask[None, :], logits, -jnp.inf)
+        return jnp.where(vmask[None, :], logits, -jnp.inf), v_off
+
+    def head_sample(self, x, w_head, *, vocab_real: int, temperature: float = 0.0,
+                    rng=None, tokens_sharded: bool = None):
+        logits, v_off = self._sharded_logits(x, w_head, vocab_real)
         if temperature > 0.0 and rng is not None:
             g = jax.random.gumbel(rng, logits.shape, jnp.float32)
             logits = logits / temperature + g
         return col.distributed_argmax(logits, v_off, self.tp_axes)
+
+    def head_logits(self, x, w_head, *, vocab_real: int, tokens_sharded=None):
+        """Full-vocab decode logits [B_loc, v_pad] (see TesseractOps)."""
+        del tokens_sharded  # 1-D decode batch is only ever sharded over data
+        logits, _ = self._sharded_logits(x, w_head, vocab_real)
+        return col.all_gather_cat(logits, self.tp_axes, axis=1)
 
 
 def make_ops(ctx: ParallelContext, plan: Plan):

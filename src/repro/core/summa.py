@@ -51,6 +51,23 @@ def _maybe_f32(ctx: ParallelContext):
     return jnp.float32 if ctx.accum_fp32 else None
 
 
+def effective_schedule(ctx: ParallelContext, e_loc: int) -> str:
+    """Resolve ``matmul_schedule`` for one op from its local token-block rows.
+
+    "auto" picks per-op: the ring schedule only pays when each of its q steps
+    has enough arithmetic to hide a skew/shift (DESIGN.md §2b: q >= 4 and
+    enough local rows); a decode step's token block (E_loc = a handful of
+    requests) never does, so serve decode falls back to the fused gathers
+    while train/prefill matmuls on the same ParallelContext ride the ring.
+    Forward and backward resolve identically because E_loc is a static shape
+    shared by A and dC.
+    """
+    s = ctx.matmul_schedule
+    if s != "auto":
+        return s
+    return "ring" if ctx.q >= 4 and e_loc >= 2 * ctx.q else "fused"
+
+
 def _einsum(subs, *args, ctx: ParallelContext, out_dtype):
     acc = _maybe_f32(ctx)
     out = jnp.einsum(subs, *args, preferred_element_type=acc)
@@ -208,7 +225,7 @@ def _gather_w(ctx, w):
 
 
 def _tess_fwd(ctx: ParallelContext, a, w):
-    if ctx.matmul_schedule == "ring":
+    if effective_schedule(ctx, a.shape[-2]) == "ring":
         # Blocks stay resident; nothing gathered, nothing worth caching.
         return _ring_fwd(ctx, a, w, "...ef,fg->...eg"), (a, w)
     ag = _gather_a(ctx, a)
@@ -222,7 +239,7 @@ def _tess_fwd(ctx: ParallelContext, a, w):
 
 def _tess_bwd(ctx: ParallelContext, res, dc):
     ar, wr = res
-    if ctx.matmul_schedule == "ring":
+    if effective_schedule(ctx, dc.shape[-2]) == "ring":
         da, dw = _ring_bwd(ctx, ar, wr, dc,
                            "...eg,fg->...ef", "...ef,...eg->fg")
     else:
@@ -266,7 +283,7 @@ def tesseract_matmul_experts(ctx: ParallelContext, a, w):
 
 
 def _tess_exp_fwd(ctx, a, w):
-    if ctx.matmul_schedule == "ring":
+    if effective_schedule(ctx, a.shape[-2]) == "ring":
         return _ring_fwd(ctx, a, w, "nef,nfg->neg"), (a, w)
     ag = all_gather_inv(a, ctx.axis_col)      # [q, N, T, F_loc]
     wg = all_gather_inv(w, ctx.axis_row)      # [q, N, F_loc, G_loc]
@@ -278,7 +295,7 @@ def _tess_exp_fwd(ctx, a, w):
 
 def _tess_exp_bwd(ctx, res, dc):
     ar, wr = res
-    if ctx.matmul_schedule == "ring":
+    if effective_schedule(ctx, dc.shape[-2]) == "ring":
         da, dw = _ring_bwd(ctx, ar, wr, dc,
                            "neg,nfg->nef", "nef,neg->nfg")
         return da, dw.astype(wr.dtype)
@@ -347,7 +364,7 @@ def _ring_wt_bwd(ctx, a, w, dc):
 
 
 def _tess_wt_fwd(ctx, a, w):
-    if ctx.matmul_schedule == "ring":
+    if effective_schedule(ctx, a.shape[-2]) == "ring":
         return _ring_wt_fwd(ctx, a, w), (a, w)
     # C_{h,t} = sum_j A_{h,j} W_{t,j}^T : broadcast W within its column,
     # compute, then reduce partial C within the row (paper 3.1, C = A*B^T).
@@ -360,7 +377,7 @@ def _tess_wt_fwd(ctx, a, w):
 
 def _tess_wt_bwd(ctx, res, dc):
     a, wr = res
-    if ctx.matmul_schedule == "ring":
+    if effective_schedule(ctx, dc.shape[-2]) == "ring":
         da, dw = _ring_wt_bwd(ctx, a, wr, dc)
     else:
         wg = wr if ctx.cache_weight_gather else all_gather_inv(wr, ctx.axis_row)

@@ -1,10 +1,19 @@
-"""Serving launcher: batched prefill + greedy decode loop.
+"""Serving launcher: continuous-batching engine over the paged KV cache.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
-        --batch 4 --prompt-len 16 --new-tokens 16
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.serve --arch yi-6b --reduced \
+        --depth 2 --rows 2 --cols 2 --requests 8 --n-slots 8 \
+        --prompt-lens 8,16 --new-tokens 16
+
+Requests with mixed prompt/output lengths are admitted into a fixed slot
+batch, prefilled in buckets, resharded into the mesh-sharded block pool and
+decoded one fixed-shape step at a time; finished sequences retire in place
+(src/repro/serve/, DESIGN.md §7).
 
 For production decode the 1-D serve layout is the measured winner
-(EXPERIMENTS.md §Perf B1): pass --mode megatron1d.
+(EXPERIMENTS.md §Perf B1): pass --mode megatron1d.  matmul-schedule "auto"
+resolves ring-vs-fused per op (ring for prefill-sized token blocks on
+q >= 4 grids, fused for decode steps — DESIGN.md §2b).
 """
 from __future__ import annotations
 
@@ -17,55 +26,83 @@ def main():
     ap.add_argument("--mode", default="tesseract",
                     choices=("tesseract", "summa2d", "megatron1d"))
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--num-blocks", type=int, default=128)
+    ap.add_argument("--max-seq-len", type=int, default=256)
+    ap.add_argument("--prompt-lens", default="8,16",
+                    help="comma list cycled over requests (mixed lengths)")
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--rows", type=int, default=1)
     ap.add_argument("--cols", type=int, default=1)
     ap.add_argument("--depth", type=int, default=1)
     ap.add_argument("--matmul-schedule", default="fused",
-                    choices=("fused", "ring"))
+                    choices=("fused", "ring", "auto"))
+    ap.add_argument("--replan-to", type=int, default=0,
+                    help="simulate an elastic device-count change after 2 "
+                         "steps (rebuild mesh + reshard live KV blocks)")
     args = ap.parse_args()
 
     import jax
-    import jax.numpy as jnp
     import numpy as np
 
-    from ..configs.base import RunConfig, ShapeSpec
+    from ..configs.base import RunConfig
     from ..core.api import ParallelContext
     from ..core.mesh import logical_mesh
     from ..models.registry import build_model, get_arch, get_reduced
-    from ..runtime.steps import build_decode_step
+    from ..serve import EngineConfig, InferenceEngine, SamplingParams
 
     arch = get_reduced(args.arch) if args.reduced else get_arch(args.arch)
+    sched = args.matmul_schedule
+    # megatron1d + ring/auto raises in ParallelContext, same as launch.train
     ctx = ParallelContext(mode=args.mode, data=args.data, depth=args.depth,
                           rows=args.rows, cols=args.cols,
-                          matmul_schedule=args.matmul_schedule)
+                          matmul_schedule=sched)
     mesh = logical_mesh(ctx)
     run = RunConfig(param_dtype="float32", compute_dtype="float32",
                     loss_chunk=64, q_chunk=32, kv_chunk=32,
-                    matmul_schedule=args.matmul_schedule)
+                    matmul_schedule=sched)
     model = build_model(arch.model, ctx, run)
     params = model.init(jax.random.PRNGKey(0))
 
-    total = args.prompt_len + args.new_tokens
-    dec = build_decode_step(model, mesh,
-                            ShapeSpec("d", total, args.batch, "decode"))
-    cache_sds, _ = model.cache_abstract(args.batch, total, dec.plan)
-    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_sds)
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0,
-                                 min(250, model.cfg.vocab_size))
-    ids = prompts[:, :1]
-    out = []
-    for t in range(total - 1):
-        nxt, cache = dec.fn(params, cache, ids, jnp.int32(t))
-        ids = (prompts[:, t + 1:t + 2] if t + 1 < args.prompt_len else nxt)
-        if t + 1 >= args.prompt_len:
-            out.append(np.asarray(nxt).ravel())
-    print("generated:")
-    print(np.stack(out).T)
+    engine = InferenceEngine(model, mesh, params, EngineConfig(
+        n_slots=args.n_slots, block_size=args.block_size,
+        num_blocks=args.num_blocks, max_seq_len=args.max_seq_len))
+
+    plens = [int(x) for x in args.prompt_lens.split(",")]
+    rng = np.random.RandomState(0)
+    vocab = min(250, model.cfg.vocab_size)
+    reqs = []
+    for i in range(args.requests):
+        prompt = rng.randint(0, vocab, (plens[i % len(plens)],)).tolist()
+        reqs.append(engine.add_request(prompt, SamplingParams(
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p, seed=i, max_new_tokens=args.new_tokens)))
+
+    if args.replan_to:
+        engine.step()
+        engine.step()
+        rp = engine.replan_to(args.replan_to)
+        print(f"replanned to {rp.n_used} devices: data={rp.ctx.data} "
+              f"[q={rp.ctx.rows},{rp.ctx.cols},d={rp.ctx.depth}] "
+              f"(idle={rp.n_idle})")
+
+    results = engine.run()
+    for r in reqs:
+        print(f"req {r.rid} (prompt {r.orig_prompt_len}, "
+              f"preempted {r.preemptions}x): {results[r.rid]}")
+    s = engine.stats
+    lat = s.latency_percentiles()
+    print(f"steps={s.steps} prefills={s.prefills} "
+          f"preemptions={s.preemptions} tokens={s.tokens} "
+          f"tokens/s={s.tokens_per_s():.1f} "
+          f"p50={lat['p50_ms']:.1f}ms p95={lat['p95_ms']:.1f}ms "
+          f"(CPU wall-clock: indicative only)")
 
 
 if __name__ == "__main__":

@@ -32,7 +32,7 @@ def main():
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--zero1", action="store_true")
     ap.add_argument("--matmul-schedule", default="fused",
-                    choices=("fused", "ring"))
+                    choices=("fused", "ring", "auto"))
     ap.add_argument("--lr", type=float, default=3e-4)
     args = ap.parse_args()
 

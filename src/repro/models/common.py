@@ -164,7 +164,8 @@ def decode_attention(q, k_cache, v_cache, *, cur_pos, kv_map=None,
     """Single-step attention against a cache.
 
     q: [B, Hq, D]; k_cache/v_cache: [B, S, Hkv, D]; cur_pos: scalar int —
-    number of valid cache entries (new token's position is cur_pos).
+    number of valid cache entries (new token's position is cur_pos) — or a
+    [B] vector of per-request positions (continuous batching mixes lengths).
     kv_map: optional [Hq] map from q-head to kv-head (non-uniform GQA);
     default uses Hq = g*Hkv contiguous grouping.
     """
@@ -172,6 +173,8 @@ def decode_attention(q, k_cache, v_cache, *, cur_pos, kv_map=None,
     S, Hkv = k_cache.shape[1], k_cache.shape[2]
     Dv = v_cache.shape[-1]
     scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    if jnp.ndim(cur_pos) == 1:
+        cur_pos = cur_pos[:, None, None]                 # [B, 1, 1]
     if kv_map is not None:
         kc = jnp.take(k_cache, kv_map, axis=2)           # [B, S, Hq, D]
         vc = jnp.take(v_cache, kv_map, axis=2)
@@ -209,3 +212,56 @@ def cache_update(cache, new_k, new_v, cur_pos):
     v = lax.dynamic_update_slice_in_dim(cache["v"], new_v.astype(cache["v"].dtype),
                                         cur_pos, axis=1)
     return dict(cache, k=k, v=v)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache primitives (serve/ continuous batching; DESIGN.md §7).
+#
+# A layer's pool is [P_loc, bs, Hkv, D]: P_loc physical blocks of bs
+# positions each.  A block table [B, nb] maps request b's logical block i
+# (positions i*bs .. i*bs+bs-1) to a physical block id; ids here are LOCAL
+# (the step builder subtracts the device group's offset).  Retired/inactive
+# batch slots point every table entry at the group's scratch block and are
+# masked by their length, so the math stays fixed-shape across steps.
+# ---------------------------------------------------------------------------
+
+def paged_gather(pool_k, pool_v, table):
+    """Gather a request-major contiguous KV view from the block pool.
+
+    pool_k/pool_v: [P_loc, bs, Hkv, D]; table: [B, nb] local block ids.
+    Returns k, v: [B, nb*bs, Hkv, D] in logical position order.
+    """
+    B, nb = table.shape
+    bs = pool_k.shape[1]
+    k = jnp.take(pool_k, table.reshape(-1), axis=0)
+    v = jnp.take(pool_v, table.reshape(-1), axis=0)
+    sh = (B, nb * bs) + pool_k.shape[2:]
+    return k.reshape(sh), v.reshape(sh)
+
+
+def paged_update(pool, table, pos, new_k, new_v):
+    """Scatter one step's K/V into the pool at each request's position.
+
+    pool: {"k","v": [P_loc, bs, Hkv, D]}; table: [B, nb]; pos: [B] target
+    position (count of already-cached tokens); new_k/new_v: [B, 1, Hkv, D].
+    """
+    bs = pool["k"].shape[1]
+    blk = jnp.take_along_axis(table, (pos // bs)[:, None], axis=1)[:, 0]
+    off = pos % bs
+    k = pool["k"].at[blk, off].set(new_k[:, 0].astype(pool["k"].dtype))
+    v = pool["v"].at[blk, off].set(new_v[:, 0].astype(pool["v"].dtype))
+    return dict(pool, k=k, v=v)
+
+
+def paged_attention(q, pool_k, pool_v, table, pos, *, kv_map=None,
+                    local_window: int = 0, softmax_scale=None):
+    """Single-step attention against a paged pool (gather + decode_attention).
+
+    q: [B, Hq, D]; pos: [B] per-request current position (the incoming
+    token's position; its K/V must already be in the pool — call
+    paged_update first, matching the dense cache_update-then-attend order).
+    """
+    k, v = paged_gather(pool_k, pool_v, table)
+    return decode_attention(q, k, v, cur_pos=pos, kv_map=kv_map,
+                            local_window=local_window,
+                            softmax_scale=softmax_scale)

@@ -300,6 +300,67 @@ class DenseLM:
         return ({"k": Sds(shp, self.cdt), "v": Sds(shp, self.cdt)},
                 {"k": kv_sp, "v": kv_sp})
 
+    def paged_cache_abstract(self, num_blocks: int, block_size: int, plan):
+        """Global block-pool ShapeDtypeStructs + specs (paged decode layout).
+
+        The pool is [L, P, bs, Hkv, D]: the physical-block axis P is sharded
+        over the plan's KV group axes (serve/kv_cache.py keeps each batch
+        slot's pages inside its group shard) and KV heads over col exactly
+        like the dense decode cache — so reads stay device-local."""
+        from jax import ShapeDtypeStruct as Sds
+        from jax.sharding import PartitionSpec as P
+        from ..core.ops import kv_group_axes
+        cfg = self.cfg
+        gaxes = kv_group_axes(self.ctx, plan)
+        heads = None
+        if self.ctx.mode != "megatron1d" and self.kv_shard:
+            heads = "col"
+        sp = P(None, gaxes if gaxes else None, None, heads, None)
+        shp = (cfg.num_layers, num_blocks, block_size, cfg.num_kv_heads,
+               self.D)
+        return ({"k": Sds(shp, self.cdt), "v": Sds(shp, self.cdt)},
+                {"k": sp, "v": sp})
+
+    def _block_decode_paged(self, p, x, pool_l, table, pos, ops):
+        """Paged analogue of _block_decode: gather K/V pages through the
+        block table, scatter the new token's K/V at each request's own
+        position (mixed lengths in one fixed-shape batch)."""
+        cfg = self.cfg
+        h = self._norm(ops, x, p["ln1"], p.get("ln1b"))
+        q, k, v = self._qkv(p, h, ops, pos[:, None])
+        pool_l = cm.paged_update(pool_l, table, pos, k, v)
+        kv_map = None if self.kv_shard else self._kv_map(ops)
+        out = cm.paged_attention(q[:, 0], pool_l["k"], pool_l["v"], table,
+                                 pos, kv_map=kv_map,
+                                 local_window=cfg.local_window)
+        x = x + self._attn_out(p, out[:, None], ops, self._head_mask(ops))
+        h2 = self._norm(ops, x, p["ln2"], p.get("ln2b"))
+        x = x + self._mlp(p, h2, ops)
+        return x, pool_l
+
+    def decode_paged(self, params, pool, table, ids, pos, ops):
+        """One continuous-batching serve step against the paged block pool.
+
+        ids: [B', 1] host token layout; table: [B_loc, nb] LOCAL block ids;
+        pos: [B_loc] per-request positions.  Returns (full-vocab logits
+        [B_loc, v_pad] for the serve sampler, updated pool)."""
+        x = ops.embed(ids, params["embed"]).astype(self.cdt)
+        cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt)
+                                      if a.dtype == self.pdt and a.ndim > 1
+                                      else a, t)
+
+        def body(xx, xs):
+            bp, pl = xs
+            y, pl2 = self._block_decode_paged(cast(bp), xx, pl, table, pos,
+                                              ops)
+            return y, pl2
+
+        x, new_pool = lax.scan(body, x, (params["blocks"], pool))
+        x = self._norm(ops, x, params["ln_f"], params.get("ln_fb"))
+        logits = ops.head_logits(x, params["head"].astype(self.cdt),
+                                 vocab_real=self.cfg.vocab_size)
+        return logits, new_pool
+
     def prefill_cache_specs(self, ops):
         """Cache specs in prefill layout: batch over data, seq sharded over
         the sequence-parallel axes (kept local — no gathered-cache output)."""
@@ -327,7 +388,13 @@ class DenseLM:
         return {}
 
     def prefill(self, params, batch, ops):
-        """Process a full prompt; returns (next_ids, cache-in-prefill-layout)."""
+        """Process a full prompt; returns (next_ids, cache-in-prefill-layout).
+
+        With an optional ``batch["lengths"]`` ([B'] true prompt lengths for
+        right-padded prompts — the serve engine's bucketed prefill) the head
+        runs at each request's own last position and the first slot of the
+        return is full-vocab LOGITS [B, v_pad] for the sampler instead of
+        greedy ids."""
         x = ops.embed(batch["tokens"], params["embed"]).astype(self.cdt)
         S_loc = x.shape[1]
         n_seq = (self.ctx.depth * self.ctx.rows if ops.plan.seq_sharded else 1)
@@ -345,6 +412,13 @@ class DenseLM:
         body = maybe_remat(body, self.run)
         x, (kc, vc) = lax.scan(body, x, params["blocks"])
         x = self._norm(ops, x, params["ln_f"], params.get("ln_fb"))
+        if "lengths" in batch:
+            x_last = last_token_at(ops, x, self.ctx, batch["lengths"])
+            logits = ops.head_logits(x_last,
+                                     params["head"].astype(self.cdt),
+                                     vocab_real=self.cfg.vocab_size,
+                                     tokens_sharded=False)
+            return logits, {"k": kc, "v": vc}
         x_last = ops_last_token(ops, x, self.ctx)
         ids = ops.head_sample(x_last, params["head"].astype(self.cdt),
                               vocab_real=self.cfg.vocab_size)
@@ -401,3 +475,22 @@ def ops_last_token(ops, x, ctx):
     else:
         g = all_gather_inv(lt, (ctx.axis_depth, ctx.axis_row))
     return g[-1]
+
+
+def last_token_at(ops, x, ctx, lengths):
+    """[B, S_loc, f] + per-request true lengths -> [B, 1, f] hidden states at
+    position lengths-1, invariant over the sequence-sharding axes.
+
+    The bucketed serve prefill right-pads prompts, so "last token" is a
+    per-request position, not column -1.  Each seq shard contributes its own
+    slice (zeros elsewhere) and one small psum replicates the result."""
+    idx = lengths - 1
+    if not ops.plan.seq_sharded:
+        return jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    S_loc = x.shape[1]
+    local = idx - ops.seq_shard_index() * S_loc
+    valid = (local >= 0) & (local < S_loc)
+    safe = jnp.clip(local, 0, S_loc - 1)
+    xl = jnp.take_along_axis(x, safe[:, None, None], axis=1)
+    xl = jnp.where(valid[:, None, None], xl, jnp.zeros_like(xl))
+    return lax.psum(xl, ctx.seq_shard_axes)

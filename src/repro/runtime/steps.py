@@ -285,7 +285,12 @@ def build_train_step(model, mesh, shape: ShapeSpec):
 # serve steps
 # ---------------------------------------------------------------------------
 
-def build_prefill_step(model, mesh, shape: ShapeSpec):
+def build_prefill_step(model, mesh, shape: ShapeSpec, *,
+                       with_lengths: bool = False):
+    """Prefill step.  With ``with_lengths=True`` the batch gains a
+    ``lengths`` [B] input (true prompt lengths of right-padded prompts) and
+    the first output is full-vocab LOGITS at each request's own last
+    position instead of greedy ids — the serve engine's bucketed prefill."""
     ctx = model.ctx
     plan = make_plan(ctx, shape)
     ops = make_ops(ctx, plan)
@@ -301,6 +306,10 @@ def build_prefill_step(model, mesh, shape: ShapeSpec):
     cache_specs = model.prefill_cache_specs(ops)
     ids_spec = P("data", None) if plan.kind != "long_decode" else P(None, None)
     batch_sds, batch_specs_ = batch_abstract(ops, shape, ctx, model)
+    if with_lengths:
+        batch_sds["lengths"] = jax.ShapeDtypeStruct((shape.global_batch,),
+                                                    jnp.int32)
+        batch_specs_["lengths"] = P("data")
 
     in_sh = (_shardings(mesh, specs), _shardings(mesh, batch_specs_))
     out_sh = (NamedSharding(mesh, ids_spec), _shardings(mesh, cache_specs))
@@ -344,6 +353,147 @@ def build_decode_step(model, mesh, shape: ShapeSpec):
                       abstract_inputs=(abs_params, cache_sds, ids_sds, pos_sds),
                       in_shardings=in_sh, out_shardings=out_sh,
                       mesh=mesh, plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# paged serving steps (serve/ continuous batching; DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def _group_spec(gaxes, *extra):
+    return P(gaxes if gaxes else None, *extra)
+
+
+def build_paged_decode_step(model, mesh, n_slots: int, num_blocks: int,
+                            block_size: int, max_blocks: int):
+    """Decode step against a mesh-sharded paged KV pool.
+
+    fn(params, pool, tables, pos, ids) -> (logits, pool)
+
+    - pool: {"k","v": [L, P, bs, Hkv, D]} (donated), block axis sharded over
+      the plan's KV group axes, heads over col.
+    - tables: [n_slots, max_blocks] int32 GLOBAL block ids (each slot's
+      entries point into its own group's partition; the local step subtracts
+      the group offset).
+    - pos: [n_slots] int32 per-request positions (mixed lengths).
+    - ids: [n_slots, 1] int32 host-layout input tokens.
+    - logits: [n_slots, v_pad] float32 full-vocab rows for the sampler.
+    """
+    from ..core.ops import kv_group_axes
+    from ..core import collectives as col_mod
+
+    ctx = model.ctx
+    plan = make_plan(ctx, ShapeSpec("paged", 1, n_slots, "decode"))
+    ops = make_ops(ctx, plan)
+    specs = model.specs(ops)
+    pool_sds, pool_specs = model.paged_cache_abstract(num_blocks, block_size,
+                                                      plan)
+    gaxes = kv_group_axes(ctx, plan)
+    sizes = dict(data=ctx.data, depth=ctx.depth, row=ctx.rows, col=ctx.cols)
+    n_groups = 1
+    for a in gaxes:
+        n_groups *= sizes[a]
+    bpg = num_blocks // n_groups
+
+    table_spec = _group_spec(gaxes, None)
+    pos_spec = _group_spec(gaxes)
+    logits_spec = _group_spec(gaxes, None)
+    ids_spec = ops.spec_tokens_in()
+
+    def local_step(params, pool, tables, pos, ids):
+        if gaxes:
+            tables = tables - col_mod.axis_linear_index(gaxes) * bpg
+        logits, new_pool = model.decode_paged(params, pool, tables, ids,
+                                              pos, ops)
+        return logits, new_pool
+
+    tables_sds = jax.ShapeDtypeStruct((n_slots, max_blocks), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
+    ids_sds = jax.ShapeDtypeStruct((n_slots, 1), jnp.int32)
+
+    in_specs = (specs, pool_specs, table_spec, pos_spec, ids_spec)
+    out_specs = (logits_spec, pool_specs)
+    in_sh = (_shardings(mesh, specs), _shardings(mesh, pool_specs),
+             NamedSharding(mesh, table_spec), NamedSharding(mesh, pos_spec),
+             NamedSharding(mesh, ids_spec))
+    out_sh = (NamedSharding(mesh, logits_spec), _shardings(mesh, pool_specs))
+    smapped = shard_map(local_step, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs)
+    fn = jax.jit(smapped, donate_argnums=(1,), in_shardings=in_sh,
+                 out_shardings=out_sh)
+    abs_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return StepBundle(fn=fn,
+                      abstract_inputs=(abs_params, pool_sds, tables_sds,
+                                       pos_sds, ids_sds),
+                      in_shardings=in_sh, out_shardings=out_sh,
+                      mesh=mesh, plan=plan)
+
+
+def build_paged_reshard(model, mesh, n_pre: int, bucket: int,
+                        num_blocks: int, block_size: int, decode_plan):
+    """Prefill->paged-pool cache reshard (replaces the prompt-replay hack).
+
+    Returns reshard(pool, prefill_cache, tables) -> pool: scatters the
+    prefill-layout cache [L, B, S_bucket, Hkv, D] into the paged pool
+    through per-request scatter tables [B, S_bucket/bs] of GLOBAL block ids
+    (rows/tail blocks without a real target point at a scratch block).  A
+    plain jitted global scatter: XLA inserts the cross-layout collectives,
+    exactly one compile per prefill bucket.
+    """
+    ctx = model.ctx
+    pplan = make_plan(ctx, ShapeSpec("pre", bucket, n_pre, "prefill"))
+    pops = make_ops(ctx, pplan)
+    pcache_specs = model.prefill_cache_specs(pops)
+    pool_sds, pool_specs = model.paged_cache_abstract(num_blocks, block_size,
+                                                      decode_plan)
+    nb = bucket // block_size
+    L = model.cfg.num_layers
+
+    def f(pool, pcache, tables):
+        idx = tables.reshape(-1)                        # [B*nb]
+        out = dict(pool)
+        for leaf in ("k", "v"):
+            src = pcache[leaf].reshape((L, n_pre * nb, block_size)
+                                       + pool[leaf].shape[3:])
+            out[leaf] = pool[leaf].at[:, idx].set(
+                src.astype(pool[leaf].dtype))
+        return out
+
+    in_sh = (_shardings(mesh, pool_specs), _shardings(mesh, pcache_specs),
+             NamedSharding(mesh, P(None, None)))
+    out_sh = _shardings(mesh, pool_specs)
+    return jax.jit(f, donate_argnums=(0,), in_shardings=in_sh,
+                   out_shardings=out_sh)
+
+
+def build_dense_cache_reshard(model, mesh, prefill_shape: ShapeSpec,
+                              total_len: int):
+    """Prefill->dense-decode cache reshard for the static decode loop.
+
+    Returns reshard(prefill_cache) -> decode cache [L, B, total_len, ...]:
+    the prompt K/V land in positions [0, S_prompt) of a zeroed decode-layout
+    cache; decode then continues from pos = S_prompt instead of replaying
+    the prompt token by token (examples/serve_decode.py).
+    """
+    ctx = model.ctx
+    pplan = make_plan(ctx, prefill_shape)
+    pops = make_ops(ctx, pplan)
+    pcache_specs = model.prefill_cache_specs(pops)
+    B = prefill_shape.global_batch
+    dplan = make_plan(ctx, ShapeSpec("d", total_len, B, "decode"))
+    cache_sds, cache_specs = model.cache_abstract(B, total_len, dplan)
+    S_p = prefill_shape.seq_len
+
+    def f(pcache):
+        out = {}
+        for leaf in ("k", "v"):
+            z = jnp.zeros(cache_sds[leaf].shape, cache_sds[leaf].dtype)
+            out[leaf] = z.at[:, :, :S_p].set(
+                pcache[leaf].astype(z.dtype))
+        return out
+
+    in_sh = (_shardings(mesh, pcache_specs),)
+    out_sh = _shardings(mesh, cache_specs)
+    return jax.jit(f, in_shardings=in_sh, out_shardings=out_sh), dplan
 
 
 def unshard_ids(ops, ctx, ids, plan):

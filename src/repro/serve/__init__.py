@@ -1,0 +1,19 @@
+"""Continuous-batching inference engine on the Tesseract [q, q, d] mesh.
+
+Public surface:
+
+    EngineConfig, InferenceEngine     — engine loop (serve/engine.py)
+    SamplingParams                    — per-request sampling (serve/sampling.py)
+    Request, Scheduler                — admission/preemption (serve/scheduler.py)
+    PagedCacheConfig, PagedKVCache    — mesh-sharded block pool (serve/kv_cache.py)
+"""
+from .engine import EngineConfig, EngineStats, InferenceEngine
+from .kv_cache import BlockPool, PagedCacheConfig, PagedKVCache
+from .sampling import SamplingParams, sample_tokens
+from .scheduler import Request, Scheduler
+
+__all__ = [
+    "BlockPool", "EngineConfig", "EngineStats", "InferenceEngine",
+    "PagedCacheConfig", "PagedKVCache", "Request", "SamplingParams",
+    "Scheduler", "sample_tokens",
+]

@@ -1,0 +1,290 @@
+"""Continuous-batching inference engine over the Tesseract mesh.
+
+One ``InferenceEngine.step`` is: admit waiting requests into free slots,
+prefill them (bucketed fixed shapes, per-request true lengths), reshard the
+prefill cache into the paged pool, run ONE fixed-shape paged decode step for
+the whole slot batch (mixed lengths, block-table gather/scatter), sample
+per-request, retire finished sequences in place.  See DESIGN.md §7.
+
+The decode batch shape never changes across steps — batch composition does:
+retired slots point at their group's scratch block until re-admission, so
+the step function compiles exactly once per engine.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..configs.base import ShapeSpec
+from ..runtime.steps import (build_paged_decode_step, build_paged_reshard,
+                             build_prefill_step, make_plan)
+from .kv_cache import PagedCacheConfig, PagedKVCache
+from .sampling import SamplingParams, sample_tokens, slot_arrays
+from .scheduler import Request, Scheduler
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    n_slots: int = 4
+    block_size: int = 8
+    num_blocks: int = 64         # global, across all KV groups
+    max_seq_len: int = 256
+    prefill_batch: int = 0       # 0 -> ctx.data (smallest valid)
+    eos_id: int = -1
+
+
+@dataclass
+class EngineStats:
+    steps: int = 0
+    prefills: int = 0
+    preemptions: int = 0
+    tokens: int = 0
+    token_times: list = field(default_factory=list)  # seconds per emitted token
+    wall: float = 0.0
+
+    def tokens_per_s(self) -> float:
+        return self.tokens / self.wall if self.wall else 0.0
+
+    def latency_percentiles(self):
+        if not self.token_times:
+            return {"p50_ms": 0.0, "p95_ms": 0.0}
+        t = np.array(self.token_times) * 1e3
+        return {"p50_ms": float(np.percentile(t, 50)),
+                "p95_ms": float(np.percentile(t, 95))}
+
+
+class InferenceEngine:
+    def __init__(self, model, mesh, params, cfg: EngineConfig):
+        self.model, self.mesh, self.params, self.cfg = model, mesh, params, cfg
+        self._build()
+
+    # ---------------------------------------------------------------- build
+    def _build(self):
+        model, mesh, cfg = self.model, self.mesh, self.cfg
+        ctx = model.ctx
+        if not hasattr(model, "decode_paged"):
+            raise NotImplementedError(
+                f"{type(model).__name__} has no paged decode path")
+        self.plan = make_plan(ctx, ShapeSpec("serve", 1, cfg.n_slots,
+                                             "decode"))
+        if self.plan.kind == "decode" and cfg.n_slots % ctx.batch_shards:
+            raise ValueError(
+                f"n_slots={cfg.n_slots} must divide over "
+                f"{ctx.batch_shards} token shards (or be < them to "
+                f"downgrade the plan)")
+        self.cache = PagedKVCache(
+            model, mesh, self.plan,
+            PagedCacheConfig(num_blocks=cfg.num_blocks,
+                             block_size=cfg.block_size,
+                             max_seq_len=cfg.max_seq_len))
+        self.sched = Scheduler(self.cache, cfg.n_slots)
+        self.pool = self.cache.init_arrays()
+        self.dec = build_paged_decode_step(
+            model, mesh, cfg.n_slots, cfg.num_blocks, cfg.block_size,
+            self.cache.max_blocks)
+        self._prefill_bundles = {}   # bucket_len -> (prefill, reshard)
+        self._b_pre = cfg.prefill_batch or max(1, ctx.data)
+        if self._b_pre % max(1, ctx.data):
+            raise ValueError("prefill_batch must divide over data")
+        # sequence-shard divisor for prefill buckets
+        if ctx.mode == "megatron1d":
+            self._seq_div = ctx.cols
+        else:
+            self._seq_div = ctx.depth * ctx.rows
+        if not hasattr(self, "stats"):      # survives replan rebuilds
+            self.stats = EngineStats()
+            self.requests = []
+
+    def _bucket(self, n: int) -> int:
+        """Prefill bucket covering ``n`` tokens: power-of-two multiples of
+        lcm(block_size, seq shards) — divisible by both the reshard's block
+        split and the sequence sharding — clamped to the pool's maximum
+        resident length (Scheduler.add guarantees n fits that)."""
+        import math
+        base = math.lcm(self.cfg.block_size, self._seq_div)
+        cap = -(-self.cache.max_blocks * self.cfg.block_size // base) * base
+        b = base
+        while b < n and b < cap:
+            b = min(b * 2, cap)
+        return b
+
+    def _prefill_for(self, bucket: int):
+        if bucket not in self._prefill_bundles:
+            shape = ShapeSpec("ep", bucket, self._b_pre, "prefill")
+            pre = build_prefill_step(self.model, self.mesh, shape,
+                                     with_lengths=True)
+            reshard = build_paged_reshard(
+                self.model, self.mesh, self._b_pre, bucket,
+                self.cfg.num_blocks, self.cfg.block_size, self.plan)
+            self._prefill_bundles[bucket] = (pre, reshard)
+        return self._prefill_bundles[bucket]
+
+    # ------------------------------------------------------------- requests
+    def add_request(self, prompt, sampling: SamplingParams = SamplingParams(),
+                    rid=None) -> Request:
+        req = Request(prompt, sampling, eos_id=self.cfg.eos_id, rid=rid)
+        self.requests.append(req)
+        return self.sched.add(req)
+
+    # -------------------------------------------------------------- prefill
+    def _run_prefills(self, admitted):
+        """Bucketed, batched prefill of newly admitted requests + reshard of
+        their caches into the paged pool.  Returns the number of tokens
+        emitted (one per request — counted here because a same-step
+        preemption folds out_tokens away before step()'s accounting)."""
+        admitted = sorted(admitted, key=lambda r: len(r.seq_tokens))
+        for i in range(0, len(admitted), self._b_pre):
+            chunk = admitted[i:i + self._b_pre]
+            bucket = self._bucket(max(len(r.seq_tokens) for r in chunk))
+            pre, reshard = self._prefill_for(bucket)
+            tokens = np.zeros((self._b_pre, bucket), np.int32)
+            lengths = np.ones((self._b_pre,), np.int32)
+            nb_bucket = bucket // self.cfg.block_size
+            # scatter table: rows/blocks without a real target hit scratch
+            tables = np.zeros((self._b_pre, nb_bucket), np.int32)
+            tables[:, :] = self.cache.pool.scratch(0)
+            for j, req in enumerate(chunk):
+                seq = req.seq_tokens
+                tokens[j, :len(seq)] = seq
+                lengths[j] = len(seq)
+                nb_req = self.cache.blocks_for(len(seq))
+                tables[j, :nb_req] = req.block_ids[:nb_req]
+            logits, pcache = pre.fn(self.params,
+                                    {"tokens": tokens, "lengths": lengths})
+            self.pool = reshard(self.pool, pcache, tables)
+            temps, ks, ps, seeds = slot_arrays([r.sampling for r in chunk]
+                                               + [SamplingParams()]
+                                               * (self._b_pre - len(chunk)))
+            toks = np.asarray(sample_tokens(logits, temps, ks, ps, seeds,
+                                            lengths))
+            for j, req in enumerate(chunk):
+                req.num_cached = len(req.seq_tokens)
+                tok = int(toks[j])
+                req.out_tokens.append(tok)
+                req.last_token = tok
+            self.stats.prefills += 1
+        # a prefilled request may already be done (max_new_tokens == 1 after
+        # a late preemption, or eos right away)
+        for req in admitted:
+            if req.finished:
+                self.sched.retire(req)
+        return len(admitted)
+
+    # ---------------------------------------------------------------- step
+    def step(self):
+        """One engine iteration; returns [(rid, token)] emitted this step."""
+        t0 = time.perf_counter()
+        admitted = self.sched.admit()
+        prefill_emitted = self._run_prefills(admitted) if admitted else 0
+        preempted = self.sched.ensure_decode_capacity()
+        self.stats.preemptions += len(preempted)
+        running = self.sched.running
+        emitted = []
+        if running:
+            n = self.cfg.n_slots
+            ids = np.zeros((n, 1), np.int32)
+            pos = np.zeros((n,), np.int32)
+            slot_blocks = [[] for _ in range(n)]
+            groups = [self.sched.group_of_slot(s) for s in range(n)]
+            samplings = [SamplingParams()] * n
+            for req in running:
+                s = req.slot
+                ids[s, 0] = req.last_token
+                pos[s] = req.num_cached
+                slot_blocks[s] = req.block_ids
+                samplings[s] = req.sampling
+            tables = self.cache.make_table(slot_blocks, groups)
+            logits, self.pool = self.dec.fn(self.params, self.pool, tables,
+                                            pos, ids)
+            temps, ks, ps, seeds = slot_arrays(samplings)
+            toks = np.asarray(sample_tokens(logits, temps, ks, ps, seeds,
+                                            pos + 1))
+            for req in running:
+                req.num_cached += 1
+                tok = int(toks[req.slot])
+                req.out_tokens.append(tok)
+                req.last_token = tok
+                emitted.append((req.rid, tok))
+                if req.finished:
+                    self.sched.retire(req)
+        dt = time.perf_counter() - t0
+        self.stats.steps += 1
+        self.stats.wall += dt
+        new_tokens = len(emitted) + prefill_emitted
+        self.stats.tokens += new_tokens
+        if new_tokens:
+            self.stats.token_times.extend([dt / new_tokens] * new_tokens)
+        return emitted
+
+    def run(self, max_steps: int = 100000):
+        """Drive until every request finishes; returns {rid: out_tokens} for
+        every request this engine has ever accepted."""
+        for _ in range(max_steps):
+            if not self.sched.has_work:
+                break
+            self.step()
+        else:
+            raise RuntimeError("engine did not drain (stuck scheduler?)")
+        return {r.rid: list(r.generated) for r in self.requests}
+
+    # -------------------------------------------------------------- elastic
+    def replan_to(self, n_devices: int):
+        """Rebuild the mesh for ``n_devices`` and reshard live KV blocks.
+
+        Uses runtime.elastic.replan (TP group is atomic; data shrinks),
+        copies every running request's resident blocks into its new group's
+        partition, and recompiles the serve steps.  Waiting requests and all
+        request state survive untouched."""
+        import jax
+        from ..core.mesh import logical_mesh
+        from ..models.registry import build_model
+        from ..runtime.elastic import replan
+
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from ..core.ops import make_ops
+
+        rp = replan(n_devices, self.model.ctx,
+                    global_batch=self.cfg.n_slots)
+        old_sched = self.sched
+        old_pool_np = {k: np.asarray(v) for k, v in self.pool.items()}
+        params_np = jax.tree.map(np.asarray, self.params)
+
+        self.model = build_model(self.model.cfg, rp.ctx, self.model.run)
+        self.mesh = logical_mesh(rp.ctx, jax.devices()[:rp.n_used])
+        self._build()    # stats/requests survive (guarded init in _build)
+
+        # re-place params on the shrunken mesh
+        specs = self.model.specs(make_ops(rp.ctx, self.plan))
+        shardings = jax.tree.map(lambda sp: NamedSharding(self.mesh, sp),
+                                 specs, is_leaf=lambda x: isinstance(x, P))
+        self.params = jax.tree.map(jax.device_put, params_np, shardings)
+
+        # carry scheduler state over; reallocate pages in the new groups.
+        # The admit clock must carry too: carried residents keep their old
+        # admit_seq, and a reset clock would make every post-replan
+        # admission look "older" than them, inverting eviction priority.
+        self.sched.waiting = old_sched.waiting
+        self.sched._admit_clock = old_sched._admit_clock
+        new_pool_np = {k: np.array(v) for k, v in self.pool.items()}
+        for slot in range(min(len(old_sched.slots), self.cfg.n_slots)):
+            req = old_sched.slots[slot]
+            if req is None:
+                continue
+            g = self.sched.group_of_slot(slot)
+            old_blocks = req.block_ids
+            blocks = self.cache.pool.alloc(g, len(old_blocks))
+            if blocks is None:
+                # shrunken pool can't host it: evict + re-prefill later
+                req.block_ids = []
+                self.sched.preempt(req)
+                continue
+            for leaf in ("k", "v"):
+                new_pool_np[leaf][:, blocks] = old_pool_np[leaf][:, old_blocks]
+            req.block_ids = blocks
+            req.slot = slot
+            self.sched.slots[slot] = req
+        self.pool = jax.tree.map(jax.device_put, new_pool_np,
+                                 dict(self.cache.shardings()))
+        return rp

@@ -1,0 +1,82 @@
+"""Per-request token sampling over full-vocab decode logits.
+
+The step functions return ``[B, v_pad]`` float32 logits with padded vocab
+masked to -inf (``OpSet.head_logits``).  Sampling is one jitted, vmapped
+function over the fixed-shape slot batch: each slot carries its own
+(temperature, top_k, top_p, seed) and the PRNG is ``fold_in(PRNGKey(seed),
+position)`` so a request's random stream depends only on its seed and the
+absolute position of the token being sampled — preemption + re-prefill
+replays the identical trajectory.
+
+``temperature == 0`` rows take the greedy path: a plain argmax over the
+gathered logits, bit-identical to the dense loop's ``distributed_argmax``
+(same per-shard values, ties broken toward the smallest vocab id in both).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0     # 0 = greedy
+    top_k: int = 0               # 0 = off
+    top_p: float = 1.0           # 1 = off
+    seed: int = 0
+    max_new_tokens: int = 16
+
+
+def mask_top_k(logits, k):
+    """Keep the k highest logits of one row; k <= 0 keeps all."""
+    v = logits.shape[-1]
+    order = jnp.argsort(-logits)
+    ranks = jnp.argsort(order)                  # rank of each vocab entry
+    kk = jnp.where(k <= 0, v, k)
+    return jnp.where(ranks < kk, logits, -jnp.inf)
+
+
+def mask_top_p(logits, p):
+    """Nucleus: keep the smallest prefix of the sorted distribution whose
+    probability mass reaches p; p >= 1 keeps all."""
+    order = jnp.argsort(-logits)
+    sorted_logits = logits[order]
+    probs = jax.nn.softmax(sorted_logits)
+    cum = jnp.cumsum(probs)
+    keep_sorted = (cum - probs) < p             # first crossing included
+    keep = jnp.zeros(logits.shape[-1], bool).at[order].set(keep_sorted)
+    keep = keep | (p >= 1.0)
+    return jnp.where(keep, logits, -jnp.inf)
+
+
+def _sample_one(logits, temperature, top_k, top_p, seed, position):
+    greedy = jnp.argmax(logits, axis=-1)
+    lg = logits / jnp.maximum(temperature, 1e-6)
+    lg = mask_top_k(lg, top_k)
+    lg = mask_top_p(lg, top_p)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), position)
+    g = jax.random.gumbel(key, lg.shape, jnp.float32)
+    sampled = jnp.argmax(lg + g, axis=-1)       # gumbel-max == categorical
+    return jnp.where(temperature <= 0.0, greedy, sampled).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnums=())
+def sample_tokens(logits, temperature, top_k, top_p, seed, position):
+    """logits [B, v_pad] f32; the rest are [B] per-slot arrays.
+
+    position: absolute sequence position each sampled token will occupy
+    (the PRNG fold step).  Returns [B] int32 token ids."""
+    return jax.vmap(_sample_one)(logits, temperature, top_k, top_p, seed,
+                                 position)
+
+
+def slot_arrays(params_list):
+    """Stack per-slot SamplingParams into the sampler's input arrays."""
+    import numpy as np
+    return (np.array([p.temperature for p in params_list], np.float32),
+            np.array([p.top_k for p in params_list], np.int32),
+            np.array([p.top_p for p in params_list], np.float32),
+            np.array([p.seed for p in params_list], np.int32))

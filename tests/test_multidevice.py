@@ -24,6 +24,8 @@ CHECKS = [
     "ring_train_parity",
     "zero1_parity",
     "moe_local_layout",
+    "serve_engine",
+    "engine_elastic",
 ]
 
 

@@ -1,0 +1,286 @@
+"""Serve subsystem tests (single device; multi-device engine parity lives in
+tests/test_multidevice.py via the serve_engine / engine_elastic mdchecks)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RunConfig, ShapeSpec
+from repro.core.api import ParallelContext
+from repro.core.mesh import logical_mesh
+from repro.core.summa import effective_schedule
+from repro.models.registry import build_model, get_reduced
+from repro.serve import (BlockPool, EngineConfig, InferenceEngine,
+                         SamplingParams)
+from repro.serve.sampling import mask_top_k, mask_top_p, sample_tokens
+
+CTX = ParallelContext(mode="tesseract", data=1, depth=1, rows=1, cols=1)
+RUN = RunConfig(param_dtype="float32", compute_dtype="float32", loss_chunk=16,
+                q_chunk=8, kv_chunk=8)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    arch = get_reduced("yi-6b")
+    mesh = logical_mesh(CTX)
+    model = build_model(arch.model, CTX, RUN)
+    params = model.init(jax.random.PRNGKey(0))
+    return mesh, model, params
+
+
+def _prompts(seed=0, lens=(5, 9, 16, 12)):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, 250, (l,)).tolist() for l in lens]
+
+
+# ---------------------------------------------------------------------------
+# block pool / table accounting
+# ---------------------------------------------------------------------------
+
+def test_block_pool_accounting():
+    pool = BlockPool(n_groups=2, blocks_per_group=4)
+    assert pool.available(0) == pool.capacity(0) == 3
+    assert pool.scratch(0) == 0 and pool.scratch(1) == 4
+    got = pool.alloc(0, 2)
+    assert got == [1, 2] and pool.available(0) == 1
+    assert pool.alloc(0, 2) is None          # doesn't fit -> no partial alloc
+    assert pool.available(0) == 1
+    assert pool.alloc(1, 3) == [5, 6, 7]
+    pool.free([2, 5])
+    assert pool.available(0) == 2 and pool.available(1) == 1
+    with pytest.raises(ValueError):
+        pool.free([2])                        # double free
+    with pytest.raises(ValueError):
+        pool.free([0])                        # scratch is not freeable
+    with pytest.raises(ValueError):
+        BlockPool(n_groups=1, blocks_per_group=1)
+
+
+def test_block_table_gather_roundtrip(setup):
+    """paged_update writes and paged_gather reads through the same table:
+    scattering a sequence block-by-block then gathering returns it exactly."""
+    from repro.models.common import paged_gather, paged_update
+    rng = np.random.RandomState(1)
+    P_loc, bs, H, D, B, nb = 9, 4, 2, 8, 2, 3
+    pool = {"k": jnp.zeros((P_loc, bs, H, D), jnp.float32),
+            "v": jnp.zeros((P_loc, bs, H, D), jnp.float32)}
+    # non-trivial tables: interleaved, out-of-order physical blocks
+    table = jnp.array([[3, 1, 6], [2, 8, 4]], jnp.int32)
+    ks = rng.randn(B, nb * bs, H, D).astype(np.float32)
+    vs = rng.randn(B, nb * bs, H, D).astype(np.float32)
+    for pos in range(nb * bs):
+        pool = paged_update(pool, table, jnp.full((B,), pos, jnp.int32),
+                            jnp.asarray(ks[:, pos:pos + 1]),
+                            jnp.asarray(vs[:, pos:pos + 1]))
+    k, v = paged_gather(pool["k"], pool["v"], table)
+    np.testing.assert_array_equal(np.asarray(k), ks)
+    np.testing.assert_array_equal(np.asarray(v), vs)
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+def test_sampler_masks():
+    lg = jnp.array([0.0, 3.0, 1.0, 2.0, -1.0])
+    topk = np.asarray(mask_top_k(lg, 2))
+    assert np.isfinite(topk[[1, 3]]).all() and np.isneginf(topk[[0, 2, 4]]).all()
+    assert np.array_equal(np.asarray(mask_top_k(lg, 0)), np.asarray(lg))
+    # top-p: probs ~ [.09 .66 .24 ...]; p=0.5 keeps only the top token,
+    # p=0.95 keeps top-3
+    topp = np.asarray(mask_top_p(lg, 0.5))
+    assert np.isfinite(topp[1]) and np.isneginf(topp[[0, 2, 4]]).all()
+    topp3 = np.asarray(mask_top_p(lg, 0.95))
+    assert np.isfinite(topp3[[1, 2, 3]]).all()
+    assert np.array_equal(np.asarray(mask_top_p(lg, 1.0)), np.asarray(lg))
+
+
+def test_sampler_greedy_and_determinism():
+    rng = np.random.RandomState(0)
+    logits = jnp.asarray(rng.randn(4, 32).astype(np.float32))
+    zeros = jnp.zeros((4,))
+    t0 = sample_tokens(logits, zeros, jnp.zeros((4,), jnp.int32),
+                       jnp.ones((4,)), jnp.zeros((4,), jnp.int32),
+                       jnp.arange(4, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(t0),
+                                  np.argmax(np.asarray(logits), -1))
+    temps = jnp.full((4,), 0.7)
+    seeds = jnp.array([1, 1, 2, 2], jnp.int32)
+    pos = jnp.array([5, 5, 5, 9], jnp.int32)
+    s1 = np.asarray(sample_tokens(logits, temps, jnp.zeros((4,), jnp.int32),
+                                  jnp.ones((4,)), seeds, pos))
+    s2 = np.asarray(sample_tokens(logits, temps, jnp.zeros((4,), jnp.int32),
+                                  jnp.ones((4,)), seeds, pos))
+    np.testing.assert_array_equal(s1, s2)   # same (seed, position) -> same
+    # row 2 and 3: same logits/seed, different position -> streams decouple
+    assert s1.shape == (4,)
+
+
+# ---------------------------------------------------------------------------
+# paged vs dense cache
+# ---------------------------------------------------------------------------
+
+def test_paged_vs_dense_kv_equality(setup):
+    """Prefill cache resharded into the paged pool must hold exactly the
+    same K/V per layer as the dense decode-layout reshard."""
+    mesh, model, params = setup
+    from repro.runtime.steps import (build_dense_cache_reshard,
+                                     build_paged_reshard, build_prefill_step,
+                                     make_plan)
+    B, S_p, S_tot, bs = 4, 16, 32, 4
+    pshape = ShapeSpec("p", S_p, B, "prefill")
+    pre = build_prefill_step(model, mesh, pshape)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S_p), 0, 250)
+    _, pcache = pre.fn(params, {"tokens": prompts})
+
+    dense_fn, dplan = build_dense_cache_reshard(model, mesh, pshape, S_tot)
+    dense = dense_fn(pcache)
+
+    nb, num_blocks = S_p // bs, 64
+    paged_fn = build_paged_reshard(model, mesh, B, S_p, num_blocks, bs, dplan)
+    pool_sds, _ = model.paged_cache_abstract(num_blocks, bs, dplan)
+    pool = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), pool_sds)
+    tables = np.arange(1, 1 + B * nb, dtype=np.int32).reshape(B, nb)
+    pool = paged_fn(pool, pcache, jnp.asarray(tables))
+
+    for leaf in ("k", "v"):
+        paged = np.asarray(pool[leaf])      # [L, P, bs, H, D]
+        want = np.asarray(dense[leaf])      # [L, B, S_tot, H, D]
+        for b in range(B):
+            got = paged[:, tables[b]].reshape(want.shape[0], S_p,
+                                              *want.shape[3:])
+            np.testing.assert_array_equal(got, want[:, b, :S_p],
+                                          err_msg=f"{leaf} req {b}")
+        # the pool's scratch block (0) stayed untouched
+        np.testing.assert_array_equal(paged[:, 0], 0.0)
+
+
+def test_paged_decode_writes_match_dense(setup):
+    """Teacher-forced paged decode vs dense decode: per-layer K/V written to
+    the pages match the dense cache to float tolerance, tokens bitwise."""
+    mesh, model, params = setup
+    from repro.runtime.steps import build_decode_step, build_paged_decode_step
+    B, S, bs, T = 4, 16, 4, 6
+    toks = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(3), (B, T), 0, 250), np.int32)
+
+    dec = build_decode_step(model, mesh, ShapeSpec("d", S, B, "decode"))
+    cache_sds, _ = model.cache_abstract(B, S, dec.plan)
+    dense = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_sds)
+    dense_ids = []
+    for t in range(T):
+        nxt, dense = dec.fn(params, dense, jnp.asarray(toks[:, t:t + 1]),
+                            jnp.int32(t))
+        dense_ids.append(np.asarray(nxt).ravel())
+
+    num_blocks, nb = 32, S // bs
+    pdec = build_paged_decode_step(model, mesh, B, num_blocks, bs, nb)
+    pool_sds, _ = model.paged_cache_abstract(num_blocks, bs, pdec.plan)
+    pool = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), pool_sds)
+    tables = np.arange(1, 1 + B * nb, dtype=np.int32).reshape(B, nb)
+    paged_ids = []
+    for t in range(T):
+        logits, pool = pdec.fn(params, pool, jnp.asarray(tables),
+                               jnp.full((B,), t, jnp.int32),
+                               jnp.asarray(toks[:, t:t + 1]))
+        paged_ids.append(np.argmax(np.asarray(logits), -1))
+    np.testing.assert_array_equal(np.stack(paged_ids), np.stack(dense_ids))
+
+    for leaf in ("k", "v"):
+        paged = np.asarray(pool[leaf])
+        want = np.asarray(dense[leaf])
+        for b in range(B):
+            got = paged[:, tables[b]].reshape(want.shape[0], S,
+                                              *want.shape[3:])
+            np.testing.assert_allclose(got[:, :T], want[:, b, :T],
+                                       rtol=1e-5, atol=1e-6,
+                                       err_msg=f"{leaf} req {b}")
+
+
+# ---------------------------------------------------------------------------
+# engine behaviour
+# ---------------------------------------------------------------------------
+
+def test_engine_greedy_matches_full_forward(setup):
+    from repro.testing.mdchecks import full_forward_argmax
+    mesh, model, params = setup
+    prompts = _prompts(seed=2, lens=(5, 12))
+    n_new = [5, 4]
+    eng = InferenceEngine(model, mesh, params, EngineConfig(
+        n_slots=2, block_size=4, num_blocks=32, max_seq_len=64))
+    reqs = [eng.add_request(p, SamplingParams(max_new_tokens=n))
+            for p, n in zip(prompts, n_new)]
+    res = eng.run()
+    for p, n, r in zip(prompts, n_new, reqs):
+        want = full_forward_argmax(model, mesh, params, p, n)
+        assert res[r.rid] == want, (res[r.rid], want)
+
+
+def test_engine_eviction_reprefill_parity(setup):
+    """A pool too small for the concurrent residents forces eviction +
+    re-prefill; tokens must match the pressure-free run exactly."""
+    mesh, model, params = setup
+    prompts = _prompts(seed=4, lens=(5, 9, 16, 12, 7, 3, 21, 10))
+    n_new = [6, 10, 4, 8, 5, 12, 3, 7]
+
+    def run_with(num_blocks):
+        eng = InferenceEngine(model, mesh, params, EngineConfig(
+            n_slots=4, block_size=4, num_blocks=num_blocks, max_seq_len=64))
+        reqs = [eng.add_request(p, SamplingParams(max_new_tokens=n))
+                for p, n in zip(prompts, n_new)]
+        res = eng.run()
+        return [res[r.rid] for r in reqs], eng.stats
+
+    ample, _ = run_with(64)
+    tight, stats = run_with(9)
+    assert stats.preemptions > 0, "tiny pool never triggered eviction"
+    assert tight == ample
+    assert all(len(t) == n for t, n in zip(tight, n_new))
+
+
+def test_engine_rejects_impossible_request(setup):
+    mesh, model, params = setup
+    eng = InferenceEngine(model, mesh, params, EngineConfig(
+        n_slots=2, block_size=4, num_blocks=8, max_seq_len=64))
+    with pytest.raises(ValueError):
+        eng.add_request(list(range(1, 30)), SamplingParams(max_new_tokens=8))
+
+
+def test_engine_mixed_sampling_modes(setup):
+    """Greedy and stochastic requests coexist in one batch; greedy rows are
+    unaffected by their neighbours' sampling."""
+    mesh, model, params = setup
+    prompts = _prompts(seed=6, lens=(6, 6))
+
+    eng = InferenceEngine(model, mesh, params, EngineConfig(
+        n_slots=2, block_size=4, num_blocks=32, max_seq_len=64))
+    g = eng.add_request(prompts[0], SamplingParams(max_new_tokens=5))
+    s = eng.add_request(prompts[1], SamplingParams(
+        temperature=0.8, top_k=20, top_p=0.9, seed=11, max_new_tokens=5))
+    res = eng.run()
+
+    eng2 = InferenceEngine(model, mesh, params, EngineConfig(
+        n_slots=2, block_size=4, num_blocks=32, max_seq_len=64))
+    g2 = eng2.add_request(prompts[0], SamplingParams(max_new_tokens=5))
+    res2 = eng2.run()
+    assert res[g.rid] == res2[g2.rid]
+    assert len(res[s.rid]) == 5
+
+
+# ---------------------------------------------------------------------------
+# auto matmul schedule
+# ---------------------------------------------------------------------------
+
+def test_effective_schedule_resolution():
+    base = dict(mode="tesseract", data=1, depth=1)
+    q4 = ParallelContext(rows=4, cols=4, matmul_schedule="auto", **base)
+    q2 = ParallelContext(rows=2, cols=2, matmul_schedule="auto", **base)
+    assert effective_schedule(q4, 512) == "ring"     # train-sized block
+    assert effective_schedule(q4, 2) == "fused"      # decode-sized block
+    assert effective_schedule(q2, 512) == "fused"    # q=2: fused wins (§2b)
+    ring = ParallelContext(rows=2, cols=2, matmul_schedule="ring", **base)
+    assert effective_schedule(ring, 2) == "ring"     # explicit wins
+    with pytest.raises(ValueError):
+        ParallelContext(mode="megatron1d", cols=4, matmul_schedule="auto")
+    with pytest.raises(ValueError):
+        ParallelContext(matmul_schedule="bogus")
