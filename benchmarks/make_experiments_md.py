@@ -123,6 +123,26 @@ def main():
                 f"{s['p50_ms']:.1f} / {s['p95_ms']:.1f} |")
         return "\n".join(rows)
 
+    def pipeline_table():
+        p = HERE.parent / "BENCH_pipeline.json"
+        if not p.exists():
+            return ("(pending: `PYTHONPATH=src python -m benchmarks.run` "
+                    "writes BENCH_pipeline.json)")
+        d = json.loads(p.read_text())
+        pp, base = d["pipeline_q2_pipe2"], d["baseline_q2_dp2"]
+        rows = ["| layout | us/step | tok/s | bubble measured | "
+                "bubble analytic |", "|---|---|---|---|---|",
+                f"| 1F1B [pipe=2 x q=2], M={pp['n_micro']} | "
+                f"{pp['us_per_step']:.0f} | {pp['tokens_per_s']:.0f} | "
+                f"{pp['bubble_measured']:.3f} | "
+                f"{pp['bubble_predicted']:.3f} |",
+                f"| non-PP [q=2 x dp=2] | {base['us_per_step']:.0f} | "
+                f"{base['tokens_per_s']:.0f} | — | — |"]
+        rows.append(f"\nmax per-step loss deviation between the two "
+                    f"layouts: {d['max_loss_dev_vs_baseline']:.1e} "
+                    f"(same step-keyed batches).")
+        return "\n".join(rows)
+
     def gspmd_table():
         rows = [perf_hdr]
         for arch in ("yi-6b", "llama3-405b"):
@@ -307,6 +327,16 @@ The static loop keeps every slot busy until the slowest request in the
 batch finishes and replays prompts token by token; the engine retires
 finished sequences in place, admits queued requests immediately into the
 freed slots and prefills prompts in one bucketed step (DESIGN.md §7).
+
+### B++. Pipeline composition (1F1B x Tesseract, paper §3.4)
+
+Measured by `benchmarks/run.py` (pipeline case; 8 fake CPU devices,
+yi-6b reduced, B=16 S=32; losses bit-match the 1-stage baseline per the
+`pipeline_parity` mdcheck; CPU wall clock indicative only — the 1F1B
+backward units pay full-stage rematerialization on the host, while the
+schedule artifact is the measured bubble vs the analytic (S-1)/(M+S-1)):
+
+{pipeline_table()}
 
 ### C. deepseek-v2-236b / train_4k (worst useful-FLOPs, MoE)
 

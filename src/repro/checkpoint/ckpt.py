@@ -54,19 +54,32 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+        self._error_step: int | None = None
 
     # ------------------------------------------------------------- save
     def save(self, step: int, state: dict, blocking: bool = False):
-        """state: pytree of jax Arrays (fully-addressable)."""
+        """state: pytree of jax Arrays (fully-addressable).
+
+        A failure inside a previous async save is re-raised here (or in
+        ``wait()``) — a checkpoint that silently never landed would turn
+        the next restore into silent data loss."""
         flat = _flatten(state)
         host = {k: np.asarray(v) for k, v in flat.items()}
-        self.wait()  # one in-flight save at a time
+        self.wait()  # one in-flight save at a time; re-raises async errors
         if self.async_save and not blocking:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host), daemon=True)
+                target=self._write_guarded, args=(step, host), daemon=True)
             self._thread.start()
         else:
             self._write(step, host)
+
+    def _write_guarded(self, step: int, host: dict):
+        try:
+            self._write(step, host)
+        except BaseException as e:  # surfaced on the next wait()/save()
+            self._error = e
+            self._error_step = step
 
     def _write(self, step: int, host: dict):
         tmp = self.dir / f".tmp-{step}"
@@ -90,9 +103,16 @@ class CheckpointManager:
         self._gc()
 
     def wait(self):
+        """Join the in-flight async save; re-raise its failure if it died."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            step, self._error_step = self._error_step, None
+            raise RuntimeError(
+                f"async checkpoint save for step {step} failed: "
+                f"{type(err).__name__}: {err}") from err
 
     def _gc(self):
         steps = sorted(self.all_steps())

@@ -142,6 +142,18 @@ class RunConfig:
     # ParallelContext (the per-op dispatch lives on ctx.matmul_schedule,
     # DESIGN.md §2b; "auto" resolves per-op from the token-block size).
     matmul_schedule: str = "fused"
+    # --- pipeline / accumulation knobs (DESIGN.md §8) ---
+    # Pipeline-parallel stage count: launchers build the 5-axis
+    # [pipe x data x depth x row x col] mesh when > 1 and
+    # runtime/steps.build_train_step switches to the 1F1B schedule.
+    pipe_stages: int = 1
+    # Microbatches per 1F1B flush (0 -> 2 * pipe_stages).  The bubble
+    # fraction is (S-1)/(M+S-1); more microbatches amortize it.
+    pipeline_microbatches: int = 0
+    # Default gradient-accumulation factor for the train loop; elastic
+    # re-plans (runtime/elastic.Replan.accum_steps) override it so a device
+    # shrink preserves the global batch per optimizer step.
+    accum_steps: int = 1
 
 
 @dataclass(frozen=True)

@@ -55,6 +55,37 @@ def logical_mesh(ctx: ParallelContext, devices=None) -> Mesh:
     return Mesh(arr, LOGICAL_AXES, **kw)
 
 
+def pipeline_mesh(ctx: ParallelContext, pipe: int, devices=None, *,
+                  keep_pipe_axis: bool = False) -> Mesh:
+    """Build the ("pipe","data","depth","row","col") mesh: pipeline stages
+    OUTERMOST (paper §3.4 composes PP outside the Tesseract TP group), each
+    stage owning a full [data x q x q x d] sub-mesh on contiguous devices.
+
+    pipe == 1 returns the plain 4-axis mesh (flat train step) unless
+    ``keep_pipe_axis`` is set, which keeps the size-1 pipe axis so
+    ``build_train_step`` runs the same 1F1B code path as a 1-stage
+    baseline (the bit-parity oracle of the pipeline tests)."""
+    if pipe < 1:
+        raise ValueError(f"pipe must be >= 1, got {pipe}")
+    if pipe == 1 and not keep_pipe_axis:
+        return logical_mesh(ctx, devices)
+    if devices is None:
+        devices = jax.devices()
+    flat = np.asarray(devices).reshape(-1)
+    need = pipe * ctx.data * ctx.depth * ctx.rows * ctx.cols
+    if flat.size != need:
+        raise ValueError(
+            f"need {need} devices for pipe={pipe} x data={ctx.data} x "
+            f"[q={ctx.rows},{ctx.cols},d={ctx.depth}], got {flat.size}")
+    arr = flat.reshape(pipe, ctx.data, ctx.depth, ctx.rows, ctx.cols)
+    axes = ("pipe",) + LOGICAL_AXES
+    kw = {}
+    at = _axis_types(5)
+    if at is not None:
+        kw["axis_types"] = at
+    return Mesh(arr, axes, **kw)
+
+
 def logical_from_production(prod_mesh: Mesh, ctx: ParallelContext) -> Mesh:
     """Reshape the harness-defined production mesh into the logical mesh.
 

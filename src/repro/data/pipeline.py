@@ -11,6 +11,8 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
+import zlib
 
 import numpy as np
 import jax
@@ -38,7 +40,11 @@ class SyntheticLMStream:
         if train:
             out["labels"] = np.roll(tok, -1, axis=1)
         for name, (sds, _spec) in self.extras.items():
-            rng = np.random.default_rng((self.seed, step, hash(name) % 2**31))
+            # stable digest, NOT hash(): str hashing is salted per process
+            # (PYTHONHASHSEED), which would break the determinism contract
+            # across restarts / elastic re-meshes.
+            rng = np.random.default_rng(
+                (self.seed, step, zlib.crc32(name.encode("utf-8"))))
             out[name] = rng.standard_normal(sds.shape).astype(sds.dtype)
         return out
 
@@ -53,26 +59,45 @@ class Prefetcher:
         self.q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._step = start_step
+        self._exc: BaseException | None = None
         self.train = train
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
     def _run(self):
         step = self._step
-        while not self._stop.is_set():
-            host = self.stream.batch(step, train=self.train)
-            dev = {k: jax.device_put(v, self.shardings[k])
-                   for k, v in host.items() if k in self.shardings}
-            try:
-                self.q.put((step, dev), timeout=1.0)
-            except queue.Full:
-                if self._stop.is_set():
-                    return
-                continue
-            step += 1
+        try:
+            while not self._stop.is_set():
+                host = self.stream.batch(step, train=self.train)
+                dev = {k: jax.device_put(v, self.shardings[k])
+                       for k, v in host.items() if k in self.shardings}
+                try:
+                    self.q.put((step, dev), timeout=1.0)
+                except queue.Full:
+                    if self._stop.is_set():
+                        return
+                    continue
+                step += 1
+        except BaseException as e:  # propagate to the consumer, don't die mute
+            self._exc = e
 
     def next(self, timeout: float = 60.0):
-        return self.q.get(timeout=timeout)
+        """Blocking get that re-raises a producer-thread failure promptly
+        instead of stalling for the full timeout and surfacing queue.Empty."""
+        deadline = time.monotonic() + timeout
+        while True:
+            if self._exc is not None and self.q.empty():
+                # sticky: the producer thread is dead, every subsequent
+                # next() must surface the same root cause, not a timeout
+                raise self._exc
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(
+                    f"prefetcher produced no batch within {timeout:.1f}s")
+            try:
+                return self.q.get(timeout=min(0.2, remaining))
+            except queue.Empty:
+                continue
 
     def stop(self):
         self._stop.set()

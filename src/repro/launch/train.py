@@ -34,6 +34,13 @@ def main():
     ap.add_argument("--matmul-schedule", default="fused",
                     choices=("fused", "ring", "auto"))
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--pipe", type=int, default=1,
+                    help="pipeline stages OUTSIDE the TP group (1F1B)")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="1F1B microbatches per step (0 -> 2*pipe)")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="gradient-accumulation microsteps per optimizer "
+                         "step (elastic re-plans raise this on a shrink)")
     args = ap.parse_args()
 
     if "COORDINATOR_ADDRESS" in os.environ:  # multi-host pod
@@ -42,7 +49,7 @@ def main():
 
     from ..configs.base import RunConfig, ShapeSpec
     from ..core.api import ParallelContext
-    from ..core.mesh import logical_mesh
+    from ..core.mesh import pipeline_mesh
     from ..models.registry import build_model, get_arch, get_reduced
     from ..runtime.train_loop import train
 
@@ -50,15 +57,18 @@ def main():
     ctx = ParallelContext(mode=args.mode, data=args.data, depth=args.depth,
                           rows=args.rows, cols=args.cols,
                           matmul_schedule=args.matmul_schedule)
-    mesh = logical_mesh(ctx)
+    mesh = pipeline_mesh(ctx, args.pipe)
     run = RunConfig(param_dtype="float32", compute_dtype="float32",
                     loss_chunk=128, q_chunk=64, kv_chunk=64, lr=args.lr,
-                    zero1=args.zero1, matmul_schedule=args.matmul_schedule)
+                    zero1=args.zero1, matmul_schedule=args.matmul_schedule,
+                    pipe_stages=args.pipe,
+                    pipeline_microbatches=args.microbatches,
+                    accum_steps=args.accum)
     model = build_model(arch.model, ctx, run)
     shape = ShapeSpec("train", seq_len=args.seq, global_batch=args.batch,
                       kind="train")
     res = train(model, mesh, shape, steps=args.steps, ckpt_dir=args.ckpt,
-                log_every=10)
+                log_every=10, accum_steps=args.accum)
     print(f"final loss {res.losses[-1]:.4f} after {len(res.losses)} steps "
           f"({res.restarts} restarts)")
 

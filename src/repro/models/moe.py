@@ -30,6 +30,8 @@ from .transformer import DenseLM, ops_last_token
 
 
 class MoELM(DenseLM):
+    supports_pipeline = False  # custom loss (router aux) not stage-decomposed
+
     def __init__(self, cfg, ctx, run):
         super().__init__(cfg, ctx, run)
         self.is_mla = cfg.mla_kv_lora > 0

@@ -25,6 +25,8 @@ C_RGLRU = 8.0
 
 
 class RecurrentLM(DenseLM):
+    supports_pipeline = False  # custom loss not stage-decomposed
+
     def __init__(self, cfg, ctx, run):
         super().__init__(cfg, ctx, run)
         if ctx.mode == "megatron1d":

@@ -246,27 +246,48 @@ class DenseLM:
                 x, _ = body(x, bp)
         return x
 
-    def _trunk(self, params, tokens, ops):
-        """embed -> blocks -> final norm (shared by loss and prefill)."""
-        x = ops.embed(tokens, params["embed"]).astype(self.cdt)
+    # --- pipeline stage API (runtime/steps pipelined train path) ---
+    # The trunk is decomposed so a pipe stage can run embed / its local block
+    # slice / the loss head independently: params["blocks"] leaves arrive
+    # stage-sharded over the pipe mesh axis, so pipe_blocks naturally applies
+    # only this stage's layers.
+    supports_pipeline = True
+
+    def pipe_embed(self, params, tokens, ops):
+        """Host-layout ids -> canonical activation (stage-0 entry)."""
+        return ops.embed(tokens, params["embed"]).astype(self.cdt)
+
+    def pipe_blocks(self, params, x, ops):
+        """Apply this stage's (local) block slice to a canonical activation."""
         T_loc = x.shape[1]
         n_seq = ops.token_shards // self.ctx.data if ops.plan.seq_sharded else 1
-        S_full = T_loc * (n_seq if ops.plan.seq_sharded else 1)
-        full_kv_pos = jnp.arange(S_full)
+        full_kv_pos = jnp.arange(T_loc * (n_seq if ops.plan.seq_sharded else 1))
         cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt)
                                       if a.dtype == self.pdt and a.ndim > 1
                                       else a, t)
-        x = self._run_blocks(
+        return self._run_blocks(
             params, x, ops,
             lambda bp, xx: self._block_train(cast(bp), xx, ops, full_kv_pos))
+
+    def pipe_loss_sums(self, params, x, labels, ops, label_mask=None):
+        """Final norm + chunked CE -> local (loss_sum, count) (last stage)."""
+        x = self._norm(ops, x, params["ln_f"], params.get("ln_fb"))
+        return ops.ce_loss(
+            x, params["head"].astype(self.cdt), labels,
+            vocab_real=self.cfg.vocab_size, loss_chunk=self.run.loss_chunk,
+            label_mask=label_mask)
+
+    def _trunk(self, params, tokens, ops):
+        """embed -> blocks -> final norm (shared by loss and prefill)."""
+        x = self.pipe_embed(params, tokens, ops)
+        x = self.pipe_blocks(params, x, ops)
         return self._norm(ops, x, params["ln_f"], params.get("ln_fb"))
 
     def loss(self, params, batch, ops):
-        x = self._trunk(params, batch["tokens"], ops)
-        loss_sum, cnt = ops.ce_loss(
-            x, params["head"].astype(self.cdt), batch["labels"],
-            vocab_real=self.cfg.vocab_size, loss_chunk=self.run.loss_chunk,
-            label_mask=batch.get("mask"))
+        x = self.pipe_embed(params, batch["tokens"], ops)
+        x = self.pipe_blocks(params, x, ops)
+        loss_sum, cnt = self.pipe_loss_sums(params, x, batch["labels"], ops,
+                                            batch.get("mask"))
         loss_sum = lax.psum(loss_sum, self.ctx.axis_data)
         cnt = lax.psum(cnt, self.ctx.axis_data)
         return loss_sum / jnp.maximum(cnt, 1.0)

@@ -18,6 +18,8 @@ from .transformer import DenseLM, ops_last_token
 
 
 class VisionLM(DenseLM):
+    supports_pipeline = False  # modality extras not stage-decomposed
+
     def __init__(self, cfg, ctx, run):
         super().__init__(cfg, ctx, run)
         if cfg.num_layers % cfg.cross_attn_every:

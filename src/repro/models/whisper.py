@@ -29,6 +29,8 @@ def sinusoid_pos(positions, dim):
 
 
 class WhisperModel(DenseLM):
+    supports_pipeline = False  # encoder/decoder loss not stage-decomposed
+
     def __init__(self, cfg, ctx, run):
         super().__init__(cfg, ctx, run)
         if ctx.mode == "megatron1d":

@@ -4,7 +4,10 @@ survive a failure.
 Policy (matches the paper's composition, Fig. 6): the tensor-parallel group
 [q, q, d] is the atomic unit — a TP group that lost a member is dropped
 whole — and the data axis absorbs the shrink.  The global batch is kept by
-raising per-replica batch (grad accumulation if it no longer divides).
+consuming ``Replan.accum_steps`` in the train loop (runtime/train_loop.py
+passes it to ``build_train_step``): each optimizer step still sees the full
+step-keyed batch, accumulated over ``accum_steps`` microbatches so
+per-device activation memory stays constant and no tokens are dropped.
 """
 from __future__ import annotations
 
@@ -23,24 +26,36 @@ class Replan:
 
 def replan(n_devices: int, ctx: ParallelContext, *, global_batch: int,
            seq_sharded: bool = False) -> Replan:
-    """Largest valid layout with the same TP factorization."""
+    """Largest valid layout with the same TP factorization.
+
+    Raises RuntimeError when the TP group no longer fits and ValueError when
+    no surviving data-parallel width divides the global batch (an invalid
+    plan must never be returned silently).
+    """
     tp = ctx.tp
     if n_devices < tp:
         raise RuntimeError(
             f"cannot fit a [{ctx.rows},{ctx.cols},{ctx.depth}] TP group in "
             f"{n_devices} devices; reduce q/d in the config")
-    data = n_devices // tp
-    # token sharding must divide the global batch
-    while data > 0:
-        shards = data * (ctx.depth * ctx.rows if not seq_sharded else 1)
-        if shards and global_batch % shards == 0:
-            break
-        data -= 1
-    if data == 0:
-        data = 1
-    new_ctx = ctx.replace(data=data)
-    used = data * tp
-    # keep global batch via accumulation if batch-per-step shrank
-    accum = max(1, ctx.data // data)
-    return Replan(ctx=new_ctx, n_used=used, n_idle=n_devices - used,
-                  accum_steps=accum)
+    shard_factor = 1 if seq_sharded else ctx.depth * ctx.rows
+    for data in range(n_devices // tp, 0, -1):
+        shards = data * shard_factor
+        if global_batch % shards:
+            continue
+        # ceil: a non-divisible shrink (e.g. 8 -> 3 replicas) must round the
+        # accumulation UP or each optimizer step would drop tokens.
+        accum = -(-ctx.data // data)
+        # accum microbatches must evenly split each shard's batch rows
+        rows_per_shard = global_batch // shards
+        while accum <= rows_per_shard and rows_per_shard % accum:
+            accum += 1
+        if accum > rows_per_shard:
+            continue
+        new_ctx = ctx.replace(data=data)
+        used = data * tp
+        return Replan(ctx=new_ctx, n_used=used, n_idle=n_devices - used,
+                      accum_steps=accum)
+    raise ValueError(
+        f"no data-parallel width in [1, {n_devices // tp}] x "
+        f"shard_factor={shard_factor} divides global_batch={global_batch}; "
+        f"cannot produce a valid elastic plan")

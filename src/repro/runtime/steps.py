@@ -86,6 +86,7 @@ class StepBundle:
     out_shardings: Any
     mesh: Any
     plan: Plan
+    pipe_info: Any = None        # 1F1B schedule stats (pipelined steps only)
 
 
 def _shardings(mesh, spec_tree):
@@ -117,7 +118,23 @@ def batch_abstract(ops, shape: ShapeSpec, ctx: ParallelContext, model=None):
 # train step
 # ---------------------------------------------------------------------------
 
-def build_train_step(model, mesh, shape: ShapeSpec):
+def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1):
+    """Build the jitted train step.
+
+    accum_steps > 1 accumulates gradients over that many microbatches split
+    from the (step-keyed) global batch before the single optimizer update —
+    the knob ``runtime/elastic.Replan.accum_steps`` feeds so an elastic
+    shrink keeps the global batch (and per-device activation memory)
+    constant.  On a mesh with a ``pipe`` axis of size > 1 the pipelined
+    1F1B builder is used instead (accum_steps folds into its microbatch
+    count).
+    """
+    if accum_steps < 1:
+        raise ValueError(f"accum_steps must be >= 1, got {accum_steps}")
+    if "pipe" in mesh.axis_names:
+        # any mesh carrying a pipe axis trains through the 1F1B schedule —
+        # a pipe=1 mesh is the exact 1-stage baseline of the same code path
+        return _build_pipeline_train_step(model, mesh, shape, accum_steps)
     ctx: ParallelContext = model.ctx
     run: RunConfig = model.run
     plan = make_plan(ctx, shape)
@@ -166,7 +183,7 @@ def build_train_step(model, mesh, shape: ShapeSpec):
         return flat[:n].reshape(shp)
 
     def local_step(params, opt_state, batch):
-        def loss_fn(p):
+        def loss_fn(p, mb):
             # grad_sync: fwd pvary / bwd fused (optionally bf16-compressed)
             # psum over each leaf's replication axes — the deferred form of
             # the paper's depth all-reduce, plus the DP reduction.
@@ -174,9 +191,29 @@ def build_train_step(model, mesh, shape: ShapeSpec):
                 lambda x, s, t: grad_sync(x, pvary_axes(s, t),
                                           run.grad_compression),
                 p, specs, is_tess)
-            return model.loss(pv, batch, ops)
+            return model.loss(pv, mb, ops)
 
-        loss, grads = jax.value_and_grad(loss_fn)(params)
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            # microbatch gradient accumulation: split every batch leaf's
+            # local batch dim into accum_steps slices and scan, so only one
+            # microbatch's activations are ever live.  Equal-sized
+            # microbatches -> mean-of-means == full-batch mean CE.
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def micro(carry, mb):
+                c_loss, c_grads = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (c_loss + l, jax.tree.map(jnp.add, c_grads, g)), None
+
+            init = (jnp.float32(0),
+                    jax.tree.map(lambda p: p * 0, params))
+            (loss, grads), _ = lax.scan(micro, init, mbs)
+            loss = loss / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
 
         if not col_mod.HAS_VMA:
             # Pre-vma jax seeds ALL p replicated copies of the loss scalar
@@ -244,6 +281,22 @@ def build_train_step(model, mesh, shape: ShapeSpec):
             **({"master": specs} if opt_master else {}),
         }
     batch_sds, batch_specs_ = batch_abstract(ops, shape, ctx, model)
+    if accum_steps > 1:
+        # tokens/labels are additionally split over row by embed's
+        # reduce-scatter, so each microbatch must keep that divisible too
+        row_factor = ctx.rows if ctx.mode != "megatron1d" else 1
+        for name, sd in batch_sds.items():
+            loc0 = NamedSharding(mesh, batch_specs_[name]).shard_shape(
+                tuple(sd.shape))[0]
+            rf = row_factor if name in ("tokens", "labels", "mask") else 1
+            if loc0 % accum_steps or (loc0 // accum_steps) % rf:
+                raise ValueError(
+                    f"accum_steps={accum_steps} does not evenly split batch "
+                    f"leaf {name!r}: local batch {loc0} (global "
+                    f"{sd.shape[0]}) must divide into accum_steps "
+                    f"microbatches of a multiple of the row factor {rf}; "
+                    f"pick accum_steps dividing global_batch/"
+                    f"(data*depth*row) or re-plan")
     metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
 
     smapped = shard_map(
@@ -279,6 +332,188 @@ def build_train_step(model, mesh, shape: ShapeSpec):
         fn=fn,
         abstract_inputs=(abs_params, abs_opt, batch_sds),
         in_shardings=in_sh, out_shardings=out_sh, mesh=mesh, plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# pipelined train step (1F1B over a [pipe x data x depth x row x col] mesh)
+# ---------------------------------------------------------------------------
+
+def _build_pipeline_train_step(model, mesh, shape: ShapeSpec,
+                               accum_steps: int = 1):
+    """Train step with pipeline parallelism OUTSIDE the Tesseract TP group
+    (paper §3.4): stage-sharded block params/opt state over the mesh's
+    ``pipe`` axis, 1F1B microbatch schedule (runtime/pipeline.py), loss and
+    grad reduction on the last stage, deferred replication-axis grad psums
+    extended with the pipe axis for the stage-replicated leaves (embed /
+    head / final norm).  ``accum_steps`` folds into the microbatch count —
+    in PP, gradient accumulation IS more microbatches through the same
+    flush, which also shrinks the bubble.
+    """
+    from ..core import collectives as col_mod
+    from .pipeline import pipeline_1f1b_grads
+
+    ctx: ParallelContext = model.ctx
+    run: RunConfig = model.run
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    S_pipe = int(sizes["pipe"])
+    if shape.kind != "train":
+        raise ValueError(f"pipeline step only supports train shapes, "
+                         f"got {shape.kind!r}")
+    if not getattr(model, "supports_pipeline", False):
+        raise NotImplementedError(
+            f"{type(model).__name__} does not support the pipeline stage "
+            f"API (supports_pipeline=False)")
+    if model.batch_extras(shape):
+        raise NotImplementedError("pipelined training with modality extras "
+                                  "is not supported")
+    if run.zero1:
+        raise NotImplementedError("zero1 + pipeline is not wired yet; the "
+                                  "stage shard already divides opt memory")
+    if ctx.mode not in ("tesseract", "summa2d"):
+        raise NotImplementedError(f"pipeline requires a tesseract/summa2d "
+                                  f"TP group, got {ctx.mode!r}")
+    L = model.cfg.num_layers
+    if L % S_pipe:
+        raise ValueError(f"num_layers={L} not divisible by pipe={S_pipe}")
+    M = (run.pipeline_microbatches or 2 * S_pipe) * accum_steps
+    B, S_seq = shape.global_batch, shape.seq_len
+    tok_shards = ctx.data * ctx.depth   # host-layout batch-dim sharding
+    if B % (tok_shards * M):
+        raise ValueError(
+            f"global_batch={B} not divisible by data*depth*microbatches="
+            f"{tok_shards}*{M}")
+    mb_host = B // (tok_shards * M)
+    if mb_host % ctx.rows:
+        raise ValueError(f"microbatch rows {mb_host} not divisible by the "
+                         f"row factor {ctx.rows} (embed reduce-scatter)")
+    if model.cfg.d_model % max(ctx.cols, 1):
+        raise ValueError(f"d_model={model.cfg.d_model} not divisible by "
+                         f"cols={ctx.cols}")
+
+    plan = make_plan(ctx, shape)
+    ops = make_ops(ctx, plan)
+    specs = model.specs(ops)
+    tess_names = getattr(model, "tess_weight_names", lambda: set())()
+    inop = ctx.reduce_dgrad_in_op and ctx.mode in ("tesseract", "summa2d")
+    is_tess = (mark_by_name(specs, tess_names) if inop
+               else jax.tree.map(lambda _: False, specs))
+    pipe_sharded = mark_by_name(specs, {"blocks"})
+
+    def _pipe_spec(sp):
+        entries = tuple(sp)
+        if not entries or entries[0] is not None:
+            raise ValueError(f"block spec {sp} is not stacked (dim0 must be "
+                             f"the layer dim)")
+        return P(*(("pipe",) + entries[1:]))
+
+    pspecs = dict(specs)
+    pspecs["blocks"] = jax.tree.map(_pipe_spec, specs["blocks"],
+                                    is_leaf=lambda x: isinstance(x, P))
+    rep_tree = jax.tree.map(
+        lambda s, psh: rep_factor(ctx, s) * (1 if psh else S_pipe),
+        specs, pipe_sharded)
+    # deferred grad reductions: replication axes of each leaf, plus pipe for
+    # the stage-replicated leaves; in-op tesseract weights already reduced
+    # (data, depth) inside the matmul bwd and are stage-sharded -> ().
+    def _red_axes(s, t, psh):
+        ax = () if t else replicated_axes(s)
+        return ax if psh else ax + ("pipe",)
+    red_axes = jax.tree.map(_red_axes, specs, is_tess, pipe_sharded)
+
+    mb_can = mb_host // ctx.rows
+    h_loc = model.cfg.d_model // ctx.cols
+    cdt = model.cdt
+    opt_master = run.param_dtype != "float32"
+    from .pipeline import schedule_1f1b
+    sched = schedule_1f1b(M, S_pipe)   # simulated once, shared with the step
+
+    def local_step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        tok_mb = tokens.reshape((M, tokens.shape[0] // M) + tokens.shape[1:])
+        lab_mb = labels.reshape((M, labels.shape[0] // M) + labels.shape[1:])
+        # CE count is label-count (no mask on this path): static, so the
+        # backward seed 1/total is available before the first fwd finishes.
+        seed = jnp.float32(1.0) / jnp.float32(B * S_seq)
+
+        def stage_step(p, a, m_idx):
+            tok = lax.dynamic_index_in_dim(tok_mb, m_idx, 0, keepdims=False)
+            lab = lax.dynamic_index_in_dim(lab_mb, m_idx, 0, keepdims=False)
+            x0 = model.pipe_embed(p, tok, ops)
+            sid = lax.axis_index("pipe")
+            x_in = jnp.where(sid == 0, x0, a)
+            y = model.pipe_blocks(p, x_in, ops)
+            ls, cnt = model.pipe_loss_sums(p, y, lab, ops)
+            return y, ls, cnt
+
+        a_proto = jnp.zeros((mb_can, S_seq, h_loc), cdt)
+        loss_sum, cnt_sum, grads, _ = pipeline_1f1b_grads(
+            stage_step, params, a_proto, M, axis="pipe", loss_seed=seed,
+            schedule=sched)
+        loss_sum = lax.psum(loss_sum, (ctx.axis_data, "pipe"))
+        cnt = lax.psum(cnt_sum, (ctx.axis_data, "pipe"))
+        loss = loss_sum / jnp.maximum(cnt, 1.0)
+
+        if not col_mod.HAS_VMA:
+            # Pre-vma jax: every model-group member seeds its own replicated
+            # copy of the last stage's loss sums (psum transposes to psum),
+            # so grads arrive scaled by the model-group size.  The data axis
+            # is NOT included here: its reduction happens outside the vjp.
+            corr = ctx.depth * ctx.rows * ctx.cols
+            if corr > 1:
+                grads = jax.tree.map(lambda g: g / corr, grads)
+
+        def red(g, ax):
+            if not ax:
+                return g
+            if run.grad_compression == "bf16":
+                return lax.psum(g.astype(jnp.bfloat16),
+                                tuple(ax)).astype(g.dtype)
+            return lax.psum(g, tuple(ax))
+        grads = jax.tree.map(red, grads, red_axes)
+
+        # --- global grad-norm clip (layout + stage aware) ---
+        def leaf_sq(g, rep, s, psh):
+            val = jnp.sum(g.astype(jnp.float32) ** 2) / rep
+            return pvary(val, replicated_axes(s) + (() if psh
+                                                    else ("pipe",)))
+        sq = sum(jax.tree.leaves(jax.tree.map(
+            leaf_sq, grads, rep_tree, specs, pipe_sharded)))
+        gnorm = jnp.sqrt(lax.psum(sq, LOGICAL_AXES + ("pipe",)))
+        scale = jnp.minimum(1.0, run.grad_clip / (gnorm + 1e-6))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+        lr = adamw.cosine_lr(opt_state["step"], base_lr=run.lr,
+                             warmup=100, total=10000)
+        new_params, new_state = adamw.adamw_update(
+            params, grads, opt_state, lr=lr, weight_decay=run.weight_decay)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_params, new_state, metrics
+
+    opt_specs = {
+        "m": pspecs, "v": pspecs, "step": P(),
+        **({"master": pspecs} if opt_master else {}),
+    }
+    batch_sds, batch_specs_ = batch_abstract(ops, shape, ctx, model)
+    metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+
+    smapped = shard_map(
+        local_step, mesh=mesh,
+        in_specs=(pspecs, opt_specs, batch_specs_),
+        out_specs=(pspecs, opt_specs, metric_specs))
+    in_sh = (_shardings(mesh, pspecs), _shardings(mesh, opt_specs),
+             _shardings(mesh, batch_specs_))
+    out_sh = (_shardings(mesh, pspecs), _shardings(mesh, opt_specs),
+              _shardings(mesh, metric_specs))
+    fn = jax.jit(smapped, donate_argnums=(0, 1), in_shardings=in_sh,
+                 out_shardings=out_sh)
+    abs_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    abs_opt = jax.eval_shape(partial(adamw.adamw_init, master=opt_master),
+                             abs_params)
+    return StepBundle(
+        fn=fn,
+        abstract_inputs=(abs_params, abs_opt, batch_sds),
+        in_shardings=in_sh, out_shardings=out_sh, mesh=mesh, plan=plan,
+        pipe_info=sched[3])
 
 
 # ---------------------------------------------------------------------------

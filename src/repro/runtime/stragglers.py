@@ -16,10 +16,19 @@ import numpy as np
 
 class StragglerMonitor:
     def __init__(self, window: int = 20, threshold: float = 4.0,
-                 min_samples: int = 5):
+                 min_samples: int = 5, min_abs_dev: float = 1e-3,
+                 min_rel_dev: float = 0.02):
+        """min_abs_dev/min_rel_dev floor the robust scale estimate: on a
+        healthy fleet the MAD is ~0 and a bare 1e-9 floor amplifies
+        microsecond noise into "stragglers".  A host must now exceed the
+        median by threshold x max(1.4826*MAD, min_abs_dev, min_rel_dev*med)
+        — i.e. be meaningfully slower in absolute seconds AND relative
+        terms before it is flagged."""
         self.window = window
         self.threshold = threshold
         self.min_samples = min_samples
+        self.min_abs_dev = min_abs_dev
+        self.min_rel_dev = min_rel_dev
         self._times = defaultdict(lambda: deque(maxlen=window))
 
     def record(self, host_id, step_time: float):
@@ -35,6 +44,7 @@ class StragglerMonitor:
             return []
         vals = np.array(list(means.values()))
         med = np.median(vals)
-        mad = np.median(np.abs(vals - med)) + 1e-9
+        mad = np.median(np.abs(vals - med))
+        scale = max(1.4826 * mad, self.min_abs_dev, self.min_rel_dev * med)
         return [h for h, m in means.items()
-                if (m - med) / (1.4826 * mad) > self.threshold]
+                if (m - med) / scale > self.threshold]

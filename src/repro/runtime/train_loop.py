@@ -34,12 +34,20 @@ class TrainResult:
 
 def train(model, mesh, shape, *, steps: int, ckpt_dir=None, ckpt_every: int = 50,
           log_every: int = 10, max_restarts: int = 3, fault_hook=None,
-          seed: int = 0, stream=None, monitor=None) -> TrainResult:
+          seed: int = 0, stream=None, monitor=None,
+          accum_steps: int | None = None) -> TrainResult:
     """Run ``steps`` optimizer steps with checkpoint/restart fault tolerance.
 
     fault_hook(step) may raise to simulate a failure (tests use this).
+    accum_steps (default ``model.run.accum_steps``) accumulates gradients
+    over that many microbatches per optimizer step — the knob an elastic
+    re-plan (``runtime/elastic.replan(...).accum_steps``) supplies so a
+    device shrink keeps the global batch and the loss trajectory intact
+    under the step-keyed data stream.
     """
-    bundle = build_train_step(model, mesh, shape)
+    if accum_steps is None:
+        accum_steps = model.run.accum_steps
+    bundle = build_train_step(model, mesh, shape, accum_steps=accum_steps)
     mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
     monitor = monitor or StragglerMonitor()
     result = TrainResult()
@@ -64,6 +72,10 @@ def train(model, mesh, shape, *, steps: int, ckpt_dir=None, ckpt_every: int = 50
 
     def restore_or_init():
         if mgr is not None:
+            try:
+                mgr.wait()   # flush an in-flight async save before reading
+            except RuntimeError as e:
+                print(f"[ckpt] pending async save failed: {e}")
             last = mgr.latest_step()
             if last is not None:
                 abs_p, abs_o, _ = bundle.abstract_inputs
@@ -76,7 +88,8 @@ def train(model, mesh, shape, *, steps: int, ckpt_dir=None, ckpt_every: int = 50
 
     params, opt, start = restore_or_init()
     step = start
-    restarts = 0
+    budget_used = 0        # restarts within the current replay window
+    window_start = start   # where the last restore landed us
     while step < steps:
         try:
             pf = Prefetcher(stream, batch_sh, start_step=step)
@@ -106,11 +119,28 @@ def train(model, mesh, shape, *, steps: int, ckpt_dir=None, ckpt_every: int = 50
             finally:
                 pf.stop()
         except (FloatingPointError, RuntimeError, ValueError) as e:
-            restarts += 1
-            result.restarts = restarts
+            result.restarts += 1
+            if mgr is not None:
+                # A checkpoint that LANDED since the last restore starts a
+                # fresh replay window, so N spread-out recovered faults over
+                # a long run never add up to a fatal max_restarts.  Judged
+                # by the durable latest_step (after flushing the async
+                # writer), never by save() calls having been made: a
+                # persistently failing checkpoint dir plus a recurring
+                # fault must still trip the budget, not loop forever.
+                try:
+                    mgr.wait()
+                except RuntimeError as werr:
+                    print(f"[ckpt] pending async save failed: {werr}")
+                latest = mgr.latest_step()
+                if latest is not None and latest + 1 > window_start:
+                    budget_used = 0
+                    window_start = latest + 1
+            budget_used += 1
             print(f"[fault] step {step}: {type(e).__name__}: {e}; "
-                  f"restart {restarts}/{max_restarts}")
-            if restarts > max_restarts:
+                  f"restart {budget_used}/{max_restarts} in this replay "
+                  f"window ({result.restarts} total)")
+            if budget_used > max_restarts:
                 raise
             params, opt, step = restore_or_init()
     if mgr is not None:

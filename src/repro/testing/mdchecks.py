@@ -704,6 +704,168 @@ def check_engine_elastic():
     print("PASS engine_elastic")
 
 
+def _mesh5(ctx, pipe):
+    """[pipe x data x depth x row x col] mesh (pipe=1 kept as a real axis so
+    the 1-stage baseline runs the same 1F1B code path)."""
+    import jax
+    from repro.core.mesh import pipeline_mesh
+    n = pipe * ctx.data * ctx.tp
+    return pipeline_mesh(ctx, pipe, jax.devices()[:n], keep_pipe_axis=True)
+
+
+def check_pipeline_parity():
+    """1F1B pipelined training on a [2-stage pipe x tesseract] mesh matches
+    the 1-stage baseline (same code path, pipe=1) to bit precision on the
+    loss for q in {1, 2} (grad-norm bitwise at q=2, <= 2 ulp at q=1), and
+    the flat non-pipe step within fp-association noise; the measured
+    schedule bubble equals the analytic (S-1)/(M+S-1); a checkpoint taken
+    at pipe=2 restores onto the pipe=1 mesh (stage re-shard) and continues
+    the run."""
+    import jax, jax.numpy as jnp
+    from repro.configs.base import RunConfig, ShapeSpec
+    from repro.core.api import ParallelContext
+    from repro.core.mesh import logical_mesh
+    from repro.models.registry import build_model, get_reduced
+    from repro.optim.adamw import adamw_init
+    from repro.runtime.steps import build_train_step
+
+    B, S = 8, 16
+    tok = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0, 250)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
+    shape = ShapeSpec("t", seq_len=S, global_batch=B, kind="train")
+    run = RunConfig(param_dtype="float32", compute_dtype="float32",
+                    loss_chunk=8, q_chunk=8, kv_chunk=8, lr=1e-3,
+                    pipeline_microbatches=4)
+
+    def build(ctx, mesh):
+        model = build_model(get_reduced("yi-6b").model, ctx, run)
+        bundle = build_train_step(model, mesh, shape)
+        params = jax.device_put(model.init(jax.random.PRNGKey(0)),
+                                bundle.in_shardings[0])
+        opt = jax.device_put(adamw_init(params), bundle.in_shardings[1])
+        return model, bundle, params, opt
+
+    def run_steps(ctx, mesh, n_steps=5):
+        _, bundle, p, o = build(ctx, mesh)
+        out = []
+        for _ in range(n_steps):
+            p, o, m = bundle.fn(p, o, batch)
+            out.append((float(m["loss"]), float(m["grad_norm"])))
+        return np.array(out), bundle
+
+    grids = [("q1", dict(mode="tesseract", data=1, depth=1, rows=1, cols=1)),
+             ("q2", dict(mode="tesseract", data=1, depth=1, rows=2, cols=2))]
+    for name, kw in grids:
+        ctx = ParallelContext(**kw)
+        r2, b2 = run_steps(ctx, _mesh5(ctx, 2))
+        r1, _ = run_steps(ctx, _mesh5(ctx, 1))
+        info = b2.pipe_info
+        assert info["n_stages"] == 2 and info["n_micro"] == 4, info
+        assert abs(info["measured_bubble"] - info["predicted_bubble"]) \
+            < 1e-9, info
+        np.testing.assert_array_equal(
+            r2[:, 0], r1[:, 0],
+            err_msg=f"{name}: pipelined loss != 1-stage baseline (bitwise)")
+        np.testing.assert_allclose(
+            r2[:, 1], r1[:, 1], rtol=0, atol=3e-7,
+            err_msg=f"{name}: grad_norm drifted past ulp noise")
+        rf, _ = run_steps(ctx, logical_mesh(ctx, jax.devices()[:ctx.tp]))
+        np.testing.assert_allclose(r2, rf, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"{name}: vs flat step")
+        print(f"  pipeline {name}: 5-step loss bitwise == 1-stage "
+              f"(bubble {info['measured_bubble']:.3f})")
+
+    # ---- checkpoint across a pipe-degree change (2 -> 1 stages) ----
+    import tempfile
+    from repro.checkpoint.ckpt import CheckpointManager
+    ctx = ParallelContext(mode="tesseract", data=1, depth=1, rows=2, cols=2)
+    _, b2, p, o = build(ctx, _mesh5(ctx, 2))
+    ref = []
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        for i in range(4):
+            p, o, m = b2.fn(p, o, batch)
+            ref.append(float(m["loss"]))
+            if i == 1:   # snapshot before donation reuses the buffers
+                mgr.save(1, {"params": p, "opt": o}, blocking=True)
+        _, b1, _, _ = build(ctx, _mesh5(ctx, 1))
+        abs_p, abs_o, _ = b1.abstract_inputs
+        st = mgr.restore(1, {"params": abs_p, "opt": abs_o},
+                         {"params": b1.in_shardings[0],
+                          "opt": b1.in_shardings[1]})
+    p1, o1 = st["params"], st["opt"]
+    got = []
+    for _ in range(2):
+        p1, o1, m = b1.fn(p1, o1, batch)
+        got.append(float(m["loss"]))
+    np.testing.assert_allclose(got, ref[2:], rtol=0, atol=1e-6,
+                               err_msg="pipe=2 ckpt -> pipe=1 restore")
+    print("  pipeline ckpt: pipe=2 checkpoint restored onto pipe=1, "
+          "losses continue")
+    print("PASS pipeline_parity")
+
+
+def check_train_elastic_accum():
+    """Fault -> restore -> elastic 8 -> 4 device shrink mid-run: the train
+    loop consumes Replan.accum_steps, so the global batch per optimizer
+    step is preserved and the loss trajectory continues the uninterrupted
+    8-device run under the step-keyed data stream."""
+    import tempfile
+
+    import jax
+    from repro.configs.base import RunConfig, ShapeSpec
+    from repro.core.api import ParallelContext
+    from repro.core.mesh import logical_mesh
+    from repro.models.registry import build_model, get_reduced
+    from repro.runtime.elastic import replan
+    from repro.runtime.train_loop import train
+
+    run = RunConfig(param_dtype="float32", compute_dtype="float32",
+                    loss_chunk=8, q_chunk=8, kv_chunk=8, lr=1e-3)
+    shape = ShapeSpec("t", seq_len=16, global_batch=16, kind="train")
+    arch = get_reduced("yi-6b")
+    ctx8 = ParallelContext(mode="tesseract", data=8, depth=1, rows=1, cols=1)
+    mesh8 = logical_mesh(ctx8, jax.devices()[:8])
+    model8 = build_model(arch.model, ctx8, run)
+
+    with tempfile.TemporaryDirectory() as dref, \
+            tempfile.TemporaryDirectory() as dft:
+        ref = train(model8, mesh8, shape, steps=8, ckpt_dir=dref,
+                    ckpt_every=100, log_every=0)
+
+        fired = set()
+
+        def fault(step):
+            if step == 5 and step not in fired:
+                fired.add(step)
+                raise RuntimeError("injected: half the fleet lost")
+
+        try:
+            train(model8, mesh8, shape, steps=8, ckpt_dir=dft, ckpt_every=2,
+                  log_every=0, fault_hook=fault, max_restarts=0)
+            raise AssertionError("fault did not surface")
+        except RuntimeError:
+            pass
+
+        # driver-level elastic re-plan onto the surviving 4 devices
+        rp = replan(4, ctx8, global_batch=shape.global_batch)
+        assert rp.ctx.data == 4 and rp.accum_steps == 2 and rp.n_idle == 0, rp
+        model4 = build_model(arch.model, rp.ctx, run)
+        mesh4 = logical_mesh(rp.ctx, jax.devices()[:rp.n_used])
+        res = train(model4, mesh4, shape, steps=8, ckpt_dir=dft,
+                    ckpt_every=100, log_every=0,
+                    accum_steps=rp.accum_steps)
+        # restored from the step-3 checkpoint -> steps 4..7 remain
+        assert res.last_step == 7 and len(res.losses) == 4, \
+            (res.last_step, len(res.losses))
+        np.testing.assert_allclose(res.losses, ref.losses[4:],
+                                   rtol=1e-5, atol=1e-6,
+                                   err_msg="post-replan trajectory diverged")
+    print(f"  elastic train: 8 -> {rp.n_used} devices, accum_steps="
+          f"{rp.accum_steps} consumed, trajectory preserved {res.losses}")
+    print("PASS train_elastic_accum")
+
+
 CHECKS = {
     "summa_exact": check_summa_exact,
     "ring_schedule": check_ring_schedule,
@@ -721,6 +883,8 @@ CHECKS = {
     "moe_local_layout": check_moe_local_layout,
     "serve_engine": check_serve_engine,
     "engine_elastic": check_engine_elastic,
+    "pipeline_parity": check_pipeline_parity,
+    "train_elastic_accum": check_train_elastic_accum,
 }
 
 

@@ -26,6 +26,8 @@ CHECKS = [
     "moe_local_layout",
     "serve_engine",
     "engine_elastic",
+    "pipeline_parity",
+    "train_elastic_accum",
 ]
 
 

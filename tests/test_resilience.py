@@ -1,0 +1,204 @@
+"""Unit tests for the fault-tolerance hardening: prefetcher error
+propagation, straggler-detection floors, async-checkpoint failure surfacing,
+elastic replan fallback, and hash-salt-free data determinism."""
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.core.api import ParallelContext
+from repro.data.pipeline import Prefetcher, SyntheticLMStream
+from repro.runtime.elastic import replan
+from repro.runtime.stragglers import StragglerMonitor
+
+
+# ---------------------------------------------------------------- prefetcher
+
+class _FailingStream(SyntheticLMStream):
+    def __init__(self, fail_at, **kw):
+        super().__init__(**kw)
+        self.fail_at = fail_at
+
+    def batch(self, step, *, train=True):
+        if step == self.fail_at:
+            raise ValueError(f"injected producer failure at step {step}")
+        return super().batch(step, train=train)
+
+
+def _shardings_for(stream):
+    import jax
+    b = stream.batch(0)
+    return {k: jax.devices()[0] for k in b}
+
+
+def test_prefetcher_propagates_producer_error_promptly():
+    stream = _FailingStream(fail_at=2, vocab_size=50, global_batch=2,
+                            seq_len=4)
+    pf = Prefetcher(stream, _shardings_for(stream))
+    try:
+        assert pf.next(timeout=30)[0] == 0
+        assert pf.next(timeout=30)[0] == 1
+        t0 = time.monotonic()
+        with pytest.raises(ValueError, match="injected producer failure"):
+            pf.next(timeout=30)
+        # the old behaviour blocked the full timeout and raised queue.Empty
+        assert time.monotonic() - t0 < 10
+    finally:
+        pf.stop()
+
+
+def test_prefetcher_orders_steps_and_stops():
+    stream = SyntheticLMStream(50, 2, 4)
+    pf = Prefetcher(stream, _shardings_for(stream), start_step=3)
+    try:
+        for want in (3, 4, 5):
+            step, dev = pf.next(timeout=30)
+            assert step == want and set(dev) == {"tokens", "labels"}
+    finally:
+        pf.stop()
+
+
+def test_prefetcher_timeout_is_a_timeout_error():
+    class _Hang(SyntheticLMStream):
+        def batch(self, step, *, train=True):
+            time.sleep(3600)
+
+    pf = Prefetcher(_Hang(50, 2, 4), {})
+    try:
+        with pytest.raises(TimeoutError):
+            pf.next(timeout=0.5)
+    finally:
+        pf._stop.set()   # don't join the sleeping thread
+
+
+# ---------------------------------------------------------------- stragglers
+
+def test_straggler_quiet_fleet_not_flagged():
+    """Fleet variance ~0: microsecond jitter must not be amplified into
+    stragglers by the (previously 1e-9) MAD floor."""
+    mon = StragglerMonitor(min_samples=3)
+    rng = np.random.default_rng(0)
+    for h in range(16):
+        for _ in range(5):
+            mon.record(h, 0.100 + rng.normal(0, 1e-6))
+    assert mon.stragglers() == []
+
+
+def test_straggler_real_outlier_flagged():
+    mon = StragglerMonitor(min_samples=3)
+    for h in range(8):
+        for _ in range(5):
+            mon.record(h, 0.100 + 1e-4 * h)
+    for _ in range(5):
+        mon.record(99, 0.250)   # 2.5x median: a genuine straggler
+    assert mon.stragglers() == [99]
+
+
+def test_straggler_small_absolute_skew_not_flagged():
+    """A host 2 ms slower on a 1 s step is within the relative floor."""
+    mon = StragglerMonitor(min_samples=3)
+    for h in range(8):
+        for _ in range(5):
+            mon.record(h, 1.000)
+    for _ in range(5):
+        mon.record(9, 1.002)
+    assert mon.stragglers() == []
+
+
+# ---------------------------------------------------------------- checkpoint
+
+def test_async_checkpoint_failure_is_reraised(tmp_path, monkeypatch):
+    mgr = CheckpointManager(tmp_path)
+    state = {"w": np.arange(8, dtype=np.float32)}
+    mgr.save(0, state, blocking=True)
+
+    real_write = mgr._write
+    calls = {"n": 0}
+
+    def flaky_write(step, host):
+        calls["n"] += 1
+        raise OSError("disk full (injected)")
+
+    monkeypatch.setattr(mgr, "_write", flaky_write)
+    mgr.save(1, state)            # async; failure captured in the thread
+    with pytest.raises(RuntimeError, match="step 1 failed.*disk full"):
+        mgr.wait()
+    assert calls["n"] == 1
+    # the error is cleared once surfaced; the previous checkpoint survives
+    mgr.wait()
+    assert mgr.latest_step() == 0
+    monkeypatch.setattr(mgr, "_write", real_write)
+    mgr.save(2, state)
+    mgr.wait()
+    assert mgr.latest_step() == 2
+
+
+def test_async_checkpoint_failure_surfaces_on_next_save(tmp_path, monkeypatch):
+    mgr = CheckpointManager(tmp_path)
+    state = {"w": np.zeros(4, np.float32)}
+    monkeypatch.setattr(mgr, "_write",
+                        lambda step, host: (_ for _ in ()).throw(
+                            OSError("injected")))
+    mgr.save(0, state)
+    with pytest.raises(RuntimeError, match="async checkpoint save"):
+        mgr.save(1, state)
+
+
+# ------------------------------------------------------------------ elastic
+
+def test_replan_divisible_shrink():
+    ctx = ParallelContext(mode="tesseract", data=8, depth=1, rows=1, cols=1)
+    rp = replan(4, ctx, global_batch=16)
+    assert (rp.ctx.data, rp.accum_steps, rp.n_used, rp.n_idle) == (4, 2, 4, 0)
+
+
+def test_replan_non_divisible_shrink_rounds_accum_up():
+    """8 -> 3 replicas: data=3 does not divide the batch, so data=2 with
+    accum=4 — ceil(8/3)=3 bumped to divide the 8 per-shard rows — is the
+    largest valid plan; no tokens are dropped (data*accum >= old data)."""
+    ctx = ParallelContext(mode="tesseract", data=8, depth=1, rows=1, cols=1)
+    rp = replan(3, ctx, global_batch=16)
+    assert (rp.ctx.data, rp.accum_steps) == (2, 4)
+    assert rp.ctx.data * rp.accum_steps >= ctx.data
+
+
+def test_replan_invalid_batch_raises():
+    ctx = ParallelContext(mode="tesseract", data=8, depth=1, rows=1, cols=1)
+    with pytest.raises(ValueError, match="cannot produce a valid elastic"):
+        replan(4, ctx, global_batch=7)
+
+
+def test_replan_tp_group_too_big_raises():
+    ctx = ParallelContext(mode="tesseract", data=1, depth=2, rows=2, cols=2)
+    with pytest.raises(RuntimeError, match="cannot fit"):
+        replan(4, ctx, global_batch=16)
+
+
+# ------------------------------------------------------------- data hashing
+
+def test_extras_seeding_stable_across_hash_salts():
+    """hash(name) is salted per process (PYTHONHASHSEED); the stream must
+    use a stable digest so restarts reproduce identical extras."""
+    code = (
+        "import sys; sys.path.insert(0, 'src')\n"
+        "import numpy as np, jax\n"
+        "from repro.data.pipeline import SyntheticLMStream\n"
+        "sd = jax.ShapeDtypeStruct((3, 5), np.float32)\n"
+        "s = SyntheticLMStream(50, 2, 4, extras={'pixels': (sd, None)})\n"
+        "b = s.batch(7)\n"
+        "print(b['pixels'].tobytes().hex())\n"
+    )
+    outs = []
+    for salt in ("1", "2"):
+        env = dict(os.environ, PYTHONHASHSEED=salt)
+        r = subprocess.run([sys.executable, "-c", code], env=env,
+                           capture_output=True, text=True, timeout=300,
+                           cwd=os.path.dirname(os.path.dirname(
+                               os.path.abspath(__file__))))
+        assert r.returncode == 0, r.stderr[-2000:]
+        outs.append(r.stdout.strip())
+    assert outs[0] == outs[1], "extras stream depends on the process hash salt"
