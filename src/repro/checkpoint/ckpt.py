@@ -58,8 +58,14 @@ class CheckpointManager:
         self._error_step: int | None = None
 
     # ------------------------------------------------------------- save
-    def save(self, step: int, state: dict, blocking: bool = False):
+    def save(self, step: int, state: dict, blocking: bool = False,
+             meta: dict | None = None):
         """state: pytree of jax Arrays (fully-addressable).
+
+        ``meta`` is an optional JSON-able dict stored in the manifest —
+        the train loop records the ZeRO-1 optimizer-state layout there
+        (``StepBundle.opt_layouts_json()``) so restore can re-shard across
+        dp-degree or layout changes.
 
         A failure inside a previous async save is re-raised here (or in
         ``wait()``) — a checkpoint that silently never landed would turn
@@ -69,24 +75,26 @@ class CheckpointManager:
         self.wait()  # one in-flight save at a time; re-raises async errors
         if self.async_save and not blocking:
             self._thread = threading.Thread(
-                target=self._write_guarded, args=(step, host), daemon=True)
+                target=self._write_guarded, args=(step, host, meta),
+                daemon=True)
             self._thread.start()
         else:
-            self._write(step, host)
+            self._write(step, host, meta)
 
-    def _write_guarded(self, step: int, host: dict):
+    def _write_guarded(self, step: int, host: dict, meta=None):
         try:
-            self._write(step, host)
+            self._write(step, host, meta)
         except BaseException as e:  # surfaced on the next wait()/save()
             self._error = e
             self._error_step = step
 
-    def _write(self, step: int, host: dict):
+    def _write(self, step: int, host: dict, meta=None):
         tmp = self.dir / f".tmp-{step}"
         if tmp.exists():
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
-        manifest = {"step": step, "time": time.time(), "leaves": {}}
+        manifest = {"step": step, "time": time.time(), "leaves": {},
+                    **({"meta": meta} if meta else {})}
         for path, arr in host.items():
             fn = path.replace("/", "__") + ".npy"
             # store raw bytes so ml_dtypes (bfloat16 etc.) round-trip
@@ -139,10 +147,17 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: int, abstract_state, shardings):
-        """Restore onto the target mesh/shardings (reshard-on-restore)."""
+    def restore(self, step: int, abstract_state, shardings, convert=None):
+        """Restore onto the target mesh/shardings (reshard-on-restore).
+
+        ``convert(path, arr, manifest_meta) -> arr`` (optional) transforms
+        each host array before the shape check — the hook the ZeRO-1
+        optimizer-state resharder uses to move checkpoints across dp-degree
+        changes and between the replicated and sharded layouts
+        (``optim/zero.make_ckpt_converter``)."""
         d = self.dir / f"step_{step:08d}"
         manifest = json.loads((d / "manifest.json").read_text())
+        mf_meta = manifest.get("meta") or {}
         flat_abs = _flatten(abstract_state)
         flat_sh = _flatten(shardings)
         out = {}
@@ -150,6 +165,8 @@ class CheckpointManager:
             meta = manifest["leaves"][path]
             raw = np.load(d / meta["file"])
             arr = raw.view(np.dtype(meta["dtype"])).reshape(meta["shape"])
+            if convert is not None:
+                arr = convert(path, arr, mf_meta)
             if tuple(arr.shape) != tuple(ab.shape):
                 raise ValueError(f"{path}: ckpt {arr.shape} != expected {ab.shape}")
             if str(arr.dtype) != str(ab.dtype):

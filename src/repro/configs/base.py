@@ -115,6 +115,14 @@ class ModelConfig:
         return full - all_experts + active_experts
 
 
+# RunConfig fields that are intentionally no longer consumed anywhere in
+# src/repro (kept for config-file compatibility).  Every OTHER field must be
+# read somewhere — enforced by tests/test_config.py.
+DEPRECATED_RUN_FIELDS: frozenset = frozenset()
+
+_DTYPES = ("float32", "bfloat16", "float16")
+
+
 @dataclass(frozen=True)
 class RunConfig:
     param_dtype: str = "float32"
@@ -131,6 +139,16 @@ class RunConfig:
     grad_clip: float = 1.0
     optimizer: str = "adamw"     # adamw | lamb
     zero1: bool = False          # shard optimizer state over data axis
+    # ZeRO stage (DESIGN.md §9): 0 = replicated optimizer state, 1 = state
+    # sharded over the leaf's replicated DP axes (equivalent to zero1=True;
+    # either knob enables it).  Stages 2/3 (grad / param sharding) are not
+    # implemented.
+    zero_stage: int = 0
+    # Static loss scaling for low-precision compute: the loss is multiplied
+    # by loss_scale before the backward and gradients are unscaled before
+    # clipping/optimizer — a numerics lever for float16 (bf16's exponent
+    # range usually needs none; keep 1.0 there).
+    loss_scale: float = 1.0
     grad_compression: str = "none"  # none | bf16
     # MoE expert-weight layout: "2d" = paper-style SUMMA sharding per expert
     # over (row,col); "local" = expert weights local to their depth slice,
@@ -154,6 +172,33 @@ class RunConfig:
     # re-plans (runtime/elastic.Replan.accum_steps) override it so a device
     # shrink preserves the global batch per optimizer step.
     accum_steps: int = 1
+
+    def __post_init__(self):
+        if self.param_dtype not in _DTYPES:
+            raise ValueError(f"param_dtype must be one of {_DTYPES}, "
+                             f"got {self.param_dtype!r}")
+        if self.compute_dtype not in _DTYPES:
+            raise ValueError(f"compute_dtype must be one of {_DTYPES}, "
+                             f"got {self.compute_dtype!r}")
+        if self.zero_stage not in (0, 1):
+            raise ValueError(f"zero_stage must be 0 or 1 (stage 2/3 grad/"
+                             f"param sharding not implemented), got "
+                             f"{self.zero_stage}")
+        if not self.loss_scale > 0:
+            raise ValueError(f"loss_scale must be > 0, got {self.loss_scale}")
+        if self.optimizer not in ("adamw", "lamb"):
+            raise ValueError(f"optimizer must be 'adamw' or 'lamb', "
+                             f"got {self.optimizer!r}")
+
+    @property
+    def zero_enabled(self) -> bool:
+        """ZeRO-1 optimizer-state sharding on (either knob)."""
+        return self.zero1 or self.zero_stage >= 1
+
+    @property
+    def master_weights(self) -> bool:
+        """fp32 master copies are kept whenever params are low-precision."""
+        return self.param_dtype != "float32"
 
 
 @dataclass(frozen=True)

@@ -31,6 +31,18 @@ def main():
     ap.add_argument("--depth", type=int, default=1)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--zero-stage", type=int, default=0, choices=(0, 1),
+                    help="ZeRO stage: 1 shards AdamW state over the "
+                         "data/depth replica axes (same as --zero1)")
+    ap.add_argument("--param-dtype", default="float32",
+                    choices=("float32", "bfloat16", "float16"))
+    ap.add_argument("--compute-dtype", default="float32",
+                    choices=("float32", "bfloat16", "float16"),
+                    help="bf16 compute + fp32 master weights is the "
+                         "mixed-precision recipe (DESIGN.md §9)")
+    ap.add_argument("--loss-scale", type=float, default=1.0,
+                    help="static loss scaling (float16 numerics lever; "
+                         "grads are unscaled before clip/optimizer)")
     ap.add_argument("--matmul-schedule", default="fused",
                     choices=("fused", "ring", "auto"))
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -57,13 +69,16 @@ def main():
     ctx = ParallelContext(mode=args.mode, data=args.data, depth=args.depth,
                           rows=args.rows, cols=args.cols,
                           matmul_schedule=args.matmul_schedule)
-    mesh = pipeline_mesh(ctx, args.pipe)
-    run = RunConfig(param_dtype="float32", compute_dtype="float32",
+    run = RunConfig(param_dtype=args.param_dtype,
+                    compute_dtype=args.compute_dtype,
                     loss_chunk=128, q_chunk=64, kv_chunk=64, lr=args.lr,
-                    zero1=args.zero1, matmul_schedule=args.matmul_schedule,
+                    zero1=args.zero1, zero_stage=args.zero_stage,
+                    loss_scale=args.loss_scale,
+                    matmul_schedule=args.matmul_schedule,
                     pipe_stages=args.pipe,
                     pipeline_microbatches=args.microbatches,
                     accum_steps=args.accum)
+    mesh = pipeline_mesh(ctx, run.pipe_stages)
     model = build_model(arch.model, ctx, run)
     shape = ShapeSpec("train", seq_len=args.seq, global_batch=args.batch,
                       kind="train")

@@ -24,8 +24,25 @@ def adamw_init(params, *, master: bool = False):
     return st
 
 
+def _check_state_f32(state):
+    """The moments (and master copy) must stay fp32: a bf16 m/v silently
+    destroys the running second moment (eps^2-scale values underflow).
+    Raised at trace time — dtypes are static."""
+    for name in ("m", "v", "master"):
+        if name not in state:
+            continue
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                state[name])[0]:
+            if leaf.dtype != jnp.float32:
+                raise TypeError(
+                    f"optimizer state {name}{jax.tree_util.keystr(path)} is "
+                    f"{leaf.dtype}, must be float32 — a low-precision "
+                    f"moment/master accumulates silent rounding error")
+
+
 def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
                  weight_decay=0.0):
+    _check_state_f32(state)
     step = state["step"] + 1
     sf = step.astype(jnp.float32)
     c1 = 1.0 - b1 ** sf
@@ -55,6 +72,7 @@ def lamb_update(params, grads, state, *, lr, b1=0.9, b2=0.999, eps=1e-6,
     leaf — the caller provides a layout-aware implementation (the default is
     only correct for unsharded leaves).
     """
+    _check_state_f32(state)
     step = state["step"] + 1
     sf = step.astype(jnp.float32)
     c1 = 1.0 - b1 ** sf

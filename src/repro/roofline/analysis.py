@@ -87,6 +87,53 @@ def exposed_collective_term(compute_s: float, collective_s: float,
     return collective_s
 
 
+def optimizer_state_bytes(n_params: int, *, tp: int = 1, data: int = 1,
+                          depth: int = 1, zero_stage: int = 0,
+                          master: bool = True, moments: int = 2) -> float:
+    """Eq. 8 extended with the optimizer-state term (DESIGN.md §9).
+
+    The paper's per-device memory (ab + bcd + ac)/p counts activations,
+    weights and outputs only; a training step also carries fp32 AdamW
+    moments (and the fp32 master copy under mixed precision), which follow
+    the WEIGHT layout: sharded 1/tp over the TP group but replicated over
+    the ``data`` (and, for most leaves, ``depth``) replica axes.
+
+        M_opt = (moments + master) * 4 bytes * N / tp            (ZeRO-0)
+        M_opt = (moments + master) * 4 bytes * N / (tp*data*depth)  (ZeRO-1)
+
+    ZeRO-1 partitions each leaf's state over the axes it is REPLICATED on;
+    depth-sharded leaves (head, experts) only divide by ``data``, so the
+    dp-factor is exact on depth=1 meshes and a close upper bound otherwise
+    (flat-index padding adds <= data*depth*4 bytes per leaf).
+    """
+    words = moments + (1 if master else 0)
+    per_device = words * 4.0 * n_params / tp
+    if zero_stage >= 1:
+        per_device /= (data * depth)
+    return per_device
+
+
+def eq8_train_state_bytes(a: int, b: int, c: int, *, q: int, d: int,
+                          data: int = 1, zero_stage: int = 0,
+                          master: bool = True,
+                          param_bytes: int = 4) -> dict:
+    """Per-device Eq. 8 memory terms for one [a,b]x[b,c] layer, extended
+    with gradient + optimizer-state terms: the memory model backing the
+    ``zero1`` benchmark case and tests/test_memory_model.py."""
+    p = q * q * d
+    act = a * b / p * param_bytes
+    weight = b * c * d / p * param_bytes
+    out = a * c / p * param_bytes
+    n_w = b * c  # weight elements of the layer (d-fold replication is the
+    #              paper's own Eq. 8 term; grads/opt state follow it)
+    grad = weight
+    opt = optimizer_state_bytes(n_w, tp=p // d, data=data, depth=d,
+                                zero_stage=zero_stage, master=master)
+    return {"activations": act, "weights": weight, "outputs": out,
+            "grads": grad, "opt_state": opt,
+            "total": act + weight + out + grad + opt}
+
+
 def model_flops(cfg, shape) -> float:
     """6*N*D training flops (fwd+bwd) or 2*N*D serving flops."""
     n_active = cfg.active_param_count()

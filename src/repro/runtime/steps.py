@@ -87,6 +87,16 @@ class StepBundle:
     mesh: Any
     plan: Plan
     pipe_info: Any = None        # 1F1B schedule stats (pipelined steps only)
+    # ZeRO-1 per-param-leaf optimizer-state layouts (optim/zero.LeafLayout
+    # tree; None when the optimizer state is replicated).  Checkpoints store
+    # layouts_to_json(opt_layouts) in their manifest so restore can re-shard
+    # across dp-degree changes (checkpoint/ckpt.py + optim/zero.py).
+    opt_layouts: Any = None
+
+    def opt_layouts_json(self):
+        from ..optim import zero as zopt
+        return (zopt.layouts_to_json(self.opt_layouts)
+                if self.opt_layouts is not None else None)
 
 
 def _shardings(mesh, spec_tree):
@@ -112,6 +122,66 @@ def batch_abstract(ops, shape: ShapeSpec, ctx: ParallelContext, model=None):
             shapes[name] = sd
             specs[name] = sp
     return shapes, specs
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 optimizer section (shared by the flat and pipelined train steps)
+# ---------------------------------------------------------------------------
+
+def zero_optimizer_step(params, opt_state, grads, *, layouts, is_tess,
+                        specs, axis_sizes, run, update_fn, lr, gnorm_axes):
+    """ZeRO-1 update inside shard_map (DESIGN.md §9): reduce_scatter the
+    zaxes-partial grads into each device's [k] state slice (in-op tesseract
+    weights arrive reduced: plain slice), clip on the slices, run the
+    optimizer on the fp32 m/v/master slices (master lazily adopted from the
+    params at step 0), and all_gather the new param slices back — cast to
+    param dtype FIRST so bf16 params ride the wire in bf16.
+
+    Returns (new_params, new_opt_state, grad_norm)."""
+    from ..optim import zero as zopt
+
+    g_sl = jax.tree.map(
+        lambda g, lay, t: (zopt.zslice(g, lay) if t else
+                           zopt.zreduce_scatter(g, lay,
+                                                run.grad_compression)),
+        grads, layouts, is_tess)
+
+    # --- global grad-norm clip on the slices (every element counted once
+    # across the zaxes groups; the leaf's remaining replication divided out
+    # as in the dense path) ---
+    def slice_sq(sl, lay, s):
+        rem = tuple(a for a in replicated_axes(s) if a not in lay.zaxes)
+        rep = 1
+        for a in rem:
+            rep *= axis_sizes[a]
+        val = jnp.sum(sl.astype(jnp.float32) ** 2) / rep
+        return pvary(val, rem)
+    sq = sum(jax.tree.leaves(jax.tree.map(slice_sq, g_sl, layouts, specs)))
+    gnorm = jnp.sqrt(lax.psum(sq, gnorm_axes))
+    scale = jnp.minimum(1.0, run.grad_clip / (gnorm + 1e-6))
+    g_sl = jax.tree.map(lambda g: g * scale, g_sl)
+
+    p_sl = jax.tree.map(zopt.zslice, params, layouts)
+    sq_ = lambda t: jax.tree.map(lambda x: x[0], t)  # [1, k] -> [k]
+    st = {"step": opt_state["step"], "m": sq_(opt_state["m"]),
+          "v": sq_(opt_state["v"])}
+    if "master" in opt_state:
+        # lazy master init: step 0 adopts the param slice
+        is0 = (opt_state["step"] == 0)
+        st["master"] = jax.tree.map(
+            lambda m, pp: jnp.where(is0, pp.astype(jnp.float32), m),
+            sq_(opt_state["master"]), p_sl)
+    new_psl, new_state = update_fn(p_sl, g_sl, st, lr=lr,
+                                   weight_decay=run.weight_decay)
+    un = lambda t: jax.tree.map(lambda x: x[None], t)  # [k] -> [1, k]
+    new_state = {"step": new_state["step"], "m": un(new_state["m"]),
+                 "v": un(new_state["v"]),
+                 **({"master": un(new_state["master"])}
+                    if "master" in new_state else {})}
+    new_params = jax.tree.map(
+        lambda sl, p0, lay: zopt.zgather(sl, lay, p0.dtype),
+        new_psl, params, layouts)
+    return new_params, new_state, gnorm
 
 
 # ---------------------------------------------------------------------------
@@ -147,51 +217,65 @@ def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1):
                else jax.tree.map(lambda _: False, specs))
 
     rep_tree = jax.tree.map(lambda s: rep_factor(ctx, s), specs)
+    from ..core import collectives as col_mod
+    from ..optim import zero as zopt
+
+    use_zero = run.zero_enabled
+    opt_master = run.master_weights
+    if run.optimizer == "lamb":
+        if use_zero:
+            raise NotImplementedError(
+                "optimizer='lamb' with ZeRO-1 is not wired: the trust "
+                "ratios need unsharded per-leaf norms")
+        def _leaf_norm(x):
+            # global L2 of a sharded leaf.  On pre-vma jax psum_v reduces
+            # replicated axes too (x the rep factor) — it cancels in LAMB's
+            # ||p||/||u|| trust ratio because p and u share a layout.
+            from ..core.collectives import psum_v
+            return jnp.sqrt(psum_v(jnp.sum(x.astype(jnp.float32) ** 2),
+                                   LOGICAL_AXES))
+        update_fn = partial(adamw.lamb_update, norm_fn=_leaf_norm)
+    else:
+        update_fn = adamw.adamw_update
+
+    # ---- ZeRO-1 (DESIGN.md §9): per-leaf optimizer-state partitioning ----
+    # Each leaf's state is partitioned over the DP-like axes the leaf is
+    # REPLICATED on (zaxes = (data, depth) minus the leaf's own sharding
+    # axes — head/experts are depth-sharded and keep their state
+    # depth-local).  The data/depth grad psum is replaced by a
+    # reduce_scatter onto the flat-index slice; the update runs on the
+    # slice and one all_gather per leaf (in param dtype — bf16 wire under
+    # mixed precision) rebuilds the params.
+    axis_sizes = dict(data=ctx.data, depth=ctx.depth, row=ctx.rows,
+                      col=ctx.cols)
+    abs_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    layouts = (zopt.build_layouts(specs, abs_params, axis_sizes)
+               if use_zero else None)
 
     def pvary_axes(s, t):
         if t:  # in-op tesseract weight: custom bwd reduces (data, depth)
             return ()
-        return replicated_axes(s)
+        ax = replicated_axes(s)
+        if use_zero:
+            # the leaf's zaxes stay UNREDUCED here: zreduce_scatter below
+            # reduces them into the device-local state slice instead
+            ax = tuple(a for a in ax if a not in zopt.ZERO_CANDIDATE_AXES)
+        return ax
 
-    opt_master = run.param_dtype != "float32"
-
-    # ---- ZeRO-1: optimizer state sharded over (data, depth) ----
-    # Each leaf's LOCAL (row,col)-shard is flattened, zero-padded to a
-    # multiple of data*depth and sliced (free: grads are replicated over
-    # those axes after the sync); the update runs on the slice and fresh
-    # params are re-assembled with one all-gather per leaf — the classic
-    # ZeRO-1 trade of a weight gather for 1/(data*depth) m/v/master memory.
-    import numpy as _np
-    from ..core import collectives as col_mod
-    zero_axes = (ctx.axis_data, ctx.axis_depth)
-    zero_n = ctx.data * ctx.depth
-
-    def _shard_elems(spec, shp):
-        return int(_np.prod(NamedSharding(mesh, spec).shard_shape(tuple(shp))))
-
-    def zslice(x):
-        k = -(-x.size // zero_n)
-        flat = jnp.pad(x.reshape(-1), (0, k * zero_n - x.size))
-        i = col_mod.axis_linear_index(zero_axes)
-        return lax.dynamic_slice_in_dim(flat, i * k, k, axis=0)
-
-    def zunslice(slice_, shp):
-        flat = col_mod.all_gather_inv(slice_, zero_axes, tiled=True, axis=0)
-        n = 1
-        for d in shp:
-            n *= d
-        return flat[:n].reshape(shp)
+    ls = run.loss_scale
 
     def local_step(params, opt_state, batch):
         def loss_fn(p, mb):
             # grad_sync: fwd pvary / bwd fused (optionally bf16-compressed)
             # psum over each leaf's replication axes — the deferred form of
-            # the paper's depth all-reduce, plus the DP reduction.
+            # the paper's depth all-reduce, plus the DP reduction (under
+            # ZeRO-1 the DP reduction moves to the reduce_scatter below).
             pv = jax.tree.map(
                 lambda x, s, t: grad_sync(x, pvary_axes(s, t),
                                           run.grad_compression),
                 p, specs, is_tess)
-            return model.loss(pv, mb, ops)
+            out = model.loss(pv, mb, ops)
+            return out * ls if ls != 1.0 else out
 
         if accum_steps == 1:
             loss, grads = jax.value_and_grad(loss_fn)(params, batch)
@@ -215,6 +299,10 @@ def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1):
             loss = loss / accum_steps
             grads = jax.tree.map(lambda g: g / accum_steps, grads)
 
+        if ls != 1.0:  # static loss scaling: unscale before clip/optimizer
+            loss = loss / ls
+            grads = jax.tree.map(lambda g: g / ls, grads)
+
         if not col_mod.HAS_VMA:
             # Pre-vma jax seeds ALL p replicated copies of the loss scalar
             # (psum transposes to psum), so value_and_grad returns exactly
@@ -224,55 +312,35 @@ def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1):
             if p_rep > 1:
                 grads = jax.tree.map(lambda g: g / p_rep, grads)
 
-        # --- global grad-norm clip (layout aware) ---
-        def leaf_sq(g, rep, s):
-            val = jnp.sum(g.astype(jnp.float32) ** 2) / rep
-            return pvary(val, replicated_axes(s))
-        sq = sum(jax.tree.leaves(jax.tree.map(leaf_sq, grads, rep_tree, specs)))
-        gnorm = jnp.sqrt(lax.psum(sq, LOGICAL_AXES))
-        scale = jnp.minimum(1.0, run.grad_clip / (gnorm + 1e-6))
-        grads = jax.tree.map(lambda g: g * scale, grads)
-
         lr = adamw.cosine_lr(opt_state["step"], base_lr=run.lr,
                              warmup=100, total=10000)
-        if run.zero1:
-            g_sl = jax.tree.map(zslice, grads)
-            p_sl = jax.tree.map(zslice, params)
-            sq = lambda t: jax.tree.map(lambda x: x[0], t)  # [1,k] -> [k]
-            st = {"step": opt_state["step"], "m": sq(opt_state["m"]),
-                  "v": sq(opt_state["v"])}
-            if "master" in opt_state:
-                # lazy master init: step 0 adopts the param slice
-                is0 = (opt_state["step"] == 0)
-                st["master"] = jax.tree.map(
-                    lambda m, pp: jnp.where(is0, pp.astype(jnp.float32), m),
-                    sq(opt_state["master"]), p_sl)
-            new_psl, new_state = adamw.adamw_update(
-                p_sl, g_sl, st, lr=lr, weight_decay=run.weight_decay)
-            un = lambda t: jax.tree.map(lambda x: x[None], t)  # [k] -> [1,k]
-            new_state = {"step": new_state["step"], "m": un(new_state["m"]),
-                         "v": un(new_state["v"]),
-                         **({"master": un(new_state["master"])}
-                            if "master" in new_state else {})}
-            new_params = jax.tree.map(
-                lambda sl, p0: zunslice(sl, p0.shape).astype(p0.dtype),
-                new_psl, params)
+        if use_zero:
+            new_params, new_state, gnorm = zero_optimizer_step(
+                params, opt_state, grads, layouts=layouts, is_tess=is_tess,
+                specs=specs, axis_sizes=axis_sizes, run=run,
+                update_fn=update_fn, lr=lr, gnorm_axes=LOGICAL_AXES)
         else:
-            new_params, new_state = adamw.adamw_update(
-                params, grads, opt_state, lr=lr, weight_decay=run.weight_decay)
+            # --- global grad-norm clip (layout aware) ---
+            def leaf_sq(g, rep, s):
+                val = jnp.sum(g.astype(jnp.float32) ** 2) / rep
+                return pvary(val, replicated_axes(s))
+            sq = sum(jax.tree.leaves(jax.tree.map(leaf_sq, grads, rep_tree,
+                                                  specs)))
+            gnorm = jnp.sqrt(lax.psum(sq, LOGICAL_AXES))
+            scale = jnp.minimum(1.0, run.grad_clip / (gnorm + 1e-6))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+            new_params, new_state = update_fn(
+                params, grads, opt_state, lr=lr,
+                weight_decay=run.weight_decay)
         metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
         return new_params, new_state, metrics
 
-    if run.zero1:
-        # opt leaves: [n_slices, k] with dim0 mapped over (data, depth) PLUS
-        # the leaf's own sharded axes (row-replicated leaves must stay
+    if use_zero:
+        # opt leaves: [n_slices, k] with dim0 mapped over the leaf's zaxes
+        # PLUS its own sharded axes (row-replicated leaves must stay
         # row-replicated in their opt slices or the reconstructed param's
         # vma would spuriously vary over row).
-        def zspec_of(sp):
-            extra = tuple(a for a in spec_axes(sp)
-                          if a not in (ctx.axis_data, ctx.axis_depth))
-            return P((ctx.axis_data, ctx.axis_depth) + extra, None)
-        zspec_tree = jax.tree.map(zspec_of, specs)
+        zspec_tree = jax.tree.map(lambda lay: lay.state_spec(), layouts)
         opt_specs = {"m": zspec_tree, "v": zspec_tree, "step": P(),
                      **({"master": zspec_tree} if opt_master else {})}
     else:
@@ -310,18 +378,8 @@ def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1):
     fn = jax.jit(smapped, donate_argnums=(0, 1), in_shardings=in_sh,
                  out_shardings=out_sh)
 
-    abs_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    if run.zero1:
-        sizes = dict(data=ctx.data, depth=ctx.depth, row=ctx.rows,
-                     col=ctx.cols)
-        def zleaf(ab, sp):
-            k = -(-_shard_elems(sp, ab.shape) // zero_n)
-            n_slices = zero_n
-            for a in spec_axes(sp):
-                if a not in (ctx.axis_data, ctx.axis_depth):
-                    n_slices *= sizes[a]
-            return jax.ShapeDtypeStruct((n_slices, k), jnp.float32)
-        zt = jax.tree.map(zleaf, abs_params, specs)
+    if use_zero:
+        zt = jax.tree.map(lambda lay: lay.abstract(), layouts)
         abs_opt = {"m": zt, "v": zt,
                    "step": jax.ShapeDtypeStruct((), jnp.int32),
                    **({"master": zt} if opt_master else {})}
@@ -331,7 +389,8 @@ def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1):
     return StepBundle(
         fn=fn,
         abstract_inputs=(abs_params, abs_opt, batch_sds),
-        in_shardings=in_sh, out_shardings=out_sh, mesh=mesh, plan=plan)
+        in_shardings=in_sh, out_shardings=out_sh, mesh=mesh, plan=plan,
+        opt_layouts=layouts)
 
 
 # ---------------------------------------------------------------------------
@@ -366,9 +425,9 @@ def _build_pipeline_train_step(model, mesh, shape: ShapeSpec,
     if model.batch_extras(shape):
         raise NotImplementedError("pipelined training with modality extras "
                                   "is not supported")
-    if run.zero1:
-        raise NotImplementedError("zero1 + pipeline is not wired yet; the "
-                                  "stage shard already divides opt memory")
+    if run.optimizer != "adamw":
+        raise NotImplementedError("pipelined training supports "
+                                  "optimizer='adamw' only")
     if ctx.mode not in ("tesseract", "summa2d"):
         raise NotImplementedError(f"pipeline requires a tesseract/summa2d "
                                   f"TP group, got {ctx.mode!r}")
@@ -412,18 +471,37 @@ def _build_pipeline_train_step(model, mesh, shape: ShapeSpec,
     rep_tree = jax.tree.map(
         lambda s, psh: rep_factor(ctx, s) * (1 if psh else S_pipe),
         specs, pipe_sharded)
+
+    from ..optim import zero as zopt
+    use_zero = run.zero_enabled
+    # ZeRO-1 on the pipe mesh: "pipe" joins the candidate partition axes, so
+    # stage-replicated leaves (embed/head/final norm) shard their state over
+    # (data, depth, pipe) while stage-sharded blocks shard over (data,
+    # depth) within their stage (DESIGN.md §9).
+    zcand = zopt.ZERO_CANDIDATE_AXES + ("pipe",)
+    axis_sizes = dict(data=ctx.data, depth=ctx.depth, row=ctx.rows,
+                      col=ctx.cols, pipe=S_pipe)
+    abs_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    layouts = (zopt.build_layouts(pspecs, abs_params, axis_sizes,
+                                  candidates=zcand) if use_zero else None)
+
     # deferred grad reductions: replication axes of each leaf, plus pipe for
     # the stage-replicated leaves; in-op tesseract weights already reduced
     # (data, depth) inside the matmul bwd and are stage-sharded -> ().
+    # Under ZeRO-1 the leaf's zaxes are left UNREDUCED here — the
+    # reduce_scatter in the optimizer section reduces them.
     def _red_axes(s, t, psh):
         ax = () if t else replicated_axes(s)
-        return ax if psh else ax + ("pipe",)
+        ax = ax if psh else ax + ("pipe",)
+        if use_zero:
+            ax = tuple(a for a in ax if a not in zcand)
+        return ax
     red_axes = jax.tree.map(_red_axes, specs, is_tess, pipe_sharded)
 
     mb_can = mb_host // ctx.rows
     h_loc = model.cfg.d_model // ctx.cols
     cdt = model.cdt
-    opt_master = run.param_dtype != "float32"
+    opt_master = run.master_weights
     from .pipeline import schedule_1f1b
     sched = schedule_1f1b(M, S_pipe)   # simulated once, shared with the step
 
@@ -433,7 +511,8 @@ def _build_pipeline_train_step(model, mesh, shape: ShapeSpec,
         lab_mb = labels.reshape((M, labels.shape[0] // M) + labels.shape[1:])
         # CE count is label-count (no mask on this path): static, so the
         # backward seed 1/total is available before the first fwd finishes.
-        seed = jnp.float32(1.0) / jnp.float32(B * S_seq)
+        # run.loss_scale folds into the seed; grads are unscaled below.
+        seed = jnp.float32(run.loss_scale) / jnp.float32(B * S_seq)
 
         def stage_step(p, a, m_idx):
             tok = lax.dynamic_index_in_dim(tok_mb, m_idx, 0, keepdims=False)
@@ -470,29 +549,43 @@ def _build_pipeline_train_step(model, mesh, shape: ShapeSpec,
                                 tuple(ax)).astype(g.dtype)
             return lax.psum(g, tuple(ax))
         grads = jax.tree.map(red, grads, red_axes)
-
-        # --- global grad-norm clip (layout + stage aware) ---
-        def leaf_sq(g, rep, s, psh):
-            val = jnp.sum(g.astype(jnp.float32) ** 2) / rep
-            return pvary(val, replicated_axes(s) + (() if psh
-                                                    else ("pipe",)))
-        sq = sum(jax.tree.leaves(jax.tree.map(
-            leaf_sq, grads, rep_tree, specs, pipe_sharded)))
-        gnorm = jnp.sqrt(lax.psum(sq, LOGICAL_AXES + ("pipe",)))
-        scale = jnp.minimum(1.0, run.grad_clip / (gnorm + 1e-6))
-        grads = jax.tree.map(lambda g: g * scale, grads)
+        if run.loss_scale != 1.0:
+            grads = jax.tree.map(lambda g: g / run.loss_scale, grads)
 
         lr = adamw.cosine_lr(opt_state["step"], base_lr=run.lr,
                              warmup=100, total=10000)
-        new_params, new_state = adamw.adamw_update(
-            params, grads, opt_state, lr=lr, weight_decay=run.weight_decay)
+        if use_zero:
+            new_params, new_state, gnorm = zero_optimizer_step(
+                params, opt_state, grads, layouts=layouts, is_tess=is_tess,
+                specs=specs, axis_sizes=axis_sizes, run=run,
+                update_fn=adamw.adamw_update, lr=lr,
+                gnorm_axes=LOGICAL_AXES + ("pipe",))
+        else:
+            # --- global grad-norm clip (layout + stage aware) ---
+            def leaf_sq(g, rep, s, psh):
+                val = jnp.sum(g.astype(jnp.float32) ** 2) / rep
+                return pvary(val, replicated_axes(s) + (() if psh
+                                                        else ("pipe",)))
+            sq = sum(jax.tree.leaves(jax.tree.map(
+                leaf_sq, grads, rep_tree, specs, pipe_sharded)))
+            gnorm = jnp.sqrt(lax.psum(sq, LOGICAL_AXES + ("pipe",)))
+            scale = jnp.minimum(1.0, run.grad_clip / (gnorm + 1e-6))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+            new_params, new_state = adamw.adamw_update(
+                params, grads, opt_state, lr=lr,
+                weight_decay=run.weight_decay)
         metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
         return new_params, new_state, metrics
 
-    opt_specs = {
-        "m": pspecs, "v": pspecs, "step": P(),
-        **({"master": pspecs} if opt_master else {}),
-    }
+    if use_zero:
+        zspec_tree = jax.tree.map(lambda lay: lay.state_spec(), layouts)
+        opt_specs = {"m": zspec_tree, "v": zspec_tree, "step": P(),
+                     **({"master": zspec_tree} if opt_master else {})}
+    else:
+        opt_specs = {
+            "m": pspecs, "v": pspecs, "step": P(),
+            **({"master": pspecs} if opt_master else {}),
+        }
     batch_sds, batch_specs_ = batch_abstract(ops, shape, ctx, model)
     metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
 
@@ -506,14 +599,19 @@ def _build_pipeline_train_step(model, mesh, shape: ShapeSpec,
               _shardings(mesh, metric_specs))
     fn = jax.jit(smapped, donate_argnums=(0, 1), in_shardings=in_sh,
                  out_shardings=out_sh)
-    abs_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    abs_opt = jax.eval_shape(partial(adamw.adamw_init, master=opt_master),
-                             abs_params)
+    if use_zero:
+        zt = jax.tree.map(lambda lay: lay.abstract(), layouts)
+        abs_opt = {"m": zt, "v": zt,
+                   "step": jax.ShapeDtypeStruct((), jnp.int32),
+                   **({"master": zt} if opt_master else {})}
+    else:
+        abs_opt = jax.eval_shape(partial(adamw.adamw_init, master=opt_master),
+                                 abs_params)
     return StepBundle(
         fn=fn,
         abstract_inputs=(abs_params, abs_opt, batch_sds),
         in_shardings=in_sh, out_shardings=out_sh, mesh=mesh, plan=plan,
-        pipe_info=sched[3])
+        pipe_info=sched[3], opt_layouts=layouts)
 
 
 # ---------------------------------------------------------------------------

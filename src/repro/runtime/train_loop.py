@@ -49,6 +49,13 @@ def train(model, mesh, shape, *, steps: int, ckpt_dir=None, ckpt_every: int = 50
         accum_steps = model.run.accum_steps
     bundle = build_train_step(model, mesh, shape, accum_steps=accum_steps)
     mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    # ZeRO-1: record the optimizer-state layout in every checkpoint and
+    # re-shard on restore (dp-degree changes after an elastic replan, or a
+    # replicated <-> ZeRO layout switch).
+    from ..optim.zero import make_ckpt_converter
+    opt_layout_meta = bundle.opt_layouts_json()
+    save_meta = {"opt_layout": opt_layout_meta} if opt_layout_meta else None
+    opt_convert = make_ckpt_converter(opt_layout_meta)
     monitor = monitor or StragglerMonitor()
     result = TrainResult()
 
@@ -62,11 +69,11 @@ def train(model, mesh, shape, *, steps: int, ckpt_dir=None, ckpt_every: int = 50
         import jax.numpy as jnp
         params = model.init(jax.random.PRNGKey(seed))
         params = jax.device_put(params, bundle.in_shardings[0])
-        if model.run.zero1:
-            opt = jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
-                               bundle.abstract_inputs[1])
+        if model.run.zero_enabled:
+            from ..optim.zero import zero_opt_init
+            opt = zero_opt_init(bundle)
         else:
-            opt = adamw_init(params, master=model.run.param_dtype != "float32")
+            opt = adamw_init(params, master=model.run.master_weights)
         opt = jax.device_put(opt, bundle.in_shardings[1])
         return params, opt
 
@@ -81,7 +88,8 @@ def train(model, mesh, shape, *, steps: int, ckpt_dir=None, ckpt_every: int = 50
                 abs_p, abs_o, _ = bundle.abstract_inputs
                 state = mgr.restore(last, {"params": abs_p, "opt": abs_o},
                                     {"params": bundle.in_shardings[0],
-                                     "opt": bundle.in_shardings[1]})
+                                     "opt": bundle.in_shardings[1]},
+                                    convert=opt_convert)
                 return state["params"], state["opt"], last + 1
         p, o = init_state()
         return p, o, 0
@@ -115,7 +123,8 @@ def train(model, mesh, shape, *, steps: int, ckpt_dir=None, ckpt_every: int = 50
                               f"({dt*1e3:.0f} ms)")
                     step += 1
                     if mgr is not None and step % ckpt_every == 0:
-                        mgr.save(step - 1, {"params": params, "opt": opt})
+                        mgr.save(step - 1, {"params": params, "opt": opt},
+                                 meta=save_meta)
             finally:
                 pf.stop()
         except (FloatingPointError, RuntimeError, ValueError) as e:
@@ -144,6 +153,7 @@ def train(model, mesh, shape, *, steps: int, ckpt_dir=None, ckpt_every: int = 50
                 raise
             params, opt, step = restore_or_init()
     if mgr is not None:
-        mgr.save(steps - 1, {"params": params, "opt": opt}, blocking=True)
+        mgr.save(steps - 1, {"params": params, "opt": opt},
+                 blocking=True, meta=save_meta)
         mgr.wait()
     return result

@@ -197,6 +197,88 @@ def pipeline_throughput():
     print(json.dumps(out))
 
 
+def zero1_memory():
+    """ZeRO-1 vs replicated optimizer state on [data=4, q=1] and
+    [data=2, d=2, q=1] grids: measured per-device optimizer-state bytes
+    (from the bundles' real NamedShardings), step wall-clock, loss parity,
+    and the Eq. 8 + ZeRO memory-model prediction."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import RunConfig, ShapeSpec
+    from repro.core.api import ParallelContext
+    from repro.core.mesh import logical_mesh
+    from repro.models.registry import build_model, get_reduced
+    from repro.optim.adamw import adamw_init
+    from repro.roofline.analysis import optimizer_state_bytes
+    from repro.runtime.steps import build_train_step
+
+    B, S = 8, 32
+    arch = get_reduced("yi-6b")
+    shape = ShapeSpec("t", seq_len=S, global_batch=B, kind="train")
+
+    from repro.testing.mdchecks import _opt_bytes_per_device as opt_bytes
+
+    def measure(variant, zero, steps=8):
+        run = RunConfig(param_dtype="float32", compute_dtype="float32",
+                        loss_chunk=32, q_chunk=16, kv_chunk=16, lr=1e-3,
+                        zero1=zero)
+        ctx = ParallelContext(**variant)
+        mesh = logical_mesh(ctx, jax.devices()[:ctx.data * ctx.tp])
+        model = build_model(arch.model, ctx, run)
+        bundle = build_train_step(model, mesh, shape)
+        p = model.init(jax.random.PRNGKey(0))
+        if zero:
+            from repro.optim.zero import zero_opt_init
+            o = zero_opt_init(bundle)
+        else:
+            o = adamw_init(p)
+        losses, times = [], []
+        for s in range(steps):
+            tok = jax.random.randint(jax.random.PRNGKey(100 + s), (B, S),
+                                     0, 250)
+            batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
+            t0 = time.perf_counter()
+            p, o, m = bundle.fn(p, o, batch)
+            losses.append(float(m["loss"]))  # sync
+            times.append(time.perf_counter() - t0)
+        return {"us_per_step": sum(times[2:]) / len(times[2:]) * 1e6,
+                "opt_state_bytes_per_device": opt_bytes(bundle),
+                "losses": losses}
+
+    n_params = arch.model.param_count()
+    out = {}
+    for name, variant in [
+            ("dp4", dict(mode="tesseract", data=4, depth=1, rows=1, cols=1)),
+            ("dp2_d2", dict(mode="tesseract", data=2, depth=2, rows=1,
+                            cols=1))]:
+        base = measure(variant, zero=False)
+        z1 = measure(variant, zero=True)
+        ratio = (base["opt_state_bytes_per_device"]
+                 / z1["opt_state_bytes_per_device"])
+        dev = max(abs(a - b) for a, b in zip(base["losses"], z1["losses"]))
+        pred_base = optimizer_state_bytes(
+            n_params, tp=variant["depth"] * variant["rows"]
+            * variant["cols"], data=variant["data"],
+            depth=variant["depth"], zero_stage=0, master=False)
+        pred_z1 = optimizer_state_bytes(
+            n_params, tp=variant["depth"] * variant["rows"]
+            * variant["cols"], data=variant["data"],
+            depth=variant["depth"], zero_stage=1, master=False)
+        out[name] = {
+            "replicated": base, "zero1": z1,
+            "measured_ratio": ratio,
+            "model_pred_ratio": pred_base / pred_z1,
+            "model_pred_bytes": {"replicated": pred_base, "zero1": pred_z1},
+            "max_loss_dev": dev,
+            "losses_match": dev < 1e-5,
+        }
+        assert out[name]["losses_match"], (name, base["losses"],
+                                           z1["losses"])
+    # dp=4 must shrink ~4x (flat-index padding costs a few KiB)
+    assert out["dp4"]["measured_ratio"] > 3.2, out["dp4"]
+    print(json.dumps(out))
+
+
 def serve_throughput():
     """Continuous-batching engine vs the static-batch replay loop on a
     mixed-length workload, per batch size.  Greedy, so the two must emit
@@ -300,4 +382,5 @@ if __name__ == "__main__":
      "strong_scaling": strong_scaling,
      "matmul_schedules": matmul_schedules,
      "pipeline": pipeline_throughput,
+     "zero1_memory": zero1_memory,
      "serve_throughput": serve_throughput}[sys.argv[1]]()

@@ -271,17 +271,19 @@ def _train_losses(arch_name, variant, batch, n_steps=3, run_kw=None):
                       if k not in ("tokens", "labels")})
     bundle = build_train_step(model, mesh, shape)
     params = model.init(jax.random.PRNGKey(0))
-    if run.zero1:
-        opt = jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
-                           bundle.abstract_inputs[1])
+    if run.zero_enabled:
+        from repro.optim.zero import zero_opt_init
+        opt = zero_opt_init(bundle)
     else:
-        opt = adamw_init(params, master=run.param_dtype != "float32")
-    losses = []
+        opt = adamw_init(params, master=run.master_weights)
+    losses, gnorms = [], []
     p, o = params, opt
     for _ in range(n_steps):
         p, o, m = bundle.fn(p, o, batch)
         losses.append(float(m["loss"]))
-    return np.array(losses), (p, o, model, mesh, ctx, run)
+        gnorms.append(float(m["grad_norm"]))
+    return np.array(losses), (p, o, model, mesh, ctx, run, np.array(gnorms),
+                              bundle)
 
 
 def check_dense_parity(arch_name="yi-6b"):
@@ -524,18 +526,278 @@ def check_ring_train_parity():
     print("PASS ring_train_parity", l_ring)
 
 
+def _opt_bytes_per_device(bundle):
+    """Per-device optimizer-state bytes from the bundle's real shardings."""
+    import jax
+    abs_opt = bundle.abstract_inputs[1]
+    sh_opt = bundle.in_shardings[1]
+    total = 0
+    for ab, sh in zip(jax.tree.leaves(abs_opt), jax.tree.leaves(sh_opt)):
+        loc = sh.shard_shape(tuple(ab.shape))
+        n = 1
+        for d in loc:
+            n *= d
+        total += n * ab.dtype.itemsize
+    return total
+
+
 def check_zero1_parity():
-    """ZeRO-1 (opt state sharded over data*depth) must match baseline."""
+    """ZeRO-1 step == replicated-optimizer baseline over 5 steps (params,
+    loss, grad norm), per cell: q in {1, 2} x dp in {2, 4} x master off/on
+    (param_dtype fp32 / bf16+fp32-master), a depth-sharded-leaf grid
+    (head/experts keep state depth-local), deferred grad sync, and the
+    [pipe x data x ...] 1F1B mesh.  fp32 cells match to fp32 exactness;
+    bf16 cells to bf16-wire accumulation noise.  Per-device opt-state
+    bytes must shrink ~dp x on the dp=4 cell."""
     import jax, jax.numpy as jnp
+    ndev = jax.device_count()
     B, S = 8, 16
     tok = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0, 250)
     batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
-    v = dict(mode="tesseract", data=2, depth=1, rows=2, cols=2)
-    ref, _ = _train_losses("yi-6b", v, batch, n_steps=4)
-    got, _ = _train_losses("yi-6b", v, batch, n_steps=4,
-                           run_kw=dict(zero1=True))
-    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
-    print("PASS zero1_parity", got)
+
+    grids = [
+        ("q1_dp2", dict(mode="tesseract", data=2, depth=1, rows=1, cols=1)),
+        ("q1_dp4", dict(mode="tesseract", data=4, depth=1, rows=1, cols=1)),
+        ("q2_dp2", dict(mode="tesseract", data=2, depth=1, rows=2, cols=2)),
+        ("q1_d2_dp2", dict(mode="tesseract", data=2, depth=2, rows=1,
+                           cols=1)),
+        ("q2_dp2_deferred", dict(mode="tesseract", data=2, depth=1, rows=2,
+                                 cols=2, reduce_dgrad_in_op=False)),
+        # 16 fake devices (tests/test_zero.py spawns with that count)
+        ("q2_dp4", dict(mode="tesseract", data=4, depth=1, rows=2, cols=2)),
+    ]
+    # tests/test_zero.py runs single cells on bigger fake-device counts
+    only = os.environ.get("ZERO1_CELLS")
+    if only:
+        cells = set(only.split(","))
+        grids = [g for g in grids if g[0] in cells]
+        assert grids or "pipe" in cells, f"no such cells: {only}"
+    masters = [("fp32", dict()),
+               ("bf16_master", dict(param_dtype="bfloat16",
+                                    compute_dtype="bfloat16"))]
+
+    def compare(tag, ref_pack, got_pack, tol):
+        (ref, (pr, *_r)), (got, (pz, *_z)) = ref_pack, got_pack
+        gr, gz = _r[5], _z[5]
+        np.testing.assert_allclose(got, ref, rtol=tol, atol=tol,
+                                   err_msg=f"{tag}: loss")
+        np.testing.assert_allclose(gz, gr, rtol=tol, atol=tol,
+                                   err_msg=f"{tag}: grad_norm")
+        for (ka, a), (kb, b) in zip(
+                jax.tree_util.tree_flatten_with_path(pr)[0],
+                jax.tree_util.tree_flatten_with_path(pz)[0]):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                rtol=10 * tol, atol=10 * tol,
+                err_msg=f"{tag}: param {jax.tree_util.keystr(ka)}")
+
+    for name, variant in grids:
+        need = (variant["data"] * variant["depth"] * variant["rows"]
+                * variant["cols"])
+        if need > ndev:
+            print(f"  zero1 {name}: skipped ({need} devices > {ndev})")
+            continue
+        for mname, mkw in masters:
+            tol = 2e-6 if mname == "fp32" else 3e-5
+            ref = _train_losses("yi-6b", variant, batch, n_steps=5,
+                                run_kw=mkw)
+            got = _train_losses("yi-6b", variant, batch, n_steps=5,
+                                run_kw=dict(mkw, zero1=True))
+            compare(f"{name}/{mname}", ref, got, tol)
+            print(f"  zero1 {name}/{mname}: losses/gnorm/params match "
+                  f"{got[0][-2:]}")
+        if name == "q1_dp4":
+            b_ref = ref[1][7]
+            b_got = got[1][7]
+            ratio = _opt_bytes_per_device(b_ref) / _opt_bytes_per_device(
+                b_got)
+            assert ratio > 3.2, \
+                f"dp=4 opt-state bytes shrank only {ratio:.2f}x"
+            print(f"  zero1 q1_dp4: per-device opt state {ratio:.2f}x "
+                  f"smaller")
+
+    # ---- 1F1B pipeline mesh: blocks stage-sharded, embed/head shard their
+    # state over (data, pipe) ----
+    if ndev >= 4 and (not only or "pipe" in only):
+        from repro.configs.base import RunConfig, ShapeSpec
+        from repro.core.api import ParallelContext
+        from repro.models.registry import build_model, get_reduced
+        from repro.optim.adamw import adamw_init
+        from repro.runtime.steps import build_train_step
+        shape = ShapeSpec("t", seq_len=S, global_batch=B, kind="train")
+        ctx = ParallelContext(mode="tesseract", data=2, depth=1, rows=1,
+                              cols=1)
+
+        def run_pipe(zero):
+            run = RunConfig(param_dtype="float32", compute_dtype="float32",
+                            loss_chunk=8, q_chunk=8, kv_chunk=8, lr=1e-3,
+                            pipeline_microbatches=4, zero1=zero)
+            mesh = _mesh5(ctx, 2)
+            model = build_model(get_reduced("yi-6b").model, ctx, run)
+            bundle = build_train_step(model, mesh, shape)
+            p = jax.device_put(model.init(jax.random.PRNGKey(0)),
+                               bundle.in_shardings[0])
+            if zero:
+                from repro.optim.zero import zero_opt_init
+                o = jax.device_put(zero_opt_init(bundle),
+                                   bundle.in_shardings[1])
+            else:
+                o = jax.device_put(adamw_init(p), bundle.in_shardings[1])
+            out = []
+            for _ in range(5):
+                p, o, m = bundle.fn(p, o, batch)
+                out.append((float(m["loss"]), float(m["grad_norm"])))
+            return np.array(out), p
+
+        ref, pr = run_pipe(False)
+        got, pz = run_pipe(True)
+        np.testing.assert_allclose(got, ref, rtol=2e-6, atol=2e-6,
+                                   err_msg="pipe mesh: loss/gnorm")
+        for a, b in zip(jax.tree.leaves(pr), jax.tree.leaves(pz)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-5, atol=2e-5,
+                                       err_msg="pipe mesh: params")
+        print(f"  zero1 pipe2_dp2: 1F1B ZeRO-1 matches replicated "
+              f"{got[-1]}")
+    print("PASS zero1_parity")
+
+
+def check_zero1_elastic():
+    """ZeRO-1 state survives dp-degree and layout changes:
+
+    (a) checkpoint round-trip — save under dp=4/ZeRO-1, restore onto
+        dp=2/ZeRO-1 AND onto a dp=1 replicated-optimizer run (and from the
+        replicated run back onto dp=4/ZeRO-1); every resumed trajectory
+        matches the uninterrupted dp=4 run (uneven-leaf padding path
+        covered by the reduced model's odd-sized norm/ vocab leaves);
+    (b) elastic replan — fault at step 5 of a dp=8 ZeRO-1 run, replan onto
+        4 devices (accum_steps=2 consumed), trajectory preserved while the
+        opt-state shards re-partition 8 -> 4 via the manifest layout.
+    """
+    import tempfile
+
+    import jax, jax.numpy as jnp
+    from repro.checkpoint.ckpt import CheckpointManager
+    from repro.configs.base import RunConfig, ShapeSpec
+    from repro.core.api import ParallelContext
+    from repro.core.mesh import logical_mesh
+    from repro.models.registry import build_model, get_reduced
+    from repro.optim.adamw import adamw_init
+    from repro.optim.zero import make_ckpt_converter
+    from repro.runtime.steps import build_train_step
+
+    B, S = 8, 16
+    tok = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0, 250)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
+    shape = ShapeSpec("t", seq_len=S, global_batch=B, kind="train")
+    arch = get_reduced("yi-6b")
+
+    def build(dp, zero):
+        run = RunConfig(param_dtype="float32", compute_dtype="float32",
+                        loss_chunk=8, q_chunk=8, kv_chunk=8, lr=1e-3,
+                        zero1=zero)
+        ctx = ParallelContext(mode="tesseract", data=dp, depth=1, rows=1,
+                              cols=1)
+        mesh = logical_mesh(ctx, jax.devices()[:dp])
+        model = build_model(arch.model, ctx, run)
+        bundle = build_train_step(model, mesh, shape)
+        p = jax.device_put(model.init(jax.random.PRNGKey(0)),
+                           bundle.in_shardings[0])
+        if zero:
+            from repro.optim.zero import zero_opt_init
+            o = jax.device_put(zero_opt_init(bundle),
+                               bundle.in_shardings[1])
+        else:
+            o = jax.device_put(adamw_init(p), bundle.in_shardings[1])
+        return bundle, p, o
+
+    def steps_n(bundle, p, o, n):
+        out = []
+        for _ in range(n):
+            p, o, m = bundle.fn(p, o, batch)
+            out.append(float(m["loss"]))
+        return out, p, o
+
+    def restore_into(mgr, step, bundle):
+        abs_p, abs_o, _ = bundle.abstract_inputs
+        conv = make_ckpt_converter(bundle.opt_layouts_json())
+        return mgr.restore(step, {"params": abs_p, "opt": abs_o},
+                           {"params": bundle.in_shardings[0],
+                            "opt": bundle.in_shardings[1]}, convert=conv)
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        b4, p, o = build(4, zero=True)
+        _, p, o = steps_n(b4, p, o, 2)
+        mgr.save(1, {"params": p, "opt": o}, blocking=True,
+                 meta={"opt_layout": b4.opt_layouts_json()})
+        ref, _, _ = steps_n(b4, p, o, 3)
+
+        # dp=4 ZeRO -> dp=2 ZeRO (zn 4 -> 2 re-partition)
+        b2, _, _ = build(2, zero=True)
+        st = restore_into(mgr, 1, b2)
+        got2, _, _ = steps_n(b2, st["params"], st["opt"], 3)
+        np.testing.assert_allclose(got2, ref, rtol=1e-5, atol=1e-6,
+                                   err_msg="dp4 ZeRO ckpt -> dp2 ZeRO")
+        print(f"  zero1 ckpt dp4 -> dp2: losses continue {got2}")
+
+        # dp=4 ZeRO -> dp=1 replicated optimizer (unshard path)
+        b1, _, _ = build(1, zero=False)
+        st1 = restore_into(mgr, 1, b1)
+        got1, p1, o1 = steps_n(b1, st1["params"], st1["opt"], 1)
+        np.testing.assert_allclose(got1, ref[:1], rtol=1e-5, atol=1e-6,
+                                   err_msg="dp4 ZeRO ckpt -> dp1 replicated")
+
+        # ... and BACK: replicated dp=1 ckpt -> dp=4 ZeRO (shard path)
+        mgr.save(2, {"params": p1, "opt": o1}, blocking=True,
+                 meta={"opt_layout": b1.opt_layouts_json()})
+        stb = restore_into(mgr, 2, b4)
+        gotb, _, _ = steps_n(b4, stb["params"], stb["opt"], 2)
+        np.testing.assert_allclose(gotb, ref[1:], rtol=1e-5, atol=1e-6,
+                                   err_msg="replicated ckpt -> dp4 ZeRO")
+        print(f"  zero1 ckpt dp4 -> dp1(replicated) -> dp4: losses "
+              f"continue {got1 + gotb}")
+
+    # ---- (b) elastic 8 -> 4 replan under ZeRO-1 ----
+    from repro.runtime.elastic import replan
+    from repro.runtime.train_loop import train
+    run = RunConfig(param_dtype="float32", compute_dtype="float32",
+                    loss_chunk=8, q_chunk=8, kv_chunk=8, lr=1e-3, zero1=True)
+    eshape = ShapeSpec("t", seq_len=16, global_batch=16, kind="train")
+    ctx8 = ParallelContext(mode="tesseract", data=8, depth=1, rows=1, cols=1)
+    mesh8 = logical_mesh(ctx8, jax.devices()[:8])
+    model8 = build_model(arch.model, ctx8, run)
+
+    with tempfile.TemporaryDirectory() as dref, \
+            tempfile.TemporaryDirectory() as dft:
+        ref = train(model8, mesh8, eshape, steps=8, ckpt_dir=dref,
+                    ckpt_every=100, log_every=0)
+
+        def fault(step):
+            if step == 5:
+                raise RuntimeError("injected: half the fleet lost")
+
+        try:
+            train(model8, mesh8, eshape, steps=8, ckpt_dir=dft,
+                  ckpt_every=2, log_every=0, fault_hook=fault,
+                  max_restarts=0)
+            raise AssertionError("fault did not surface")
+        except RuntimeError:
+            pass
+
+        rp = replan(4, ctx8, global_batch=eshape.global_batch)
+        assert rp.ctx.data == 4 and rp.accum_steps == 2, rp
+        model4 = build_model(arch.model, rp.ctx, run)
+        mesh4 = logical_mesh(rp.ctx, jax.devices()[:rp.n_used])
+        res = train(model4, mesh4, eshape, steps=8, ckpt_dir=dft,
+                    ckpt_every=100, log_every=0,
+                    accum_steps=rp.accum_steps)
+        np.testing.assert_allclose(res.losses, ref.losses[4:],
+                                   rtol=1e-5, atol=1e-6,
+                                   err_msg="post-replan ZeRO trajectory")
+    print(f"  zero1 elastic: 8 -> 4 devices, opt shards re-partitioned, "
+          f"trajectory preserved {res.losses}")
+    print("PASS zero1_elastic")
 
 
 def check_moe_local_layout():
@@ -880,6 +1142,7 @@ CHECKS = {
     "families_parity": check_families_parity,
     "families_serve": check_families_serve,
     "zero1_parity": check_zero1_parity,
+    "zero1_elastic": check_zero1_elastic,
     "moe_local_layout": check_moe_local_layout,
     "serve_engine": check_serve_engine,
     "engine_elastic": check_engine_elastic,

@@ -1,0 +1,75 @@
+"""Config-surface validation: every declared RunConfig field must actually
+be consumed somewhere in src/repro (or be explicitly listed in
+DEPRECATED_RUN_FIELDS) — dead knobs like the pre-§9 param_dtype/
+compute_dtype silently lie to users about what a run will do.
+"""
+import dataclasses
+import functools
+import pathlib
+import re
+
+import pytest
+
+from repro.configs.base import DEPRECATED_RUN_FIELDS, RunConfig
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+BASE = SRC / "configs" / "base.py"
+
+
+def _strip_comments(text):
+    """Drop #-comments so a mention in prose can't count as consumption.
+    (A ``run.x`` inside a docstring can still slip through — the guard is
+    a heuristic, tightened as far as a regex reasonably goes.)"""
+    return re.sub(r"#[^\n]*", "", text)
+
+
+@functools.lru_cache(maxsize=1)
+def _sources():
+    return {p: _strip_comments(p.read_text()) for p in SRC.rglob("*.py")}
+
+
+@pytest.mark.parametrize("field", [f.name for f in
+                                   dataclasses.fields(RunConfig)])
+def test_runconfig_field_consumed_or_deprecated(field):
+    if field in DEPRECATED_RUN_FIELDS:
+        return
+    use = re.compile(rf"run\.{field}\b")           # run. / self.run. / *.run.
+    self_use = re.compile(rf"self\.{field}\b")     # RunConfig's own derived
+    for path, text in _sources().items():
+        if path == BASE:
+            # reads inside RunConfig itself (properties / __post_init__
+            # deriving other consumed values, e.g. zero_stage ->
+            # zero_enabled) count; the field declaration itself does not
+            if self_use.search(text):
+                return
+            continue
+        if use.search(text):
+            return
+    raise AssertionError(
+        f"RunConfig.{field} is declared but never consumed in src/repro — "
+        f"wire it through or add it to DEPRECATED_RUN_FIELDS")
+
+
+def test_deprecated_fields_exist():
+    names = {f.name for f in dataclasses.fields(RunConfig)}
+    unknown = DEPRECATED_RUN_FIELDS - names
+    assert not unknown, f"DEPRECATED_RUN_FIELDS lists unknown fields: " \
+                        f"{sorted(unknown)}"
+
+
+def test_runconfig_validation():
+    with pytest.raises(ValueError, match="zero_stage"):
+        RunConfig(zero_stage=2)
+    with pytest.raises(ValueError, match="param_dtype"):
+        RunConfig(param_dtype="fp8")
+    with pytest.raises(ValueError, match="compute_dtype"):
+        RunConfig(compute_dtype="int8")
+    with pytest.raises(ValueError, match="loss_scale"):
+        RunConfig(loss_scale=0.0)
+    with pytest.raises(ValueError, match="optimizer"):
+        RunConfig(optimizer="sgd")
+    assert RunConfig(zero_stage=1).zero_enabled
+    assert RunConfig(zero1=True).zero_enabled
+    assert not RunConfig().zero_enabled
+    assert RunConfig(param_dtype="bfloat16").master_weights
+    assert not RunConfig(param_dtype="float32").master_weights

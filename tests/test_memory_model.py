@@ -53,3 +53,54 @@ def test_tesseract_beats_megatron_memory():
     m_t = (a * b + b * c * d + a * c) / p
     m_m = a * b + (b * c + a * c) / p
     assert m_t < m_m
+
+
+def test_zero1_optimizer_state_term():
+    """Eq. 8 extended with the optimizer-state term (DESIGN.md §9): ZeRO-1
+    drops the per-device state bytes by the dp factor."""
+    from repro.roofline.analysis import (eq8_train_state_bytes,
+                                         optimizer_state_bytes)
+    N = 10_000
+    base = optimizer_state_bytes(N, tp=4, data=4, zero_stage=0)
+    z1 = optimizer_state_bytes(N, tp=4, data=4, zero_stage=1)
+    assert base / z1 == 4.0                      # the dp factor
+    assert optimizer_state_bytes(N, master=True) == 3 * 4 * N   # m+v+master
+    assert optimizer_state_bytes(N, master=False) == 2 * 4 * N  # m+v
+    d0 = eq8_train_state_bytes(32, 16, 24, q=2, d=2, data=4, zero_stage=0)
+    d1 = eq8_train_state_bytes(32, 16, 24, q=2, d=2, data=4, zero_stage=1)
+    # activations/weights/outputs/grads are untouched; opt drops data*depth
+    for k in ("activations", "weights", "outputs", "grads"):
+        assert d0[k] == d1[k]
+    assert d0["opt_state"] / d1["opt_state"] == 4 * 2
+    assert d1["total"] < d0["total"]
+
+
+def test_zero1_layout_bytes_match_eq8():
+    """The REAL per-device optimizer bytes (LeafLayout state shards through
+    NamedSharding, exactly what the train step allocates) drop by the dp
+    factor predicted by the memory model, up to flat-index padding."""
+    from repro.optim.zero import layout_for
+
+    a, b = 32, 24
+    spec = P("row", "col")
+    for dp in (2, 4):
+        sizes = dict(data=dp, depth=1, row=2, col=2)
+        lay = layout_for(spec, (a, b), sizes)
+        assert lay.zaxes == ("data", "depth")
+        # one [1, k] row per device vs the a*b/(q^2) replicated local shard
+        ctx = ParallelContext(mode="tesseract", data=dp, depth=1, rows=2,
+                              cols=2)
+        mesh = logical_mesh(ctx, jax.devices() * (4 * dp))
+        per_dev_zero = shard_elems(mesh, lay.state_spec(),
+                                   (lay.n_slices, lay.k))
+        per_dev_repl = shard_elems(mesh, spec, (a, b))
+        assert per_dev_zero == lay.k
+        pad_slack = lay.zn  # <= zn-1 padded elements, amortized per device
+        assert per_dev_zero <= per_dev_repl // dp + pad_slack
+        assert per_dev_repl / per_dev_zero >= dp * 0.9
+    # depth-sharded leaf (head): state only divides by data, never by the
+    # axis the leaf is sharded on
+    lay_h = layout_for(P(("depth", "row", "col"), None), (24, 4),
+                       dict(data=2, depth=2, row=1, col=1))
+    assert lay_h.zaxes == ("data",)
+    assert lay_h.zn == 2

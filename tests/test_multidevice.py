@@ -23,6 +23,7 @@ CHECKS = [
     "families_serve",
     "ring_train_parity",
     "zero1_parity",
+    "zero1_elastic",
     "moe_local_layout",
     "serve_engine",
     "engine_elastic",

@@ -119,7 +119,7 @@ def test_async_checkpoint_failure_is_reraised(tmp_path, monkeypatch):
     real_write = mgr._write
     calls = {"n": 0}
 
-    def flaky_write(step, host):
+    def flaky_write(step, host, meta=None):
         calls["n"] += 1
         raise OSError("disk full (injected)")
 
@@ -141,7 +141,7 @@ def test_async_checkpoint_failure_surfaces_on_next_save(tmp_path, monkeypatch):
     mgr = CheckpointManager(tmp_path)
     state = {"w": np.zeros(4, np.float32)}
     monkeypatch.setattr(mgr, "_write",
-                        lambda step, host: (_ for _ in ()).throw(
+                        lambda step, host, meta=None: (_ for _ in ()).throw(
                             OSError("injected")))
     mgr.save(0, state)
     with pytest.raises(RuntimeError, match="async checkpoint save"):

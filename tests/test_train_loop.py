@@ -103,7 +103,7 @@ def test_persistent_save_failure_still_trips_budget(tmp_path, monkeypatch):
     model, mesh = _model()
     monkeypatch.setattr(
         CheckpointManager, "_write",
-        lambda self, step, host: (_ for _ in ()).throw(
+        lambda self, step, host, meta=None: (_ for _ in ()).throw(
             OSError("disk full (injected)")))
     fires = {"n": 0}
 
