@@ -160,6 +160,12 @@ class RunConfig:
     # ParallelContext (the per-op dispatch lives on ctx.matmul_schedule,
     # DESIGN.md §2b; "auto" resolves per-op from the token-block size).
     matmul_schedule: str = "fused"
+    # Attention data path ("jnp" | "pallas" | "auto"); like matmul_schedule
+    # this is the config surface that launchers copy onto
+    # ParallelContext.attn_impl, where the per-op dispatch lives
+    # (DESIGN.md §10).  "auto" resolves per backend: fused kernels on TPU,
+    # jnp elsewhere; "pallas" forces the kernels (interpret mode off-TPU).
+    attn_impl: str = "jnp"
     # --- pipeline / accumulation knobs (DESIGN.md §8) ---
     # Pipeline-parallel stage count: launchers build the 5-axis
     # [pipe x data x depth x row x col] mesh when > 1 and
@@ -189,6 +195,9 @@ class RunConfig:
         if self.optimizer not in ("adamw", "lamb"):
             raise ValueError(f"optimizer must be 'adamw' or 'lamb', "
                              f"got {self.optimizer!r}")
+        if self.attn_impl not in ("jnp", "pallas", "auto"):
+            raise ValueError(f"attn_impl must be 'jnp', 'pallas' or 'auto', "
+                             f"got {self.attn_impl!r}")
 
     @property
     def zero_enabled(self) -> bool:

@@ -55,6 +55,12 @@ class ParallelContext:
     #             q >= 4 grids, fused for decode-sized ones (a single-token
     #             step can't hide the skew/shift latency — DESIGN.md §2b/§7).
     matmul_schedule: str = "fused"
+    # Attention data path (DESIGN.md §10): "jnp" = the pure-jnp streaming
+    # reference, "pallas" = the fused flash / paged-decode kernels (interpret
+    # mode off-TPU, so parity checks exercise the kernel math on CPU),
+    # "auto" = kernels on TPU, jnp elsewhere (per-backend resolution,
+    # kernels/ops.py::effective_attn_impl).
+    attn_impl: str = "jnp"
 
     # axis names (fixed; kept here so ops never hard-code strings)
     axis_data: str = AXIS_DATA
@@ -81,6 +87,10 @@ class ParallelContext:
             raise ValueError(
                 f"matmul_schedule={self.matmul_schedule!r} is a SUMMA "
                 "schedule selector; megatron1d has no [q, q] grid to ring over")
+        if self.attn_impl not in ("jnp", "pallas", "auto"):
+            raise ValueError(
+                f"attn_impl must be 'jnp', 'pallas' or 'auto', "
+                f"got {self.attn_impl!r}")
 
     # ---- derived sizes ----
     @property

@@ -1,3 +1,7 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas TPU kernel subsystem (DESIGN.md §2b / §10).  Public entry points
+# live in kernels/ops.py (interpret-mode fallback off-TPU); ref.py holds the
+# pure-jnp oracles the tests compare against.
+#   tesseract_mm / tesseract_mm_stream — SUMMA per-device contraction
+#   flash_attention                    — fused attention, custom_vjp fwd+bwd
+#   paged_attention                    — block-table paged decode attention
+#   autotune                           — (bq, bk) tile sweep + cache

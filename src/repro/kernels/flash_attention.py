@@ -1,89 +1,440 @@
-"""Pallas TPU kernel: causal flash attention (streaming softmax).
+"""Pallas TPU kernels: causal flash attention, forward AND backward.
 
-Grid: (B*H, Tq/bq).  Each program holds one query block in VMEM and walks
-the KV blocks with a fori_loop, keeping (m, l, acc) in VMEM scratch — the
-classic flash schedule adapted to the TPU memory hierarchy (HBM->VMEM block
-streaming, MXU for the two dots).  Causal skipping: the loop upper bound is
-the query block's last row index / bk + 1, so the upper-triangle blocks are
-never visited (this removes the 2x waste of the masked-dense path; §Perf).
+Forward grid: (B, Hq, Tq/bq, Tk/bk).  The KV walk is the innermost grid
+dimension so K/V stream through VMEM one (bk, D) block at a time (TPU
+executes trailing grid dims sequentially, so the (m, l, acc) VMEM scratch
+carries across the walk) — the classic flash schedule on the Pallas
+pipeline, instead of the v1 kernel's whole-[Tk, D] BlockSpec.
+
+Causal / sliding-window block skipping: the K/V index maps clamp the block
+index into [lo(i), hi(i)) — out-of-range steps re-request the same block
+(the pipeline skips the DMA when the index repeats) and `pl.when` masks
+their compute, so the upper triangle costs neither flops nor HBM traffic.
+The bounds need the q-row offset statically (``q_start``); seq-sharded
+prefill passes traced positions instead and falls back to the full walk
+with in-kernel masking.
+
+Backward is the standard two-pass flash bwd (out, logsumexp residuals):
+
+    dQ pass : grid (B, Hq, nq, nk)   — same walk/skipping as forward
+    dKV pass: grid (B, Hkv, nk, g, nq) — per KV block, walk the g query
+              heads of its GQA group and the (skip-bounded) q blocks,
+              accumulating dK/dV in VMEM scratch
+
+GQA: q-head h reads KV head h // g through the K/V index maps — grouped
+heads never materialize expanded K/V.  Non-tile-divisible Tq/Tk are
+zero-padded and masked (cols >= Tk are dead), so any shape runs.
+Fully-masked rows (e.g. a ``local_window`` that excludes every key)
+produce EXACT zero output rows, matching models/common.blockwise_attention.
 """
 from __future__ import annotations
 
 import functools
 import math
+from typing import NamedTuple, Optional
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 DEFAULT_BQ = 256
 DEFAULT_BK = 256
 NEG_INF = -1e30
+# floor for the streaming max: exp(NEG_INF - _M_FLOOR) == 0 exactly, so a
+# fully-masked block/row contributes nothing (and l stays 0 -> zero output)
+_M_FLOOR = -1e25
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, scale, causal, tk):
-    qi = pl.program_id(1)
-    q = q_ref[0].astype(jnp.float32) * scale            # [bq, D]
-    D = q.shape[-1]
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
 
-    def body(j, carry):
-        m, l, acc = carry
-        k = k_ref[0, pl.ds(j * bk, bk), :].astype(jnp.float32)   # [bk, D]
-        v = v_ref[0, pl.ds(j * bk, bk), :].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)  # [bq,bk]
-        if causal:
-            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-            cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-            s = jnp.where(rows >= cols, s, NEG_INF)
-        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-        p = jnp.exp(s - m_new[:, None])
-        corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(p, axis=-1)
-        acc_new = acc * corr[:, None] + jax.lax.dot_general(
+
+def _msafe(m):
+    return jnp.maximum(m, _M_FLOOR)
+
+
+class FlashCfg(NamedTuple):
+    """Static kernel configuration (hashable: rides custom_vjp nondiff)."""
+    causal: bool
+    window: int            # 0 = unbounded
+    scale: float
+    g: int                 # q heads per kv head (contiguous GQA)
+    bq: int
+    bk: int
+    nq: int
+    nk: int
+    q_start: Optional[int]  # static q-row offset; None -> no block skipping
+    tk_real: int           # unpadded Tk (cols >= tk_real are masked dead)
+    interpret: bool
+
+
+# ---------------------------------------------------------------------------
+# block-skip bounds (shared by the index maps and the kernel predicates)
+# ---------------------------------------------------------------------------
+
+def _kv_bounds(cfg: FlashCfg, i):
+    """[lo, hi) KV-block range for q block i (jnp scalars)."""
+    lo, hi = 0, cfg.nk
+    if cfg.q_start is not None and cfg.causal:
+        last_q = cfg.q_start + (i + 1) * cfg.bq - 1
+        hi = jnp.minimum(last_q // cfg.bk + 1, cfg.nk)
+        hi = jnp.maximum(hi, 1)
+    if cfg.q_start is not None and cfg.window > 0:
+        first_q = cfg.q_start + i * cfg.bq
+        lo = jnp.maximum((first_q - cfg.window + 1) // cfg.bk, 0)
+        lo = jnp.minimum(lo, hi - 1)
+    return lo, hi
+
+
+def _kv_index(cfg: FlashCfg, i, j):
+    lo, hi = _kv_bounds(cfg, i)
+    return jnp.minimum(lo + j, hi - 1)
+
+
+def _q_bounds(cfg: FlashCfg, kb):
+    """[lo, hi) q-block range that touches KV block kb (dKV pass)."""
+    lo, hi = 0, cfg.nq
+    if cfg.q_start is not None and cfg.causal:
+        first_kv = kb * cfg.bk
+        lo = jnp.maximum((first_kv - cfg.q_start) // cfg.bq, 0)
+        lo = jnp.minimum(lo, cfg.nq - 1)
+    if cfg.q_start is not None and cfg.window > 0:
+        last_kv = kb * cfg.bk + cfg.bk - 1
+        hi = jnp.minimum((last_kv + cfg.window - 1 - cfg.q_start) // cfg.bq
+                         + 1, cfg.nq)
+        hi = jnp.maximum(hi, lo + 1)
+    return lo, hi
+
+
+def _q_index(cfg: FlashCfg, kb, qi):
+    lo, hi = _q_bounds(cfg, kb)
+    return jnp.minimum(lo + qi, hi - 1)
+
+
+def _block_mask(cfg: FlashCfg, rows, jj):
+    """(bq, bk) validity mask for KV block jj given q-row positions."""
+    cols = jj * cfg.bk + lax.broadcasted_iota(jnp.int32, (cfg.bq, cfg.bk), 1)
+    mask = cols < cfg.tk_real
+    if cfg.causal:
+        mask &= rows[:, None] >= cols
+    if cfg.window > 0:
+        mask &= cols > rows[:, None] - cfg.window
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(qpos_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_ref, l_ref, acc_ref, *, cfg: FlashCfg):
+    i, j = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lo, hi = _kv_bounds(cfg, i)
+    jj = jnp.minimum(lo + j, hi - 1)
+
+    @pl.when(lo + j < hi)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * cfg.scale
+        rows = qpos_ref[0]
+        s = jnp.where(_block_mask(cfg, rows, jj), s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - _msafe(m_new)[:, None])          # masked entries -> 0
+        corr = jnp.exp(_msafe(m_prev) - _msafe(m_new))
+        l_ref[:, 0] = l_ref[:, 0] * corr + jnp.sum(p, axis=-1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + lax.dot_general(
             p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-        return m_new, l_new, acc_new
+        m_ref[:, 0] = m_new
 
-    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((bq,), jnp.float32)
-    a0 = jnp.zeros((bq, D), jnp.float32)
-    if causal:
-        n_kv = jnp.minimum(((qi + 1) * bq + bk - 1) // bk, tk // bk)
-    else:
-        n_kv = tk // bk
-    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, a0))
-    l = jnp.where(l == 0.0, 1.0, l)
-    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+    @pl.when(j == cfg.nk - 1)
+    def _done():
+        l = l_ref[:, 0]
+        ls = jnp.where(l == 0.0, 1.0, l)                 # masked row -> 0 out
+        o_ref[0, 0] = (acc_ref[...] / ls[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = _msafe(m_ref[:, 0]) + jnp.log(ls)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("causal", "bq", "bk", "interpret"))
-def flash_attention(q, k, v, *, causal=True, bq=DEFAULT_BQ, bk=DEFAULT_BK,
-                    interpret=False):
-    """q: [B, H, Tq, D]; k/v: [B, H, Tk, D] -> [B, H, Tq, D]."""
-    B, H, Tq, D = q.shape
-    Tk = k.shape[2]
-    bq, bk = min(bq, Tq), min(bk, Tk)
-    from .tesseract_mm import check_tiling
-    check_tiling("flash_attention", [("Tq", Tq, "bq", bq),
-                                     ("Tk", Tk, "bk", bk)])
-    scale = 1.0 / math.sqrt(D)
-    qf = q.reshape(B * H, Tq, D)
-    kf = k.reshape(B * H, Tk, D)
-    vf = v.reshape(B * H, Tk, D)
-    grid = (B * H, Tq // bq)
-    out = pl.pallas_call(
-        functools.partial(_kernel, bq=bq, bk=bk, scale=scale, causal=causal,
-                          tk=Tk),
+def _fwd_call(cfg: FlashCfg, q, k, v, q_pos):
+    B, Hq, Tq, D = q.shape
+    Dv = v.shape[-1]
+    grid = (B, Hq, cfg.nq, cfg.nk)
+    qmap = lambda b, h, i, j: (b, h, i, 0)
+    kvmap = lambda b, h, i, j: (b, h // cfg.g, _kv_index(cfg, i, j), 0)
+    out, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, cfg=cfg),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bq, D), lambda bh, i: (bh, i, 0)),
-            pl.BlockSpec((1, Tk, D), lambda bh, i: (bh, 0, 0)),
-            pl.BlockSpec((1, Tk, D), lambda bh, i: (bh, 0, 0)),
+            pl.BlockSpec((1, cfg.bq), lambda b, h, i, j: (0, i)),
+            pl.BlockSpec((1, 1, cfg.bq, D), qmap),
+            pl.BlockSpec((1, 1, cfg.bk, D), kvmap),
+            pl.BlockSpec((1, 1, cfg.bk, Dv), kvmap),
         ],
-        out_specs=pl.BlockSpec((1, bq, D), lambda bh, i: (bh, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * H, Tq, D), q.dtype),
-        interpret=interpret,
-    )(qf, kf, vf)
-    return out.reshape(B, H, Tq, D)
+        out_specs=[
+            pl.BlockSpec((1, 1, cfg.bq, Dv), qmap),
+            pl.BlockSpec((1, 1, cfg.bq), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, Tq, Dv), q.dtype),
+            jax.ShapeDtypeStruct((B, Hq, Tq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((cfg.bq, 1), jnp.float32),
+            pltpu.VMEM((cfg.bq, 1), jnp.float32),
+            pltpu.VMEM((cfg.bq, Dv), jnp.float32),
+        ],
+        interpret=cfg.interpret,
+    )(q_pos, q, k, v)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# backward: dQ pass (same walk as forward)
+# ---------------------------------------------------------------------------
+
+def _dq_kernel(qpos_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+               dq_ref, acc_ref, *, cfg: FlashCfg):
+    i, j = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lo, hi = _kv_bounds(cfg, i)
+    jj = jnp.minimum(lo + j, hi - 1)
+
+    @pl.when(lo + j < hi)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * cfg.scale
+        s = jnp.where(_block_mask(cfg, qpos_ref[0], jj), s, NEG_INF)
+        p = jnp.exp(s - lse_ref[0, 0][:, None])          # normalized probs
+        dp = lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_ref[0, 0][:, None])
+        acc_ref[...] += lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * cfg.scale
+
+    @pl.when(j == cfg.nk - 1)
+    def _done():
+        dq_ref[0, 0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# backward: dK/dV pass (grid walks KV blocks; inner dims cover the GQA
+# group's q heads and the skip-bounded q blocks)
+# ---------------------------------------------------------------------------
+
+def _dkv_kernel(qpos_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc, *, cfg: FlashCfg):
+    kb = pl.program_id(2)
+    gi, qi = pl.program_id(3), pl.program_id(4)
+
+    @pl.when((gi == 0) & (qi == 0))
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    lo, hi = _q_bounds(cfg, kb)
+    qq = jnp.minimum(lo + qi, hi - 1)
+
+    @pl.when(lo + qi < hi)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * cfg.scale
+        s = jnp.where(_block_mask(cfg, qpos_ref[0], kb), s, NEG_INF)
+        p = jnp.exp(s - lse_ref[0, 0][:, None])
+        dv_acc[...] += lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dp = lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_ref[0, 0][:, None])
+        dk_acc[...] += lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * cfg.scale
+
+    @pl.when((gi == cfg.g - 1) & (qi == cfg.nq - 1))
+    def _done():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _bwd_call(cfg: FlashCfg, q, k, v, q_pos, out, lse, dout):
+    B, Hq, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                              # [B, Hq, Tq]
+
+    qmap = lambda b, h, i, j: (b, h, i, 0)
+    kvmap = lambda b, h, i, j: (b, h // cfg.g, _kv_index(cfg, i, j), 0)
+    rowmap = lambda b, h, i, j: (b, h, i)
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, cfg=cfg),
+        grid=(B, Hq, cfg.nq, cfg.nk),
+        in_specs=[
+            pl.BlockSpec((1, cfg.bq), lambda b, h, i, j: (0, i)),
+            pl.BlockSpec((1, 1, cfg.bq, D), qmap),
+            pl.BlockSpec((1, 1, cfg.bk, D), kvmap),
+            pl.BlockSpec((1, 1, cfg.bk, Dv), kvmap),
+            pl.BlockSpec((1, 1, cfg.bq, Dv), qmap),
+            pl.BlockSpec((1, 1, cfg.bq), rowmap),
+            pl.BlockSpec((1, 1, cfg.bq), rowmap),
+        ],
+        out_specs=pl.BlockSpec((1, 1, cfg.bq, D), qmap),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((cfg.bq, D), jnp.float32)],
+        interpret=cfg.interpret,
+    )(q_pos, q, k, v, dout, lse, delta)
+
+    qmap2 = lambda b, h, kb, gi, qi: (b, h * cfg.g + gi, _q_index(cfg, kb, qi), 0)
+    rowmap2 = lambda b, h, kb, gi, qi: (b, h * cfg.g + gi, _q_index(cfg, kb, qi))
+    kvmap2 = lambda b, h, kb, gi, qi: (b, h, kb, 0)
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, cfg=cfg),
+        grid=(B, Hkv, cfg.nk, cfg.g, cfg.nq),
+        in_specs=[
+            pl.BlockSpec((1, cfg.bq),
+                         lambda b, h, kb, gi, qi: (0, _q_index(cfg, kb, qi))),
+            pl.BlockSpec((1, 1, cfg.bq, D), qmap2),
+            pl.BlockSpec((1, 1, cfg.bk, D), kvmap2),
+            pl.BlockSpec((1, 1, cfg.bk, Dv), kvmap2),
+            pl.BlockSpec((1, 1, cfg.bq, Dv), qmap2),
+            pl.BlockSpec((1, 1, cfg.bq), rowmap2),
+            pl.BlockSpec((1, 1, cfg.bq), rowmap2),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, cfg.bk, D), kvmap2),
+            pl.BlockSpec((1, 1, cfg.bk, Dv), kvmap2),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(k.shape, k.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((cfg.bk, D), jnp.float32),
+            pltpu.VMEM((cfg.bk, Dv), jnp.float32),
+        ],
+        interpret=cfg.interpret,
+    )(q_pos, q, k, v, dout, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp plumbing (operates on tile-padded operands)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash(cfg: FlashCfg, q, k, v, q_pos):
+    out, _ = _fwd_call(cfg, q, k, v, q_pos)
+    return out
+
+
+def _flash_fwd(cfg, q, k, v, q_pos):
+    out, lse = _fwd_call(cfg, q, k, v, q_pos)
+    return out, (q, k, v, q_pos, out, lse)
+
+
+def _flash_bwd(cfg, res, dout):
+    q, k, v, q_pos, out, lse = res
+    dq, dk, dv = _bwd_call(cfg, q, k, v, q_pos, out, lse, dout)
+    return dq, dk, dv, np.zeros(q_pos.shape, jax.dtypes.float0)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal=True, local_window: int = 0,
+                    q_pos=None, q_start: Optional[int] = 0,
+                    softmax_scale=None, bq=None, bk=None, interpret=False):
+    """Fused attention with flash fwd + two-pass bwd.
+
+    q: [B, Hq, Tq, D]; k: [B, Hkv, Tk, D]; v: [B, Hkv, Tk, Dv] with
+    Hq = g * Hkv (contiguous GQA groups) -> [B, Hq, Tq, Dv].
+
+    ``q_pos`` ([Tq] int32 global positions, default q_start + arange) drives
+    the causal / local_window masks; ``q_start`` is the STATIC row offset
+    that enables block skipping — pass None when positions are traced
+    (seq-sharded prefill) to fall back to the full masked walk.  KV rows are
+    assumed at positions 0..Tk-1.  Non-divisible Tq/Tk are padded+masked.
+
+    The tile lookup runs OUTSIDE the jitted core (which keys on the
+    resolved bq/bk), so a later autotune sweep takes effect on the next
+    call instead of being pinned by an old trace.
+    """
+    Tq, Tk, D = q.shape[2], k.shape[2], q.shape[3]
+    if bq is None or bk is None:
+        from .autotune import flash_tiles
+        tq_, tk_ = flash_tiles(Tq, Tk, D, causal=causal)
+        bq = bq or tq_
+        bk = bk or tk_
+    return _flash_jit(q, k, v, q_pos, causal=causal,
+                      local_window=local_window, q_start=q_start,
+                      softmax_scale=softmax_scale, bq=min(bq, Tq),
+                      bk=min(bk, Tk), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "local_window", "q_start", "softmax_scale", "bq", "bk",
+    "interpret"))
+def _flash_jit(q, k, v, q_pos, *, causal, local_window, q_start,
+               softmax_scale, bq, bk, interpret):
+    B, Hq, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    if Hq % Hkv:
+        raise ValueError(f"flash_attention: Hq={Hq} not a multiple of "
+                         f"Hkv={Hkv}")
+    scale = (softmax_scale if softmax_scale is not None
+             else 1.0 / math.sqrt(D))
+    Tqp, Tkp = _round_up(Tq, bq), _round_up(Tk, bk)
+    if q_pos is None:
+        q_pos = (q_start or 0) + jnp.arange(Tqp, dtype=jnp.int32)
+    else:
+        q_pos = q_pos.astype(jnp.int32)
+        if Tqp != Tq:
+            # padded rows continue the position sequence (outputs discarded;
+            # monotone positions keep the skip bounds consistent)
+            q_pos = jnp.concatenate(
+                [q_pos, q_pos[-1] + 1 + jnp.arange(Tqp - Tq, dtype=jnp.int32)])
+    pad4 = lambda x, t: (x if x.shape[2] == t else
+                         jnp.pad(x, ((0, 0), (0, 0), (0, t - x.shape[2]),
+                                     (0, 0))))
+    qp = pad4(q, Tqp)
+    kp, vp = pad4(k, Tkp), pad4(v, Tkp)
+    cfg = FlashCfg(causal=bool(causal), window=int(local_window),
+                   scale=float(scale), g=Hq // Hkv, bq=bq, bk=bk,
+                   nq=Tqp // bq, nk=Tkp // bk,
+                   q_start=(None if q_start is None else int(q_start)),
+                   tk_real=Tk, interpret=bool(interpret))
+    out = _flash(cfg, qp, kp, vp, q_pos[None])
+    return out[:, :, :Tq] if Tqp != Tq else out

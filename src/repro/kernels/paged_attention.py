@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: single-step decode attention over a paged KV pool.
+
+The jnp serve path (models/common.py::paged_gather) materializes every
+request's ENTIRE block-table view — [B, max_blocks * bs, Hkv, D] per layer
+per step — before one softmax over it.  This kernel walks the block table
+directly: grid (B, Hq, max_blocks) with the physical page resolved by a
+scalar-prefetched table lookup in the K/V index maps, so pages stream
+HBM -> VMEM one (bs, D) block at a time and nothing is ever gathered.
+
+Per-request page skipping: pages beyond ``pos[b] // bs`` (and, under a
+sliding window, before the window's first page) clamp to the last/first
+live page in the index map — the pipeline skips the repeated DMA — and
+`pl.when` masks their compute.  Retired slots (whole table pointed at the
+group's scratch block, pos = 0) read exactly one page, like the jnp path.
+
+GQA rides a scalar-prefetched ``kv_map`` ([Hq] -> kv head), which also
+covers the non-uniform replicated-KV maps (smollm head padding) that the
+flash kernel handles by pre-expansion.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_M_FLOOR = -1e25
+
+
+class PagedCfg(NamedTuple):
+    bs: int
+    nb: int
+    window: int
+    scale: float
+    interpret: bool
+
+
+def _page_bounds(cfg: PagedCfg, pos_ref, b):
+    """[lo, hi) live-page range for request b (jnp scalars)."""
+    hi = pos_ref[b] // cfg.bs + 1                  # pos is inclusive
+    lo = 0
+    if cfg.window > 0:
+        lo = jnp.maximum(pos_ref[b] - cfg.window + 1, 0) // cfg.bs
+        lo = jnp.minimum(lo, hi - 1)
+    return lo, hi
+
+
+def _kernel(table_ref, pos_ref, kvh_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, cfg: PagedCfg):
+    b, j = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lo, hi = _page_bounds(cfg, pos_ref, b)
+    jj = jnp.minimum(lo + j, hi - 1)
+
+    @pl.when(lo + j < hi)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                       # [1, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)              # [bs, D]
+        s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * cfg.scale
+        ppos = jj * cfg.bs + lax.broadcasted_iota(jnp.int32, (1, cfg.bs), 1)
+        mask = ppos <= pos_ref[b]
+        if cfg.window > 0:
+            mask &= ppos > pos_ref[b] - cfg.window
+        s = jnp.where(mask, s, NEG_INF)                        # [1, bs]
+        m_prev = m_ref[0, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.exp(s - jnp.maximum(m_new, _M_FLOOR))
+        corr = jnp.exp(jnp.maximum(m_prev, _M_FLOOR)
+                       - jnp.maximum(m_new, _M_FLOOR))
+        l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)              # [bs, Dv]
+        acc_ref[...] = acc_ref[...] * corr + lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[0, 0] = m_new
+
+    @pl.when(j == cfg.nb - 1)
+    def _done():
+        l = l_ref[0, 0]
+        o_ref[0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("local_window", "softmax_scale",
+                                             "interpret"))
+def paged_attention(q, pool_k, pool_v, table, pos, kv_map, *,
+                    local_window: int = 0, softmax_scale=None,
+                    interpret=False):
+    """One decode step against a paged pool, walking the block table.
+
+    q: [B, Hq, D]; pool_k/pool_v: [P_loc, bs, Hkv, D/Dv]; table: [B, nb]
+    LOCAL physical block ids; pos: [B] per-request current position (its
+    K/V already written — paged_update-then-attend order); kv_map: [Hq]
+    q-head -> kv-head.  Returns [B, Hq, Dv].
+    """
+    B, Hq, D = q.shape
+    bs, Hkv = pool_k.shape[1], pool_k.shape[2]
+    Dv = pool_v.shape[-1]
+    nb = table.shape[1]
+    scale = (softmax_scale if softmax_scale is not None
+             else 1.0 / math.sqrt(D))
+    cfg = PagedCfg(bs=bs, nb=nb, window=int(local_window),
+                   scale=float(scale), interpret=bool(interpret))
+    kvpage = lambda b, h, j, tr, pr, hr: (
+        tr[b, jnp.minimum(_page_bounds(cfg, pr, b)[0] + j,
+                          _page_bounds(cfg, pr, b)[1] - 1)], 0, hr[h], 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Hq, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h, j, tr, pr, hr: (b, h, 0)),
+            pl.BlockSpec((1, bs, 1, D), kvpage),
+            pl.BlockSpec((1, bs, 1, Dv), kvpage),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Dv),
+                               lambda b, h, j, tr, pr, hr: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, Dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, cfg=cfg),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Dv), q.dtype),
+        interpret=cfg.interpret,
+    )(table.astype(jnp.int32), pos.astype(jnp.int32),
+      kv_map.astype(jnp.int32), q, pool_k, pool_v)

@@ -43,6 +43,11 @@ def main():
     ap.add_argument("--depth", type=int, default=1)
     ap.add_argument("--matmul-schedule", default="fused",
                     choices=("fused", "ring", "auto"))
+    ap.add_argument("--attn-impl", default="auto",
+                    choices=("jnp", "pallas", "auto"),
+                    help="attention data path: block-table paged decode "
+                         "kernel + flash prefill, the jnp gather reference, "
+                         "or per-backend auto (DESIGN.md §10)")
     ap.add_argument("--replan-to", type=int, default=0,
                     help="simulate an elastic device-count change after 2 "
                          "steps (rebuild mesh + reshard live KV blocks)")
@@ -58,15 +63,16 @@ def main():
     from ..serve import EngineConfig, InferenceEngine, SamplingParams
 
     arch = get_reduced(args.arch) if args.reduced else get_arch(args.arch)
-    sched = args.matmul_schedule
+    run = RunConfig(param_dtype="float32", compute_dtype="float32",
+                    loss_chunk=64, q_chunk=32, kv_chunk=32,
+                    matmul_schedule=args.matmul_schedule,
+                    attn_impl=args.attn_impl)
     # megatron1d + ring/auto raises in ParallelContext, same as launch.train
     ctx = ParallelContext(mode=args.mode, data=args.data, depth=args.depth,
                           rows=args.rows, cols=args.cols,
-                          matmul_schedule=sched)
+                          matmul_schedule=run.matmul_schedule,
+                          attn_impl=run.attn_impl)
     mesh = logical_mesh(ctx)
-    run = RunConfig(param_dtype="float32", compute_dtype="float32",
-                    loss_chunk=64, q_chunk=32, kv_chunk=32,
-                    matmul_schedule=sched)
     model = build_model(arch.model, ctx, run)
     params = model.init(jax.random.PRNGKey(0))
 
@@ -102,6 +108,7 @@ def main():
           f"preemptions={s.preemptions} tokens={s.tokens} "
           f"tokens/s={s.tokens_per_s():.1f} "
           f"p50={lat['p50_ms']:.1f}ms p95={lat['p95_ms']:.1f}ms "
+          f"attn_impl={engine.attn_impl} "
           f"(CPU wall-clock: indicative only)")
 
 

@@ -45,6 +45,10 @@ def main():
                          "grads are unscaled before clip/optimizer)")
     ap.add_argument("--matmul-schedule", default="fused",
                     choices=("fused", "ring", "auto"))
+    ap.add_argument("--attn-impl", default="auto",
+                    choices=("jnp", "pallas", "auto"),
+                    help="attention data path: fused Pallas kernels, the "
+                         "jnp reference, or per-backend auto (DESIGN.md §10)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--pipe", type=int, default=1,
                     help="pipeline stages OUTSIDE the TP group (1F1B)")
@@ -66,18 +70,22 @@ def main():
     from ..runtime.train_loop import train
 
     arch = get_reduced(args.arch) if args.reduced else get_arch(args.arch)
-    ctx = ParallelContext(mode=args.mode, data=args.data, depth=args.depth,
-                          rows=args.rows, cols=args.cols,
-                          matmul_schedule=args.matmul_schedule)
     run = RunConfig(param_dtype=args.param_dtype,
                     compute_dtype=args.compute_dtype,
                     loss_chunk=128, q_chunk=64, kv_chunk=64, lr=args.lr,
                     zero1=args.zero1, zero_stage=args.zero_stage,
                     loss_scale=args.loss_scale,
                     matmul_schedule=args.matmul_schedule,
+                    attn_impl=args.attn_impl,
                     pipe_stages=args.pipe,
                     pipeline_microbatches=args.microbatches,
                     accum_steps=args.accum)
+    # RunConfig is the config surface; the per-op dispatch for both knobs
+    # lives on ParallelContext (DESIGN.md §2b / §10)
+    ctx = ParallelContext(mode=args.mode, data=args.data, depth=args.depth,
+                          rows=args.rows, cols=args.cols,
+                          matmul_schedule=run.matmul_schedule,
+                          attn_impl=run.attn_impl)
     mesh = pipeline_mesh(ctx, run.pipe_stages)
     model = build_model(arch.model, ctx, run)
     shape = ShapeSpec("train", seq_len=args.seq, global_batch=args.batch,

@@ -84,10 +84,47 @@ def apply_rope(x, positions, theta: float = 1e4):
 
 
 # ---------------------------------------------------------------------------
+# Attention dispatch (DESIGN.md §10): every model-side attention call goes
+# through one of the dispatchers below, which route to the fused Pallas
+# kernels (kernels/flash_attention.py, kernels/paged_attention.py) or the
+# pure-jnp reference paths depending on the resolved ``attn_impl``.
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, *, q_pos, kv_pos, causal: bool = True,
+              local_window: int = 0, q_chunk: int = 512,
+              kv_chunk: int = 512, softmax_scale=None, impl: str = "jnp",
+              q_start=None):
+    """Training/prefill attention in the model layout [B, T, H, D].
+
+    Dispatches on ``impl`` (ParallelContext.attn_impl): "pallas" runs the
+    fused flash kernel with the causal/window masks driven by ``q_pos``
+    (``q_start`` is the static q-row offset enabling block skipping; None
+    for traced seq-sharded positions).  The kernel contract assumes KV rows
+    sit at positions 0..Tk-1, which every call site satisfies (kv_pos is
+    the gathered full-sequence arange; the non-causal cross-attention
+    sites pass all-zero positions and no window, where positions are
+    inert).  GQA is contiguous Hq = g * Hkv in both paths.
+    """
+    from ..kernels.ops import effective_attn_impl, flash_attention_op
+    if effective_attn_impl(impl) == "pallas":
+        out = flash_attention_op(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal,
+            local_window=local_window,
+            q_pos=None if q_start is not None else q_pos,
+            q_start=q_start, softmax_scale=softmax_scale)
+        return out.transpose(0, 2, 1, 3)
+    return blockwise_attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                               causal=causal, local_window=local_window,
+                               q_chunk=q_chunk, kv_chunk=kv_chunk,
+                               softmax_scale=softmax_scale)
+
+
+# ---------------------------------------------------------------------------
 # Streaming attention (pure-jnp flash): O(block) memory, numerically stable.
 # v1 computes every (q-block, kv-block) pair and masks — the causal upper
-# triangle is wasted compute; the Pallas kernel and the triangular-scan
-# hillclimb (§Perf) remove it.
+# triangle is wasted compute; the Pallas kernel removes it (and is wired as
+# the default TPU data path via attn_impl, DESIGN.md §10).
 # ---------------------------------------------------------------------------
 
 def blockwise_attention(q, k, v, *, q_pos, kv_pos, causal: bool = True,
@@ -159,22 +196,75 @@ def blockwise_attention(q, k, v, *, q_pos, kv_pos, causal: bool = True,
     return out.astype(q.dtype)
 
 
+def decode_pos_mask(cur_pos, S: int, local_window: int = 0):
+    """[B, 1, S] validity mask for single-step decode attention.
+
+    Position-only (layer-independent), so callers hoist it OUT of the layer
+    scan and pass it to every block's decode_attention instead of each
+    layer recomputing the arange/compare chain (jnp fallback path)."""
+    cur_pos = jnp.asarray(cur_pos)
+    if cur_pos.ndim == 0:
+        cur_pos = cur_pos[None]
+    cur = cur_pos[:, None, None]                         # [B, 1, 1]
+    pos = jnp.arange(S)
+    mask = pos[None, None, :] <= cur
+    if local_window > 0:
+        mask &= pos[None, None, :] > (cur - local_window)
+    return mask
+
+
+def _decode_bs(S: int) -> int:
+    """Page size used to view a dense cache as a pool (pallas decode)."""
+    bs = min(128, S)
+    while S % bs:
+        bs -= 1
+    return bs
+
+
+def _paged_kernel(q, pool_k, pool_v, table, pos, kv_map, *, local_window,
+                  softmax_scale):
+    """Shared pallas-decode dispatch: default the GQA map to the contiguous
+    grouping and run the block-table kernel (used by decode_attention's
+    pool view and paged_attention)."""
+    from ..kernels.ops import paged_attention_op
+    Hq = q.shape[1]
+    if kv_map is None:
+        kv_map = jnp.arange(Hq, dtype=jnp.int32) // (Hq // pool_k.shape[2])
+    return paged_attention_op(q, pool_k, pool_v, table, pos, kv_map,
+                              local_window=local_window,
+                              softmax_scale=softmax_scale)
+
+
 def decode_attention(q, k_cache, v_cache, *, cur_pos, kv_map=None,
-                     local_window: int = 0, softmax_scale=None):
+                     local_window: int = 0, softmax_scale=None,
+                     pos_mask=None, impl: str = "jnp"):
     """Single-step attention against a cache.
 
     q: [B, Hq, D]; k_cache/v_cache: [B, S, Hkv, D]; cur_pos: scalar int —
     number of valid cache entries (new token's position is cur_pos) — or a
     [B] vector of per-request positions (continuous batching mixes lengths).
     kv_map: optional [Hq] map from q-head to kv-head (non-uniform GQA);
-    default uses Hq = g*Hkv contiguous grouping.
+    default uses Hq = g*Hkv contiguous grouping.  ``pos_mask`` is the
+    hoisted decode_pos_mask(cur_pos, S, local_window) (jnp path only).
+    With impl="pallas" the dense cache is viewed as a contiguous page pool
+    and the block-table decode kernel runs on it directly.
     """
+    from ..kernels.ops import effective_attn_impl
     B, Hq, D = q.shape
     S, Hkv = k_cache.shape[1], k_cache.shape[2]
     Dv = v_cache.shape[-1]
+    if effective_attn_impl(impl) == "pallas":
+        bs = _decode_bs(S)
+        nb = S // bs
+        pool_k = k_cache.reshape(B * nb, bs, Hkv, D)
+        pool_v = v_cache.reshape(B * nb, bs, Hkv, Dv)
+        table = jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
+        pos = (jnp.broadcast_to(cur_pos, (B,)) if jnp.ndim(cur_pos) == 0
+               else cur_pos)
+        return _paged_kernel(q, pool_k, pool_v, table, pos, kv_map,
+                             local_window=local_window,
+                             softmax_scale=softmax_scale)
     scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
-    if jnp.ndim(cur_pos) == 1:
-        cur_pos = cur_pos[:, None, None]                 # [B, 1, 1]
     if kv_map is not None:
         kc = jnp.take(k_cache, kv_map, axis=2)           # [B, S, Hq, D]
         vc = jnp.take(v_cache, kv_map, axis=2)
@@ -187,11 +277,9 @@ def decode_attention(q, k_cache, v_cache, *, cur_pos, kv_map=None,
                        preferred_element_type=jnp.float32) * scale
         s = s.reshape(B, Hq, S)
         vc = None
-    pos = jnp.arange(S)
-    mask = pos[None, None, :] <= cur_pos
-    if local_window > 0:
-        mask &= pos[None, None, :] > (cur_pos - local_window)
-    s = jnp.where(mask, s, -jnp.inf)
+    if pos_mask is None:
+        pos_mask = decode_pos_mask(cur_pos, S, local_window)
+    s = jnp.where(pos_mask, s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     if kv_map is not None:
         out = jnp.einsum("bhs,bshd->bhd", p.astype(vc.dtype), vc,
@@ -225,43 +313,78 @@ def cache_update(cache, new_k, new_v, cur_pos):
 # masked by their length, so the math stays fixed-shape across steps.
 # ---------------------------------------------------------------------------
 
-def paged_gather(pool_k, pool_v, table):
+def paged_gather(pool_k, pool_v, table, kv_map=None):
     """Gather a request-major contiguous KV view from the block pool.
 
     pool_k/pool_v: [P_loc, bs, Hkv, D]; table: [B, nb] local block ids.
     Returns k, v: [B, nb*bs, Hkv, D] in logical position order.
+
+    ``kv_map`` ([Hq] q-head -> kv-head) folds the GQA head expansion into
+    the SAME gather (one [B, pool, Hq, D] materialization) instead of the
+    old gather-then-take chain that built [B, pool, Hkv, D] first and a
+    second [B, pool, Hq, D] on top of it.
     """
     B, nb = table.shape
     bs = pool_k.shape[1]
-    k = jnp.take(pool_k, table.reshape(-1), axis=0)
-    v = jnp.take(pool_v, table.reshape(-1), axis=0)
-    sh = (B, nb * bs) + pool_k.shape[2:]
-    return k.reshape(sh), v.reshape(sh)
+    idx = table.reshape(-1)
+    if kv_map is None:
+        k = jnp.take(pool_k, idx, axis=0)
+        v = jnp.take(pool_v, idx, axis=0)
+        sh = (B, nb * bs) + pool_k.shape[2:]
+        return k.reshape(sh), v.reshape(sh)
+    Hq = kv_map.shape[0]
+    # one combined (page, head) gather: [B*nb, Hq, bs, D] -> [B, pool, Hq, D]
+    k = pool_k[idx[:, None], :, kv_map[None, :], :]
+    v = pool_v[idx[:, None], :, kv_map[None, :], :]
+    sh = (B, nb * bs, Hq, pool_k.shape[-1])
+    return (k.swapaxes(1, 2).reshape(sh),
+            v.swapaxes(1, 2).reshape((sh[:3]) + (pool_v.shape[-1],)))
 
 
-def paged_update(pool, table, pos, new_k, new_v):
+def paged_step_indices(table, pos, bs: int):
+    """(blk, off) scatter coordinates of each request's current position.
+
+    Position-only, so the serve step computes them ONCE and reuses them for
+    every layer's paged_update inside the scan instead of re-deriving the
+    take_along_axis per layer."""
+    blk = jnp.take_along_axis(table, (pos // bs)[:, None], axis=1)[:, 0]
+    return blk, pos % bs
+
+
+def paged_update(pool, table, pos, new_k, new_v, idx=None):
     """Scatter one step's K/V into the pool at each request's position.
 
     pool: {"k","v": [P_loc, bs, Hkv, D]}; table: [B, nb]; pos: [B] target
     position (count of already-cached tokens); new_k/new_v: [B, 1, Hkv, D].
+    ``idx`` is the hoisted paged_step_indices(table, pos, bs).
     """
     bs = pool["k"].shape[1]
-    blk = jnp.take_along_axis(table, (pos // bs)[:, None], axis=1)[:, 0]
-    off = pos % bs
+    blk, off = idx if idx is not None else paged_step_indices(table, pos, bs)
     k = pool["k"].at[blk, off].set(new_k[:, 0].astype(pool["k"].dtype))
     v = pool["v"].at[blk, off].set(new_v[:, 0].astype(pool["v"].dtype))
     return dict(pool, k=k, v=v)
 
 
 def paged_attention(q, pool_k, pool_v, table, pos, *, kv_map=None,
-                    local_window: int = 0, softmax_scale=None):
-    """Single-step attention against a paged pool (gather + decode_attention).
+                    local_window: int = 0, softmax_scale=None,
+                    pos_mask=None, impl: str = "jnp"):
+    """Single-step attention against a paged pool.
 
     q: [B, Hq, D]; pos: [B] per-request current position (the incoming
     token's position; its K/V must already be in the pool — call
     paged_update first, matching the dense cache_update-then-attend order).
+
+    impl="pallas" walks the block table inside the decode kernel — no
+    paged_gather materialization at all (kernels/paged_attention.py).  The
+    jnp fallback gathers once (kv_map folded in) and reuses the hoisted
+    ``pos_mask`` ([B, 1, nb*bs]) across the layer scan.
     """
-    k, v = paged_gather(pool_k, pool_v, table)
-    return decode_attention(q, k, v, cur_pos=pos, kv_map=kv_map,
+    from ..kernels.ops import effective_attn_impl
+    if effective_attn_impl(impl) == "pallas":
+        return _paged_kernel(q, pool_k, pool_v, table, pos, kv_map,
+                             local_window=local_window,
+                             softmax_scale=softmax_scale)
+    k, v = paged_gather(pool_k, pool_v, table, kv_map)
+    return decode_attention(q, k, v, cur_pos=pos, kv_map=None,
                             local_window=local_window,
-                            softmax_scale=softmax_scale)
+                            softmax_scale=softmax_scale, pos_mask=pos_mask)

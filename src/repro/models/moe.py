@@ -314,10 +314,13 @@ class MoELM(DenseLM):
         k = jnp.concatenate(
             [k_nope, jnp.broadcast_to(kr_f, k_nope.shape[:3] + (cfg.qk_rope_dim,))],
             axis=-1)
-        out = cm.blockwise_attention(
+        q_start = (0 if (not ops.plan.seq_sharded
+                         or ops.mode_family == "megatron") else None)
+        out = cm.attention(
             q, k, v, q_pos=qpos, kv_pos=full_kv_pos, causal=True,
             q_chunk=self.run.q_chunk, kv_chunk=self.run.kv_chunk,
-            softmax_scale=1.0 / math.sqrt(self.qk_dim))
+            softmax_scale=1.0 / math.sqrt(self.qk_dim),
+            impl=self.ctx.attn_impl, q_start=q_start)
         return self._attn_out_mla(p, out, ops), (ckv, kr)
 
     def _attn_out_mla(self, p, out, ops):

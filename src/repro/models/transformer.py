@@ -219,10 +219,16 @@ class DenseLM:
             kv_map = self._kv_map(ops)
             kf = jnp.take(kf, kv_map, axis=2)
             vf = jnp.take(vf, kv_map, axis=2)
-        out = cm.blockwise_attention(
+        # static q-row offset (enables the flash kernel's causal block
+        # skipping) except on the seq-sharded tesseract prefill, whose
+        # positions carry a traced shard offset
+        q_start = (0 if (not ops.plan.seq_sharded
+                         or ops.mode_family == "megatron") else None)
+        out = cm.attention(
             q, kf, vf, q_pos=qpos, kv_pos=full_kv_pos,
             causal=True, local_window=self.cfg.local_window,
-            q_chunk=run.q_chunk, kv_chunk=run.kv_chunk)
+            q_chunk=run.q_chunk, kv_chunk=run.kv_chunk,
+            impl=self.ctx.attn_impl, q_start=q_start)
         x = x + self._attn_out(p, out, ops, self._head_mask(ops))
         kv = (ops.kv_local_slice(k, axis=1).astype(self.cdt),
               ops.kv_local_slice(v, axis=1).astype(self.cdt))
@@ -342,18 +348,22 @@ class DenseLM:
         return ({"k": Sds(shp, self.cdt), "v": Sds(shp, self.cdt)},
                 {"k": sp, "v": sp})
 
-    def _block_decode_paged(self, p, x, pool_l, table, pos, ops):
-        """Paged analogue of _block_decode: gather K/V pages through the
+    def _block_decode_paged(self, p, x, pool_l, table, pos, ops, *,
+                            idx=None, pos_mask=None, kv_map=None):
+        """Paged analogue of _block_decode: walk K/V pages through the
         block table, scatter the new token's K/V at each request's own
-        position (mixed lengths in one fixed-shape batch)."""
+        position (mixed lengths in one fixed-shape batch).  ``idx`` /
+        ``pos_mask`` / ``kv_map`` are position-only values hoisted out of
+        the layer scan by decode_paged."""
         cfg = self.cfg
         h = self._norm(ops, x, p["ln1"], p.get("ln1b"))
         q, k, v = self._qkv(p, h, ops, pos[:, None])
-        pool_l = cm.paged_update(pool_l, table, pos, k, v)
-        kv_map = None if self.kv_shard else self._kv_map(ops)
+        pool_l = cm.paged_update(pool_l, table, pos, k, v, idx=idx)
         out = cm.paged_attention(q[:, 0], pool_l["k"], pool_l["v"], table,
                                  pos, kv_map=kv_map,
-                                 local_window=cfg.local_window)
+                                 local_window=cfg.local_window,
+                                 pos_mask=pos_mask,
+                                 impl=self.ctx.attn_impl)
         x = x + self._attn_out(p, out[:, None], ops, self._head_mask(ops))
         h2 = self._norm(ops, x, p["ln2"], p.get("ln2b"))
         x = x + self._mlp(p, h2, ops)
@@ -369,11 +379,19 @@ class DenseLM:
         cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt)
                                       if a.dtype == self.pdt and a.ndim > 1
                                       else a, t)
+        # hoisted position-only work, shared by every layer in the scan
+        bs = pool["k"].shape[2]
+        idx = cm.paged_step_indices(table, pos, bs)
+        pos_mask = cm.decode_pos_mask(pos, table.shape[1] * bs,
+                                      self.cfg.local_window)
+        kv_map = None if self.kv_shard else self._kv_map(ops)
 
         def body(xx, xs):
             bp, pl = xs
             y, pl2 = self._block_decode_paged(cast(bp), xx, pl, table, pos,
-                                              ops)
+                                              ops, idx=idx,
+                                              pos_mask=pos_mask,
+                                              kv_map=kv_map)
             return y, pl2
 
         x, new_pool = lax.scan(body, x, (params["blocks"], pool))
@@ -445,22 +463,27 @@ class DenseLM:
                               vocab_real=self.cfg.vocab_size)
         return ids, {"k": kc, "v": vc}
 
-    def _block_decode_attnonly(self, p, x, cache_l, pos, ops):
+    def _block_decode_attnonly(self, p, x, cache_l, pos, ops, *,
+                               pos_mask=None, kv_map=None):
         cfg = self.cfg
         h = self._norm(ops, x, p["ln1"], p.get("ln1b"))
         positions = jnp.full((1,), pos, jnp.int32)
         q, k, v = self._qkv(p, h, ops, positions)
         cache_l = cm.cache_update(cache_l, k, v, pos)
-        kv_map = None if self.kv_shard else self._kv_map(ops)
+        if kv_map is None and not self.kv_shard:
+            kv_map = self._kv_map(ops)
         out = cm.decode_attention(q[:, 0], cache_l["k"], cache_l["v"],
                                   cur_pos=pos, kv_map=kv_map,
-                                  local_window=cfg.local_window)
+                                  local_window=cfg.local_window,
+                                  pos_mask=pos_mask,
+                                  impl=self.ctx.attn_impl)
         out = out[:, None]                      # [B, 1, H, D]
         x = x + self._attn_out(p, out, ops, self._head_mask(ops))
         return x, cache_l
 
-    def _block_decode(self, p, x, cache_l, pos, ops):
-        x, cache_l = self._block_decode_attnonly(p, x, cache_l, pos, ops)
+    def _block_decode(self, p, x, cache_l, pos, ops, **hoisted):
+        x, cache_l = self._block_decode_attnonly(p, x, cache_l, pos, ops,
+                                                 **hoisted)
         h2 = self._norm(ops, x, p["ln2"], p.get("ln2b"))
         x = x + self._mlp(p, h2, ops)
         return x, cache_l
@@ -471,10 +494,14 @@ class DenseLM:
         cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt)
                                       if a.dtype == self.pdt and a.ndim > 1
                                       else a, t)
+        pos_mask = cm.decode_pos_mask(pos, cache["k"].shape[2],
+                                      self.cfg.local_window)
+        kv_map = None if self.kv_shard else self._kv_map(ops)
 
         def body(xx, xs):
             bp, cl = xs
-            y, cl2 = self._block_decode(cast(bp), xx, cl, pos, ops)
+            y, cl2 = self._block_decode(cast(bp), xx, cl, pos, ops,
+                                        pos_mask=pos_mask, kv_map=kv_map)
             return y, cl2
 
         x, new_cache = lax.scan(body, x, (params["blocks"], cache))

@@ -143,10 +143,11 @@ class VisionLM(DenseLM):
             k = jnp.take(k, kv_map, axis=2)
             v = jnp.take(v, kv_map, axis=2)
         Tv = k.shape[1]
-        out = cm.blockwise_attention(
+        out = cm.attention(
             q, k, v, q_pos=jnp.zeros((T,), jnp.int32),
             kv_pos=jnp.zeros((Tv,), jnp.int32), causal=False,
-            q_chunk=self.run.q_chunk, kv_chunk=self.run.kv_chunk)
+            q_chunk=self.run.q_chunk, kv_chunk=self.run.kv_chunk,
+            impl=self.ctx.attn_impl, q_start=0)
         gated = jnp.tanh(p["attn_gate"]) * self._attn_out(
             p, out, ops, self._head_mask(ops))
         x = x + gated
@@ -262,7 +263,8 @@ class VisionLM(DenseLM):
         q = ops.linear_up(h, p["wq"]).reshape(B, 1, self._heads_loc(ops), D)
         kv_map = None if self.kv_shard else self._kv_map(ops)
         out = cm.decode_attention(q[:, 0], ck, cv,
-                                  cur_pos=ck.shape[1] - 1, kv_map=kv_map)
+                                  cur_pos=ck.shape[1] - 1, kv_map=kv_map,
+                                  impl=self.ctx.attn_impl)
         out = out[:, None]
         x = x + jnp.tanh(p["attn_gate"]) * self._attn_out(
             p, out, ops, self._head_mask(ops))

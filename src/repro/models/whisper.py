@@ -140,9 +140,10 @@ class WhisperModel(DenseLM):
             k = jnp.take(k, kv_map, axis=2)
             v = jnp.take(v, kv_map, axis=2)
         pos = jnp.zeros((T,), jnp.int32)
-        out = cm.blockwise_attention(q, k, v, q_pos=pos, kv_pos=pos,
-                                     causal=False, q_chunk=self.run.q_chunk,
-                                     kv_chunk=self.run.kv_chunk)
+        out = cm.attention(q, k, v, q_pos=pos, kv_pos=pos,
+                           causal=False, q_chunk=self.run.q_chunk,
+                           kv_chunk=self.run.kv_chunk,
+                           impl=self.ctx.attn_impl, q_start=0)
         x = x + self._attn_out(p, out, ops, self._head_mask(ops))
         h2 = self._norm(ops, x, p["ln2"], p.get("ln2b"))
         return x + self._mlp(p, h2, ops)
@@ -187,10 +188,11 @@ class WhisperModel(DenseLM):
             kv_map = self._kv_map(ops)
             k = jnp.take(k, kv_map, axis=2)
             v = jnp.take(v, kv_map, axis=2)
-        out = cm.blockwise_attention(
+        out = cm.attention(
             q, k, v, q_pos=jnp.zeros((T,), jnp.int32),
             kv_pos=jnp.zeros((Tv,), jnp.int32), causal=False,
-            q_chunk=self.run.q_chunk, kv_chunk=self.run.kv_chunk)
+            q_chunk=self.run.q_chunk, kv_chunk=self.run.kv_chunk,
+            impl=self.ctx.attn_impl, q_start=0)
         return x + self._attn_out(p, out, ops, self._head_mask(ops)), (k, v)
 
     def _dec_block(self, p, x, memory, ops, full_kv_pos):
@@ -285,7 +287,7 @@ class WhisperModel(DenseLM):
         q = q.reshape(B, self._heads_loc(ops), D)
         kv_map = None if self.kv_shard else self._kv_map(ops)
         out = cm.decode_attention(q, ck, cv, cur_pos=ck.shape[1] - 1,
-                                  kv_map=kv_map)
+                                  kv_map=kv_map, impl=self.ctx.attn_impl)
         return x + self._attn_out(p, out[:, None], ops, self._head_mask(ops))
 
     def decode(self, params, cache, ids, pos, ops):

@@ -134,6 +134,57 @@ def eq8_train_state_bytes(a: int, b: int, c: int, *, q: int, d: int,
             "total": act + weight + out + grad + opt}
 
 
+def flash_attention_traffic(B: int, H: int, Tq: int, Tk: int, D: int, *,
+                            bq: int = 256, bk: int = 256,
+                            causal: bool = True, itemsize: int = 2) -> dict:
+    """Per-device HBM bytes of one attention forward (DESIGN.md §10).
+
+    ``materialized``: the unfused reference writes the [Tq, Tk] score matrix
+    and reads it back twice (softmax pass + PV contraction) on top of the
+    q/k/v/out streams.  ``flash``: q and out move once; each of the nq query
+    blocks re-streams K and V (the causal walk halves that), and the scores
+    never leave VMEM.  The ratio is the kernel's roofline win whenever
+    Tk * itemsize >> D — i.e. every long-context shape.
+    """
+    nq = max(1, -(-Tq // bq))
+    qo = B * H * Tq * D * itemsize * 2                 # q read + out write
+    kv = B * H * Tk * D * itemsize * 2                 # one full K+V stream
+    walk = 0.5 if (causal and Tq == Tk) else 1.0       # block-skipped walk
+    scores = B * H * Tq * Tk * itemsize
+    return {
+        "materialized_bytes": qo + kv + 3 * scores,    # write + 2 reads
+        "flash_bytes": qo + kv * nq * walk,
+        "n_q_blocks": nq,
+    }
+
+
+def paged_decode_traffic(n_slots: int, Hkv: int, D: int, *,
+                         pool_positions: int, live_positions: int,
+                         block_size: int, itemsize: int = 2) -> dict:
+    """Per-step HBM bytes of serve decode attention (DESIGN.md §10).
+
+    ``gather``: paged_gather materializes each slot's full table view
+    (pool_positions per slot, live or not) — read the pool, write the
+    gathered copy, read it back for the attention contractions.
+    ``kernel``: the block-table walk reads only the live pages, once.
+    Modeled decode tok/s on the target (HBM_BW) follow from the bytes; the
+    BENCH_attention harness records both plus indicative CPU wall-clock.
+    """
+    kv = 2
+    full = n_slots * pool_positions * Hkv * D * itemsize * kv
+    live_pages = -(-max(live_positions, 1) // block_size)
+    live = n_slots * live_pages * block_size * Hkv * D * itemsize * kv
+    gather_bytes = 3 * full
+    kernel_bytes = live
+    return {
+        "gather_bytes": gather_bytes,
+        "kernel_bytes": kernel_bytes,
+        "gather_tok_s": n_slots / (gather_bytes / HBM_BW),
+        "kernel_tok_s": n_slots / (kernel_bytes / HBM_BW),
+        "kernel_wins": kernel_bytes < gather_bytes,
+    }
+
+
 def model_flops(cfg, shape) -> float:
     """6*N*D training flops (fwd+bwd) or 2*N*D serving flops."""
     n_active = cfg.active_param_count()

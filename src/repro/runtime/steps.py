@@ -710,6 +710,12 @@ def build_paged_decode_step(model, mesh, n_slots: int, num_blocks: int,
     - pos: [n_slots] int32 per-request positions (mixed lengths).
     - ids: [n_slots, 1] int32 host-layout input tokens.
     - logits: [n_slots, v_pad] float32 full-vocab rows for the sampler.
+
+    Attention data path per ctx.attn_impl (DESIGN.md §10): the jnp fallback
+    gathers each slot's table view per layer; "pallas" walks the LOCAL
+    tables inside the block-table decode kernel (scalar-prefetched, pages
+    stream HBM->VMEM, no gather) — the offset subtraction below keeps the
+    kernel's local-id contract on every KV group.
     """
     from ..core.ops import kv_group_axes
     from ..core import collectives as col_mod

@@ -67,6 +67,11 @@ class InferenceEngine:
         if not hasattr(model, "decode_paged"):
             raise NotImplementedError(
                 f"{type(model).__name__} has no paged decode path")
+        # resolved attention data path (DESIGN.md §10) — surfaced so
+        # operators can see which decode kernel a serve process runs;
+        # elastic replans re-resolve (replace() preserves ctx.attn_impl)
+        from ..kernels.ops import effective_attn_impl
+        self.attn_impl = effective_attn_impl(ctx.attn_impl)
         self.plan = make_plan(ctx, ShapeSpec("serve", 1, cfg.n_slots,
                                              "decode"))
         if self.plan.kind == "decode" and cfg.n_slots % ctx.batch_shards:

@@ -563,6 +563,10 @@ def check_zero1_parity():
                            cols=1)),
         ("q2_dp2_deferred", dict(mode="tesseract", data=2, depth=1, rows=2,
                                  cols=2, reduce_dgrad_in_op=False)),
+        # fused Pallas attention under ZeRO-1 (both sides run the kernel
+        # data path; fp32 exactness must hold like every other cell)
+        ("q1_dp2_pallas", dict(mode="tesseract", data=2, depth=1, rows=1,
+                               cols=1, attn_impl="pallas")),
         # 16 fake devices (tests/test_zero.py spawns with that count)
         ("q2_dp4", dict(mode="tesseract", data=4, depth=1, rows=2, cols=2)),
     ]
@@ -891,6 +895,14 @@ def check_serve_engine():
         ("q2_dp2", dict(mode="summa2d", data=2, depth=1, rows=2, cols=2)),
         ("megatron_dp2", dict(mode="megatron1d", data=2, depth=1, rows=1,
                               cols=4)),
+        # attn_impl="pallas" cells (DESIGN.md §10): flash prefill +
+        # block-table paged decode kernel on BOTH the engine and the static
+        # reference loop; greedy tokens must stay bit-identical for
+        # q in {1, 2}
+        ("q1_pallas", dict(mode="tesseract", data=1, depth=1, rows=1,
+                           cols=1, attn_impl="pallas")),
+        ("q2_d2_pallas", dict(mode="tesseract", data=1, depth=2, rows=2,
+                              cols=2, attn_impl="pallas")),
     ]
     for name, variant in grids:
         _, run, ctx, mesh, model = _build("yi-6b", variant)
@@ -904,7 +916,8 @@ def check_serve_engine():
         res = eng.run()
         got = [res[r.rid] for r in reqs]
         assert got == ref, f"{name}: engine != static loop\n{got}\n{ref}"
-        if name in ("q1", "q2_d2"):   # the issue's q in {1, 2} criterion
+        if name in ("q1", "q2_d2", "q1_pallas", "q2_d2_pallas"):
+            # the issue's q in {1, 2} criterion, per attn_impl
             for b in (0, 3):
                 ffwd = full_forward_argmax(model, mesh, params, prompts[b],
                                            n_new[b])
@@ -1016,7 +1029,12 @@ def check_pipeline_parity():
         return np.array(out), bundle
 
     grids = [("q1", dict(mode="tesseract", data=1, depth=1, rows=1, cols=1)),
-             ("q2", dict(mode="tesseract", data=1, depth=1, rows=2, cols=2))]
+             ("q2", dict(mode="tesseract", data=1, depth=1, rows=2, cols=2)),
+             # 1F1B with the fused Pallas attention kernels: the microbatch
+             # composition replays the identical kernel op sequence, so the
+             # bitwise-loss contract must survive attn_impl="pallas"
+             ("q1_pallas", dict(mode="tesseract", data=1, depth=1, rows=1,
+                                cols=1, attn_impl="pallas"))]
     for name, kw in grids:
         ctx = ParallelContext(**kw)
         r2, b2 = run_steps(ctx, _mesh5(ctx, 2))
@@ -1065,6 +1083,66 @@ def check_pipeline_parity():
     print("  pipeline ckpt: pipe=2 checkpoint restored onto pipe=1, "
           "losses continue")
     print("PASS pipeline_parity")
+
+
+def check_attn_impl_parity():
+    """attn_impl="pallas" (fused flash fwd+bwd, paged decode kernel —
+    interpret mode on CPU) == the jnp reference path, end to end:
+
+    - training-loss + grad-norm trajectories for q in {1, 2} over 5 steps
+      to fp32 exactness (the issue's trajectory-parity criterion);
+    - GQA head padding (smollm 15->16, replicated KV with a non-uniform
+      kv_map) on the q=2 grid;
+    - greedy decode ids bit-identical through the dense decode step (the
+      dense cache viewed as a page pool by the decode kernel).
+    """
+    import jax, jax.numpy as jnp
+    B, S = 8, 16
+    tok = jax.random.randint(jax.random.PRNGKey(23), (B, S), 0, 250)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
+
+    grids = [
+        ("q1", dict(mode="tesseract", data=1, depth=1, rows=1, cols=1)),
+        ("q2_d2", dict(mode="tesseract", data=1, depth=2, rows=2, cols=2)),
+    ]
+    for name, variant in grids:
+        for arch in (("yi-6b", "smollm-360m") if name == "q2_d2"
+                     else ("yi-6b",)):
+            ref, (_, _, _, _, _, _, gn_ref, _) = _train_losses(
+                arch, variant, batch, n_steps=5)
+            got, (_, _, _, _, _, _, gn_got, _) = _train_losses(
+                arch, dict(variant, attn_impl="pallas"), batch, n_steps=5)
+            np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-5,
+                                       err_msg=f"{arch}/{name}: loss")
+            np.testing.assert_allclose(gn_got, gn_ref, rtol=2e-5, atol=2e-5,
+                                       err_msg=f"{arch}/{name}: grad_norm")
+            print(f"  attn_impl {arch}/{name}: pallas trajectory == jnp "
+                  f"{got[-2:]}")
+
+    # dense decode ids through the paged-view kernel
+    from repro.configs.base import ShapeSpec
+    from repro.runtime.steps import build_decode_step
+
+    def decode_ids(variant):
+        _, run, ctx, mesh, model = _build("yi-6b", variant)
+        shape = ShapeSpec("d", seq_len=32, global_batch=8, kind="decode")
+        bundle = build_decode_step(model, mesh, shape)
+        params = model.init(jax.random.PRNGKey(0))
+        cache_sds, _ = model.cache_abstract(8, 32, bundle.plan)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_sds)
+        ids = jnp.arange(8, dtype=jnp.int32)[:, None] % 100
+        out = []
+        for t in range(3):
+            ids, cache = bundle.fn(params, cache, ids, jnp.int32(t))
+            out.append(np.asarray(ids).ravel())
+        return np.stack(out)
+
+    for name, variant in grids:
+        ref = decode_ids(variant)
+        got = decode_ids(dict(variant, attn_impl="pallas"))
+        np.testing.assert_array_equal(got, ref, err_msg=f"decode {name}")
+        print(f"  attn_impl decode {name}: ids bit-identical")
+    print("PASS attn_impl_parity")
 
 
 def check_train_elastic_accum():
@@ -1146,6 +1224,7 @@ CHECKS = {
     "moe_local_layout": check_moe_local_layout,
     "serve_engine": check_serve_engine,
     "engine_elastic": check_engine_elastic,
+    "attn_impl_parity": check_attn_impl_parity,
     "pipeline_parity": check_pipeline_parity,
     "train_elastic_accum": check_train_elastic_accum,
 }

@@ -27,6 +27,7 @@ CHECKS = [
     "moe_local_layout",
     "serve_engine",
     "engine_elastic",
+    "attn_impl_parity",
     "pipeline_parity",
     "train_elastic_accum",
 ]
