@@ -27,6 +27,13 @@ import numpy as np
 import jax
 
 
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed its integrity check (checksum mismatch,
+    truncated leaf, unreadable manifest).  Restore falls back to the next
+    older durable checkpoint (``restore_latest``) instead of feeding the
+    optimizer silently-corrupted state."""
+
+
 def _flatten(tree, prefix=""):
     if isinstance(tree, dict):
         out = {}
@@ -95,12 +102,18 @@ class CheckpointManager:
         tmp.mkdir(parents=True)
         manifest = {"step": step, "time": time.time(), "leaves": {},
                     **({"meta": meta} if meta else {})}
+        import zlib
         for path, arr in host.items():
             fn = path.replace("/", "__") + ".npy"
             # store raw bytes so ml_dtypes (bfloat16 etc.) round-trip
-            np.save(tmp / fn, arr.reshape(-1).view(np.uint8))
+            raw = arr.reshape(-1).view(np.uint8)
+            np.save(tmp / fn, raw)
+            # checksum of the PAYLOAD (not the .npy header): bit flips and
+            # truncation are both caught on restore (DESIGN.md §11)
             manifest["leaves"][path] = {
-                "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+                "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "nbytes": int(raw.nbytes),
+                "crc32": int(zlib.crc32(raw.tobytes()))}
         (tmp / "manifest.json").write_text(json.dumps(manifest))
         final = self.dir / f"step_{step:08d}"
         if final.exists():
@@ -147,6 +160,60 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def latest_valid_step(self) -> int | None:
+        """Newest step that passes a full integrity check (``verify``), or
+        None.  The train loop's restart-budget window uses this — a save
+        that LANDED but is corrupt must not count as durable progress."""
+        candidates = sorted(self.all_steps(), reverse=True)
+        latest = self.latest_step()
+        if latest is not None and latest in candidates:
+            candidates.remove(latest)
+            candidates.insert(0, latest)
+        for step in candidates:
+            try:
+                self.verify(step)
+                return step
+            except CheckpointCorruptError:
+                continue
+        return None
+
+    def _manifest(self, step: int) -> dict:
+        d = self.dir / f"step_{step:08d}"
+        try:
+            return json.loads((d / "manifest.json").read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            raise CheckpointCorruptError(
+                f"step {step}: unreadable manifest: {e}") from e
+
+    def _load_leaf(self, step: int, path: str, meta: dict) -> np.ndarray:
+        """Read + integrity-check one leaf (length and crc32 of the raw
+        payload vs the manifest).  Checkpoints written before checksums
+        carry no crc32 field and skip the check (back-compat)."""
+        import zlib
+        d = self.dir / f"step_{step:08d}"
+        try:
+            raw = np.load(d / meta["file"])
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruptError(
+                f"step {step}: leaf {path!r} unreadable "
+                f"({type(e).__name__}: {e})") from e
+        if "nbytes" in meta and int(raw.nbytes) != meta["nbytes"]:
+            raise CheckpointCorruptError(
+                f"step {step}: leaf {path!r} truncated: {raw.nbytes} bytes "
+                f"on disk, manifest says {meta['nbytes']}")
+        if "crc32" in meta and zlib.crc32(raw.tobytes()) != meta["crc32"]:
+            raise CheckpointCorruptError(
+                f"step {step}: leaf {path!r} failed its checksum (bit "
+                f"flip / partial write)")
+        return raw.view(np.dtype(meta["dtype"])).reshape(meta["shape"])
+
+    def verify(self, step: int) -> None:
+        """Integrity-check every leaf of ``step`` without materializing the
+        state on devices; raises CheckpointCorruptError on damage."""
+        manifest = self._manifest(step)
+        for path, meta in manifest["leaves"].items():
+            self._load_leaf(step, path, meta)
+
     def restore(self, step: int, abstract_state, shardings, convert=None):
         """Restore onto the target mesh/shardings (reshard-on-restore).
 
@@ -154,22 +221,51 @@ class CheckpointManager:
         each host array before the shape check — the hook the ZeRO-1
         optimizer-state resharder uses to move checkpoints across dp-degree
         changes and between the replicated and sharded layouts
-        (``optim/zero.make_ckpt_converter``)."""
-        d = self.dir / f"step_{step:08d}"
-        manifest = json.loads((d / "manifest.json").read_text())
+        (``optim/zero.make_ckpt_converter``).
+
+        Every leaf is checksummed against the manifest as it is read; a
+        corrupt checkpoint raises CheckpointCorruptError BEFORE any state
+        reaches a device."""
+        manifest = self._manifest(step)
         mf_meta = manifest.get("meta") or {}
         flat_abs = _flatten(abstract_state)
         flat_sh = _flatten(shardings)
-        out = {}
+        host = {}
         for path, ab in flat_abs.items():
-            meta = manifest["leaves"][path]
-            raw = np.load(d / meta["file"])
-            arr = raw.view(np.dtype(meta["dtype"])).reshape(meta["shape"])
+            if path not in manifest["leaves"]:
+                raise CheckpointCorruptError(
+                    f"step {step}: leaf {path!r} missing from manifest")
+            arr = self._load_leaf(step, path, manifest["leaves"][path])
             if convert is not None:
                 arr = convert(path, arr, mf_meta)
             if tuple(arr.shape) != tuple(ab.shape):
                 raise ValueError(f"{path}: ckpt {arr.shape} != expected {ab.shape}")
             if str(arr.dtype) != str(ab.dtype):
                 arr = arr.astype(ab.dtype)
-            out[path] = jax.device_put(arr, flat_sh[path])
+            host[path] = arr
+        out = {path: jax.device_put(arr, flat_sh[path])
+               for path, arr in host.items()}
         return _unflatten(out)
+
+    def restore_latest(self, abstract_state, shardings, convert=None):
+        """Restore the newest checkpoint that passes integrity checks,
+        falling back across corrupted ones (newest -> oldest).  Returns
+        ``(state, step)`` or ``(None, None)`` when no durable checkpoint
+        exists.  Surfaces how many corrupt candidates were skipped via the
+        ``.fallbacks`` attribute of the return step (an int subclass is
+        overkill — callers read ``self.last_fallbacks`` instead)."""
+        self.last_fallbacks = 0
+        candidates = sorted(self.all_steps(), reverse=True)
+        latest = self.latest_step()
+        if latest is not None and latest in candidates:
+            # honor the ``latest`` pointer first, then recency
+            candidates.remove(latest)
+            candidates.insert(0, latest)
+        for step in candidates:
+            try:
+                return self.restore(step, abstract_state, shardings,
+                                    convert=convert), step
+            except CheckpointCorruptError as e:
+                print(f"[ckpt] {e}; falling back to an older checkpoint")
+                self.last_fallbacks += 1
+        return None, None

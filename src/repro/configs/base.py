@@ -178,6 +178,19 @@ class RunConfig:
     # re-plans (runtime/elastic.Replan.accum_steps) override it so a device
     # shrink preserves the global batch per optimizer step.
     accum_steps: int = 1
+    # --- deterministic fault injection (DESIGN.md §11) ---
+    # Compact FaultPlan DSL ("" = no injection), e.g.
+    # "train.grads@5:nan;ckpt.write@9:corrupt(0,bit_flip)" — parsed by
+    # runtime/faults.FaultPlan.parse and executed at the registered hook
+    # points in the train loop and serve engine.
+    fault_plan: str = ""
+    # Seed for FaultPlan.random schedules and corruption byte positions;
+    # the whole fault sequence is a pure function of (fault_seed, site,
+    # kind, step), so a rerun replays identically.
+    fault_seed: int = 0
+    # Consecutive non-finite (NaN/Inf) update skips tolerated per step
+    # before the train loop backs off loss_scale / raises (§11 ladder).
+    nan_skip_limit: int = 2
 
     def __post_init__(self):
         if self.param_dtype not in _DTYPES:
@@ -198,6 +211,12 @@ class RunConfig:
         if self.attn_impl not in ("jnp", "pallas", "auto"):
             raise ValueError(f"attn_impl must be 'jnp', 'pallas' or 'auto', "
                              f"got {self.attn_impl!r}")
+        if self.nan_skip_limit < 0:
+            raise ValueError(f"nan_skip_limit must be >= 0, "
+                             f"got {self.nan_skip_limit}")
+        if self.fault_plan:
+            from ..runtime.faults import FaultPlan
+            FaultPlan.parse(self.fault_plan)   # validate sites/kinds early
 
     @property
     def zero_enabled(self) -> bool:

@@ -51,6 +51,18 @@ def main():
     ap.add_argument("--replan-to", type=int, default=0,
                     help="simulate an elastic device-count change after 2 "
                          "steps (rebuild mesh + reshard live KV blocks)")
+    ap.add_argument("--fault-plan", default="",
+                    help="deterministic fault schedule (DESIGN.md §11 DSL), "
+                         "e.g. 'serve.logits@2:nan(1);serve.step@4:"
+                         "drop_step'")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the fault schedule (replays identically)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request completion deadline (0 = none)")
+    ap.add_argument("--ttft-budget-s", type=float, default=0.0,
+                    help="per-request time-to-first-token budget (0 = none)")
+    ap.add_argument("--max-waiting", type=int, default=0,
+                    help="bound on the admission queue (0 = unbounded)")
     args = ap.parse_args()
 
     import jax
@@ -66,7 +78,8 @@ def main():
     run = RunConfig(param_dtype="float32", compute_dtype="float32",
                     loss_chunk=64, q_chunk=32, kv_chunk=32,
                     matmul_schedule=args.matmul_schedule,
-                    attn_impl=args.attn_impl)
+                    attn_impl=args.attn_impl,
+                    fault_plan=args.fault_plan, fault_seed=args.fault_seed)
     # megatron1d + ring/auto raises in ParallelContext, same as launch.train
     ctx = ParallelContext(mode=args.mode, data=args.data, depth=args.depth,
                           rows=args.rows, cols=args.cols,
@@ -78,7 +91,8 @@ def main():
 
     engine = InferenceEngine(model, mesh, params, EngineConfig(
         n_slots=args.n_slots, block_size=args.block_size,
-        num_blocks=args.num_blocks, max_seq_len=args.max_seq_len))
+        num_blocks=args.num_blocks, max_seq_len=args.max_seq_len,
+        max_waiting=args.max_waiting))
 
     plens = [int(x) for x in args.prompt_lens.split(",")]
     rng = np.random.RandomState(0)
@@ -86,9 +100,13 @@ def main():
     reqs = []
     for i in range(args.requests):
         prompt = rng.randint(0, vocab, (plens[i % len(plens)],)).tolist()
-        reqs.append(engine.add_request(prompt, SamplingParams(
-            temperature=args.temperature, top_k=args.top_k,
-            top_p=args.top_p, seed=i, max_new_tokens=args.new_tokens)))
+        reqs.append(engine.add_request(
+            prompt,
+            SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                           top_p=args.top_p, seed=i,
+                           max_new_tokens=args.new_tokens),
+            deadline_s=args.deadline_s or None,
+            ttft_budget_s=args.ttft_budget_s or None))
 
     if args.replan_to:
         engine.step()
@@ -104,12 +122,21 @@ def main():
               f"preempted {r.preemptions}x): {results[r.rid]}")
     s = engine.stats
     lat = s.latency_percentiles()
+    ttft, itl = s.ttft_percentiles(), s.itl_percentiles()
     print(f"steps={s.steps} prefills={s.prefills} "
           f"preemptions={s.preemptions} tokens={s.tokens} "
           f"tokens/s={s.tokens_per_s():.1f} "
           f"p50={lat['p50_ms']:.1f}ms p95={lat['p95_ms']:.1f}ms "
+          f"p99={lat['p99_ms']:.1f}ms "
           f"attn_impl={engine.attn_impl} "
           f"(CPU wall-clock: indicative only)")
+    print(f"slo: health={s.health} "
+          f"ttft p50={ttft['p50_ms']:.1f}ms p99={ttft['p99_ms']:.1f}ms "
+          f"itl p50={itl['p50_ms']:.1f}ms p99={itl['p99_ms']:.1f}ms "
+          f"shed={s.shed} failed={s.failed} "
+          f"nan_quarantines={s.nan_quarantines} "
+          f"batch_shrinks={s.batch_shrinks} "
+          f"dropped_steps={s.dropped_steps}")
 
 
 if __name__ == "__main__":

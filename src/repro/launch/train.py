@@ -57,6 +57,12 @@ def main():
     ap.add_argument("--accum", type=int, default=1,
                     help="gradient-accumulation microsteps per optimizer "
                          "step (elastic re-plans raise this on a shrink)")
+    ap.add_argument("--fault-plan", default="",
+                    help="deterministic fault schedule (DESIGN.md §11 DSL), "
+                         "e.g. 'train.grads@5:nan;ckpt.write@9:corrupt"
+                         "(0,bit_flip)'")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the fault schedule (replays identically)")
     args = ap.parse_args()
 
     if "COORDINATOR_ADDRESS" in os.environ:  # multi-host pod
@@ -79,7 +85,8 @@ def main():
                     attn_impl=args.attn_impl,
                     pipe_stages=args.pipe,
                     pipeline_microbatches=args.microbatches,
-                    accum_steps=args.accum)
+                    accum_steps=args.accum,
+                    fault_plan=args.fault_plan, fault_seed=args.fault_seed)
     # RunConfig is the config surface; the per-op dispatch for both knobs
     # lives on ParallelContext (DESIGN.md §2b / §10)
     ctx = ParallelContext(mode=args.mode, data=args.data, depth=args.depth,
@@ -94,6 +101,11 @@ def main():
                 log_every=10, accum_steps=args.accum)
     print(f"final loss {res.losses[-1]:.4f} after {len(res.losses)} steps "
           f"({res.restarts} restarts)")
+    if args.fault_plan:
+        print(f"resilience: nan_skips={res.nan_skips} "
+              f"loss_scale_backoffs={res.loss_scale_backoffs} "
+              f"ckpt_fallbacks={res.ckpt_fallbacks} "
+              f"faults_fired={len(res.fault_log)}")
 
 
 if __name__ == "__main__":

@@ -188,7 +188,8 @@ def zero_optimizer_step(params, opt_state, grads, *, layouts, is_tess,
 # train step
 # ---------------------------------------------------------------------------
 
-def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1):
+def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1,
+                     fault_port: bool = False):
     """Build the jitted train step.
 
     accum_steps > 1 accumulates gradients over that many microbatches split
@@ -198,13 +199,26 @@ def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1):
     constant.  On a mesh with a ``pipe`` axis of size > 1 the pipelined
     1F1B builder is used instead (accum_steps folds into its microbatch
     count).
+
+    Every step carries the non-finite update guard (DESIGN.md §11): when
+    the loss or any gradient is NaN/Inf, the optimizer update is
+    where-selected away — params and opt state come back bit-identical and
+    ``metrics["skipped"]`` reads 1 — so one poisoned step can never corrupt
+    the training state; the train loop retries/backs off the loss scale.
+
+    fault_port=True adds a reserved scalar batch leaf ``fault_scale``
+    multiplied into the gradients, the deterministic injection point
+    ``runtime/faults.py`` uses to exercise that guard end-to-end (NaN/Inf
+    grads by (seed, step), replayable).  Off by default: the compiled step
+    and its batch schema are unchanged for normal runs.
     """
     if accum_steps < 1:
         raise ValueError(f"accum_steps must be >= 1, got {accum_steps}")
     if "pipe" in mesh.axis_names:
         # any mesh carrying a pipe axis trains through the 1F1B schedule —
         # a pipe=1 mesh is the exact 1-stage baseline of the same code path
-        return _build_pipeline_train_step(model, mesh, shape, accum_steps)
+        return _build_pipeline_train_step(model, mesh, shape, accum_steps,
+                                          fault_port=fault_port)
     ctx: ParallelContext = model.ctx
     run: RunConfig = model.run
     plan = make_plan(ctx, shape)
@@ -265,6 +279,11 @@ def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1):
     ls = run.loss_scale
 
     def local_step(params, opt_state, batch):
+        fscale = None
+        if fault_port:
+            batch = dict(batch)
+            fscale = batch.pop("fault_scale")
+
         def loss_fn(p, mb):
             # grad_sync: fwd pvary / bwd fused (optionally bf16-compressed)
             # psum over each leaf's replication axes — the deferred form of
@@ -302,6 +321,8 @@ def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1):
         if ls != 1.0:  # static loss scaling: unscale before clip/optimizer
             loss = loss / ls
             grads = jax.tree.map(lambda g: g / ls, grads)
+        if fscale is not None:
+            grads = jax.tree.map(lambda g: g * fscale, grads)
 
         if not col_mod.HAS_VMA:
             # Pre-vma jax seeds ALL p replicated copies of the loss scalar
@@ -332,7 +353,16 @@ def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1):
             new_params, new_state = update_fn(
                 params, grads, opt_state, lr=lr,
                 weight_decay=run.weight_decay)
-        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        # non-finite update guard: any NaN/Inf grad poisons gnorm (sum of
+        # squares), so one scalar predicate covers every leaf; the select
+        # keeps params/opt bit-identical on a poisoned step
+        finite = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+        new_params = jax.tree.map(lambda n, o: jnp.where(finite, n, o),
+                                  new_params, params)
+        new_state = jax.tree.map(lambda n, o: jnp.where(finite, n, o),
+                                 new_state, opt_state)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                   "skipped": 1.0 - finite.astype(jnp.float32)}
         return new_params, new_state, metrics
 
     if use_zero:
@@ -365,7 +395,12 @@ def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1):
                     f"microbatches of a multiple of the row factor {rf}; "
                     f"pick accum_steps dividing global_batch/"
                     f"(data*depth*row) or re-plan")
-    metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+    if fault_port:
+        batch_sds = dict(batch_sds,
+                         fault_scale=jax.ShapeDtypeStruct((), jnp.float32))
+        batch_specs_ = dict(batch_specs_, fault_scale=P())
+    metric_specs = {"loss": P(), "grad_norm": P(), "lr": P(),
+                    "skipped": P()}
 
     smapped = shard_map(
         local_step, mesh=mesh,
@@ -398,7 +433,8 @@ def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1):
 # ---------------------------------------------------------------------------
 
 def _build_pipeline_train_step(model, mesh, shape: ShapeSpec,
-                               accum_steps: int = 1):
+                               accum_steps: int = 1,
+                               fault_port: bool = False):
     """Train step with pipeline parallelism OUTSIDE the Tesseract TP group
     (paper §3.4): stage-sharded block params/opt state over the mesh's
     ``pipe`` axis, 1F1B microbatch schedule (runtime/pipeline.py), loss and
@@ -506,6 +542,7 @@ def _build_pipeline_train_step(model, mesh, shape: ShapeSpec,
     sched = schedule_1f1b(M, S_pipe)   # simulated once, shared with the step
 
     def local_step(params, opt_state, batch):
+        fscale = batch["fault_scale"] if fault_port else None
         tokens, labels = batch["tokens"], batch["labels"]
         tok_mb = tokens.reshape((M, tokens.shape[0] // M) + tokens.shape[1:])
         lab_mb = labels.reshape((M, labels.shape[0] // M) + labels.shape[1:])
@@ -551,6 +588,8 @@ def _build_pipeline_train_step(model, mesh, shape: ShapeSpec,
         grads = jax.tree.map(red, grads, red_axes)
         if run.loss_scale != 1.0:
             grads = jax.tree.map(lambda g: g / run.loss_scale, grads)
+        if fscale is not None:
+            grads = jax.tree.map(lambda g: g * fscale, grads)
 
         lr = adamw.cosine_lr(opt_state["step"], base_lr=run.lr,
                              warmup=100, total=10000)
@@ -574,7 +613,14 @@ def _build_pipeline_train_step(model, mesh, shape: ShapeSpec,
             new_params, new_state = adamw.adamw_update(
                 params, grads, opt_state, lr=lr,
                 weight_decay=run.weight_decay)
-        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        # non-finite update guard (same contract as the flat-mesh step)
+        finite = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+        new_params = jax.tree.map(lambda n, o: jnp.where(finite, n, o),
+                                  new_params, params)
+        new_state = jax.tree.map(lambda n, o: jnp.where(finite, n, o),
+                                 new_state, opt_state)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                   "skipped": 1.0 - finite.astype(jnp.float32)}
         return new_params, new_state, metrics
 
     if use_zero:
@@ -587,7 +633,12 @@ def _build_pipeline_train_step(model, mesh, shape: ShapeSpec,
             **({"master": pspecs} if opt_master else {}),
         }
     batch_sds, batch_specs_ = batch_abstract(ops, shape, ctx, model)
-    metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+    if fault_port:
+        batch_sds = dict(batch_sds,
+                         fault_scale=jax.ShapeDtypeStruct((), jnp.float32))
+        batch_specs_ = dict(batch_specs_, fault_scale=P())
+    metric_specs = {"loss": P(), "grad_norm": P(), "lr": P(),
+                    "skipped": P()}
 
     smapped = shard_map(
         local_step, mesh=mesh,

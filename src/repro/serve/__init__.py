@@ -7,13 +7,14 @@ Public surface:
     Request, Scheduler                — admission/preemption (serve/scheduler.py)
     PagedCacheConfig, PagedKVCache    — mesh-sharded block pool (serve/kv_cache.py)
 """
-from .engine import EngineConfig, EngineStats, InferenceEngine
+from .engine import (EngineConfig, EngineStats, InferenceEngine,
+                     QueueFullError)
 from .kv_cache import BlockPool, PagedCacheConfig, PagedKVCache
 from .sampling import SamplingParams, sample_tokens
 from .scheduler import Request, Scheduler
 
 __all__ = [
     "BlockPool", "EngineConfig", "EngineStats", "InferenceEngine",
-    "PagedCacheConfig", "PagedKVCache", "Request", "SamplingParams",
-    "Scheduler", "sample_tokens",
+    "PagedCacheConfig", "PagedKVCache", "QueueFullError", "Request",
+    "SamplingParams", "Scheduler", "sample_tokens",
 ]

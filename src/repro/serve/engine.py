@@ -9,6 +9,15 @@ per-request, retire finished sequences in place.  See DESIGN.md §7.
 The decode batch shape never changes across steps — batch composition does:
 retired slots point at their group's scratch block until re-admission, so
 the step function compiles exactly once per engine.
+
+SLO guardrails + chaos hardening (DESIGN.md §11): bounded admission queue
+(QueueFullError), per-request deadlines and TTFT budgets enforced against
+an injectable engine clock, a NaN/Inf logit guard that quarantines only
+the poisoned slot (re-prefill via the position-keyed PRNG replay keeps its
+tokens bit-exact), graceful decode-batch shrink after repeated pool-OOM
+preemption storms, and a healthy/degraded state in EngineStats.  A
+``runtime/faults.FaultInjector`` (default: ``model.run.fault_plan``) drives
+all of it deterministically at the ``serve.step`` / ``serve.logits`` sites.
 """
 from __future__ import annotations
 
@@ -18,11 +27,18 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..configs.base import ShapeSpec
+from ..runtime import faults as faults_mod
 from ..runtime.steps import (build_paged_decode_step, build_paged_reshard,
                              build_prefill_step, make_plan)
 from .kv_cache import PagedCacheConfig, PagedKVCache
 from .sampling import SamplingParams, sample_tokens, slot_arrays
-from .scheduler import Request, Scheduler
+from .scheduler import FAILED, RUNNING, WAITING, Request, Scheduler
+
+
+class QueueFullError(RuntimeError):
+    """Bounded admission queue is full — the caller must back off or shed
+    load upstream (admission control beats queueing collapse under the
+    ROADMAP's 'heavy traffic' regime)."""
 
 
 @dataclass(frozen=True)
@@ -33,6 +49,18 @@ class EngineConfig:
     max_seq_len: int = 256
     prefill_batch: int = 0       # 0 -> ctx.data (smallest valid)
     eos_id: int = -1
+    # --- SLO / resilience knobs (DESIGN.md §11) ---
+    max_waiting: int = 0         # bound on the waiting queue (0 = unbounded)
+    nan_retry_limit: int = 2     # quarantine->re-prefill rounds before FAILED
+    oom_shrink_after: int = 2    # consecutive preemption-storm steps -> shrink
+    oom_recover_after: int = 8   # consecutive calm steps -> grow back
+
+
+def _pcts(vals, qs=(50, 95, 99)):
+    if not vals:
+        return {f"p{q}_ms": 0.0 for q in qs}
+    t = np.array(vals) * 1e3
+    return {f"p{q}_ms": float(np.percentile(t, q)) for q in qs}
 
 
 @dataclass
@@ -43,21 +71,42 @@ class EngineStats:
     tokens: int = 0
     token_times: list = field(default_factory=list)  # seconds per emitted token
     wall: float = 0.0
+    # --- SLO latency breakdown (engine clock) ---
+    ttfts: list = field(default_factory=list)    # arrival -> first token
+    itls: list = field(default_factory=list)     # inter-token latencies
+    # --- resilience counters (DESIGN.md §11) ---
+    health: str = "healthy"      # healthy | degraded
+    shed: int = 0                # deadline / TTFT-budget sheds
+    failed: int = 0              # requests terminally FAILED (incl. sheds)
+    nan_quarantines: int = 0     # poisoned-slot quarantine -> re-prefill
+    batch_shrinks: int = 0       # max_active reductions after OOM storms
+    pool_exhaust_events: int = 0 # injected KV-pool exhaustion windows
+    dropped_steps: int = 0       # injected lost engine iterations
 
     def tokens_per_s(self) -> float:
         return self.tokens / self.wall if self.wall else 0.0
 
     def latency_percentiles(self):
-        if not self.token_times:
-            return {"p50_ms": 0.0, "p95_ms": 0.0}
-        t = np.array(self.token_times) * 1e3
-        return {"p50_ms": float(np.percentile(t, 50)),
-                "p95_ms": float(np.percentile(t, 95))}
+        return _pcts(self.token_times)
+
+    def ttft_percentiles(self):
+        return _pcts(self.ttfts)
+
+    def itl_percentiles(self):
+        return _pcts(self.itls)
 
 
 class InferenceEngine:
-    def __init__(self, model, mesh, params, cfg: EngineConfig):
+    def __init__(self, model, mesh, params, cfg: EngineConfig,
+                 injector=None, clock=None):
         self.model, self.mesh, self.params, self.cfg = model, mesh, params, cfg
+        # injectable wall clock: deadline/TTFT tests drive a fake clock
+        self.clock = clock or time.perf_counter
+        self.injector = injector if injector is not None else \
+            faults_mod.injector_from_run(model.run, sites=("serve",))
+        self._hostage = None     # injected pool-exhaustion hold
+        self._oom_streak = 0     # consecutive steps with preemptions
+        self._calm_streak = 0    # consecutive steps without
         self._build()
 
     # ---------------------------------------------------------------- build
@@ -127,11 +176,81 @@ class InferenceEngine:
         return self._prefill_bundles[bucket]
 
     # ------------------------------------------------------------- requests
-    def add_request(self, prompt, sampling: SamplingParams = SamplingParams(),
-                    rid=None) -> Request:
-        req = Request(prompt, sampling, eos_id=self.cfg.eos_id, rid=rid)
+    def add_request(self, prompt, sampling: SamplingParams | None = None,
+                    rid=None, deadline_s: float | None = None,
+                    ttft_budget_s: float | None = None) -> Request:
+        """sampling defaults PER CALL (None -> fresh SamplingParams(); a
+        shared default instance would alias state across requests).
+        Raises QueueFullError when cfg.max_waiting bounds the queue."""
+        if self.cfg.max_waiting and \
+                len(self.sched.waiting) >= self.cfg.max_waiting:
+            raise QueueFullError(
+                f"admission queue full ({self.cfg.max_waiting} waiting)")
+        req = Request(prompt, sampling, eos_id=self.cfg.eos_id, rid=rid,
+                      deadline_s=deadline_s, ttft_budget_s=ttft_budget_s,
+                      arrival_t=self.clock())
         self.requests.append(req)
         return self.sched.add(req)
+
+    def _fail(self, req: Request, reason: str) -> None:
+        """Terminally fail one request, releasing whatever it holds."""
+        if req.state == RUNNING:
+            self.cache.pool.free(req.block_ids)
+            req.block_ids = []
+            self.sched.slots[req.slot] = None
+            req.slot = None
+        elif req.state == WAITING and req in self.sched.waiting:
+            self.sched.waiting.remove(req)
+        req.state = FAILED
+        req.fail_reason = reason
+        self.stats.failed += 1
+
+    def _shed_expired(self) -> None:
+        """Deadline / TTFT-budget enforcement: shed ONLY the expired
+        requests (waiting or running); survivors are untouched."""
+        now = self.clock()
+        for req in list(self.sched.waiting) + self.sched.running:
+            age = now - req.arrival_t
+            if req.deadline_s is not None and age > req.deadline_s:
+                self._fail(req, f"deadline ({req.deadline_s:g}s) exceeded")
+                self.stats.shed += 1
+            elif (req.ttft_budget_s is not None and req.first_token_t is None
+                  and age > req.ttft_budget_s):
+                self._fail(req, f"ttft budget ({req.ttft_budget_s:g}s) "
+                                f"exceeded")
+                self.stats.shed += 1
+
+    def _record_emit(self, req: Request) -> None:
+        """TTFT / inter-token latency accounting on the engine clock."""
+        now = self.clock()
+        if req.first_token_t is None:
+            req.first_token_t = now
+            self.stats.ttfts.append(now - req.arrival_t)
+        elif req.last_emit_t is not None:
+            self.stats.itls.append(now - req.last_emit_t)
+        req.last_emit_t = now
+
+    def _quarantine(self, req: Request) -> None:
+        """NaN/Inf logits in this request's slot: evict ONLY that slot and
+        re-prefill it later — the position-keyed PRNG replays its trajectory
+        bit-exactly.  Bounded by cfg.nan_retry_limit, then FAILED."""
+        req.nan_retries += 1
+        self.stats.nan_quarantines += 1
+        if req.nan_retries > self.cfg.nan_retry_limit:
+            self._fail(req, f"non-finite logits persisted through "
+                            f"{self.cfg.nan_retry_limit} re-prefills")
+            return
+        self.sched.slots[req.slot] = None
+        self.sched.preempt(req)
+
+    @staticmethod
+    def _finite_rows(logits) -> np.ndarray:
+        """(rows,) bool: row i of the logit batch is sane.  -inf is a LEGIT
+        logit value (vocab-shard padding, top-k/top-p masks); only NaN and
+        +inf mark a poisoned row."""
+        lg = np.asarray(logits)
+        bad = np.isnan(lg) | np.isposinf(lg)
+        return ~bad.any(axis=tuple(range(1, lg.ndim)))
 
     # -------------------------------------------------------------- prefill
     def _run_prefills(self, admitted):
@@ -140,6 +259,7 @@ class InferenceEngine:
         emitted (one per request — counted here because a same-step
         preemption folds out_tokens away before step()'s accounting)."""
         admitted = sorted(admitted, key=lambda r: len(r.seq_tokens))
+        emitted = 0
         for i in range(0, len(admitted), self._b_pre):
             chunk = admitted[i:i + self._b_pre]
             bucket = self._bucket(max(len(r.seq_tokens) for r in chunk))
@@ -164,23 +284,96 @@ class InferenceEngine:
                                                * (self._b_pre - len(chunk)))
             toks = np.asarray(sample_tokens(logits, temps, ks, ps, seeds,
                                             lengths))
+            ok = self._finite_rows(logits)
             for j, req in enumerate(chunk):
+                if not ok[j]:
+                    # poisoned prefill: quarantine just this request; its
+                    # pages are freed and a later re-prefill replays it
+                    self._quarantine(req)
+                    continue
                 req.num_cached = len(req.seq_tokens)
                 tok = int(toks[j])
                 req.out_tokens.append(tok)
                 req.last_token = tok
+                self._record_emit(req)
+                emitted += 1
             self.stats.prefills += 1
         # a prefilled request may already be done (max_new_tokens == 1 after
         # a late preemption, or eos right away)
         for req in admitted:
-            if req.finished:
+            if req.state == RUNNING and req.finished:
                 self.sched.retire(req)
-        return len(admitted)
+        return emitted
+
+    # ------------------------------------------------------ fault plumbing
+    def _exhaust_pool(self, idx: int, hold_steps: int) -> None:
+        """Injected KV-pool exhaustion: take every free block hostage for
+        ``hold_steps`` engine steps (drives the preemption-storm -> batch-
+        shrink recovery path)."""
+        held = []
+        for g in range(self.cache.n_groups):
+            n = self.cache.pool.available(g)
+            if n:
+                held.extend(self.cache.pool.alloc(g, n))
+        self._hostage = {"blocks": held, "until": idx + max(1, hold_steps)}
+        self.stats.pool_exhaust_events += 1
+
+    def _release_hostages(self, idx: int) -> None:
+        if self._hostage is not None and idx >= self._hostage["until"]:
+            self.cache.pool.free(self._hostage["blocks"])
+            self._hostage = None
+
+    def _fire_step_faults(self, idx: int):
+        """Run the serve.step injections due at engine step ``idx``;
+        returns True when this iteration is dropped entirely."""
+        dropped = False
+        for spec in self.injector.fire("serve.step", idx):
+            if spec.kind == "drop_step":
+                dropped = True
+            elif spec.kind == "straggler":
+                time.sleep(spec.arg)
+            elif spec.kind == "pool_exhaust":
+                self._exhaust_pool(idx, int(spec.arg))
+            elif spec.kind == "device_loss":
+                print(f"[fault] serve step {idx}: device loss -> replan to "
+                      f"{int(spec.arg)} devices")
+                self.replan_to(int(spec.arg))
+        return dropped
+
+    def _poison_logits(self, logits, idx: int):
+        """serve.logits injections: overwrite the target slot's logit row
+        with NaN/Inf (what a flaky accelerator hands the sampler)."""
+        specs = self.injector.fire("serve.logits", idx)
+        if not specs:
+            return logits
+        lg = np.array(logits)
+        for spec in specs:
+            lg[int(spec.arg) % lg.shape[0]] = \
+                np.nan if spec.kind == "nan" else np.inf
+        return lg
+
+    def _update_health(self) -> None:
+        degraded = (self.sched.max_active < self.cfg.n_slots
+                    or self._hostage is not None)
+        self.stats.health = "degraded" if degraded else "healthy"
 
     # ---------------------------------------------------------------- step
     def step(self):
         """One engine iteration; returns [(rid, token)] emitted this step."""
         t0 = time.perf_counter()
+        idx = self.stats.steps
+        self._release_hostages(idx)
+        dropped = (self._fire_step_faults(idx)
+                   if self.injector is not None else False)
+        self._shed_expired()
+        if dropped:
+            # a lost engine iteration: no admission, no decode — survivors
+            # just resume next step (position-keyed sampling keeps parity)
+            self.stats.dropped_steps += 1
+            self.stats.steps += 1
+            self.stats.wall += time.perf_counter() - t0
+            self._update_health()
+            return []
         admitted = self.sched.admit()
         prefill_emitted = self._run_prefills(admitted) if admitted else 0
         preempted = self.sched.ensure_decode_capacity()
@@ -203,17 +396,44 @@ class InferenceEngine:
             tables = self.cache.make_table(slot_blocks, groups)
             logits, self.pool = self.dec.fn(self.params, self.pool, tables,
                                             pos, ids)
+            if self.injector is not None:
+                logits = self._poison_logits(logits, idx)
+            ok = self._finite_rows(logits)
             temps, ks, ps, seeds = slot_arrays(samplings)
             toks = np.asarray(sample_tokens(logits, temps, ks, ps, seeds,
                                             pos + 1))
             for req in running:
+                if not ok[req.slot]:
+                    # poisoned slot: quarantine ONLY this request (bounded
+                    # re-prefill replay); every other slot proceeds
+                    self._quarantine(req)
+                    continue
                 req.num_cached += 1
                 tok = int(toks[req.slot])
                 req.out_tokens.append(tok)
                 req.last_token = tok
+                self._record_emit(req)
                 emitted.append((req.rid, tok))
                 if req.finished:
                     self.sched.retire(req)
+        # pool-OOM pressure control: repeated preemption storms shrink the
+        # admission cap (graceful decode-batch shrink); calm steps grow it
+        # back toward n_slots
+        if preempted:
+            self._oom_streak += 1
+            self._calm_streak = 0
+        else:
+            self._calm_streak += 1
+            self._oom_streak = 0
+        if (self._oom_streak >= self.cfg.oom_shrink_after
+                and self.sched.max_active > 1):
+            self.sched.max_active -= 1
+            self.stats.batch_shrinks += 1
+            self._oom_streak = 0
+        if (self._calm_streak >= self.cfg.oom_recover_after
+                and self.sched.max_active < self.cfg.n_slots):
+            self.sched.max_active += 1
+            self._calm_streak = 0
         dt = time.perf_counter() - t0
         self.stats.steps += 1
         self.stats.wall += dt
@@ -221,6 +441,7 @@ class InferenceEngine:
         self.stats.tokens += new_tokens
         if new_tokens:
             self.stats.token_times.extend([dt / new_tokens] * new_tokens)
+        self._update_health()
         return emitted
 
     def run(self, max_steps: int = 100000):
@@ -252,6 +473,9 @@ class InferenceEngine:
 
         rp = replan(n_devices, self.model.ctx,
                     global_batch=self.cfg.n_slots)
+        # injected pool-exhaustion hostages hold OLD pool block ids — drop
+        # them rather than freeing stale ids into the rebuilt pool
+        self._hostage = None
         old_sched = self.sched
         old_pool_np = {k: np.asarray(v) for k, v in self.pool.items()}
         params_np = jax.tree.map(np.asarray, self.params)
@@ -272,6 +496,7 @@ class InferenceEngine:
         # admission look "older" than them, inverting eviction priority.
         self.sched.waiting = old_sched.waiting
         self.sched._admit_clock = old_sched._admit_clock
+        self.sched.max_active = old_sched.max_active
         new_pool_np = {k: np.array(v) for k, v in self.pool.items()}
         for slot in range(min(len(old_sched.slots), self.cfg.n_slots)):
             req = old_sched.slots[slot]

@@ -28,19 +28,31 @@ from .sampling import SamplingParams
 
 _RID = itertools.count()
 
-WAITING, RUNNING, FINISHED = "waiting", "running", "finished"
+WAITING, RUNNING, FINISHED, FAILED = "waiting", "running", "finished", "failed"
 
 
 class Request:
-    def __init__(self, prompt, sampling: SamplingParams = SamplingParams(),
-                 eos_id: int = -1, rid=None):
+    def __init__(self, prompt, sampling: SamplingParams | None = None,
+                 eos_id: int = -1, rid=None, deadline_s: float | None = None,
+                 ttft_budget_s: float | None = None, arrival_t: float = 0.0):
         if len(prompt) == 0:
             raise ValueError("empty prompt")
         self.rid = rid if rid is not None else next(_RID)
         self.prompt = [int(t) for t in prompt]  # grows on preemption
         self.orig_prompt_len = len(self.prompt)
-        self.sampling = sampling
+        # default is constructed per call: a shared default instance would
+        # alias sampling state across every request created without one
+        self.sampling = SamplingParams() if sampling is None else sampling
         self.eos_id = eos_id
+        # --- SLO guardrails (DESIGN.md §11): wall-clock budgets the engine
+        # enforces with its own clock; None = no budget
+        self.deadline_s = deadline_s         # total completion budget
+        self.ttft_budget_s = ttft_budget_s   # time-to-first-token budget
+        self.arrival_t = arrival_t           # engine clock at add_request
+        self.first_token_t: float | None = None
+        self.last_emit_t: float | None = None
+        self.nan_retries = 0                 # quarantine -> re-prefill count
+        self.fail_reason = ""                # set when state == FAILED
         self.out_tokens: list = []   # generated since last (re-)prefill
         self.state = WAITING
         self.slot = None
@@ -83,6 +95,11 @@ class Scheduler:
         self.slots: list = [None] * n_slots
         self.waiting: deque = deque()
         self._admit_clock = 0
+        # Admission cap <= n_slots: the engine lowers it (graceful decode-
+        # batch shrink) after repeated pool-OOM preemption storms and raises
+        # it back once the pool calms down.  Only gates NEW admissions —
+        # requests already running are never evicted by a cap change.
+        self.max_active = n_slots
 
     # ------------------------------------------------------------- helpers
     def group_of_slot(self, slot: int) -> int:
@@ -112,6 +129,8 @@ class Scheduler:
         (the engine prefills them and sets num_cached/last_token)."""
         admitted = []
         for slot in range(self.n_slots):
+            if len(self.running) >= self.max_active:
+                break
             if self.slots[slot] is not None:
                 continue
             g = self.group_of_slot(slot)

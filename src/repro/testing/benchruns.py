@@ -521,10 +521,138 @@ def serve_throughput():
                        "wall_s": eng.stats.wall,
                        "tokens_per_s": eng.stats.tokens_per_s(),
                        "steps": eng.stats.steps,
-                       "prefills": eng.stats.prefills, **lat},
+                       "prefills": eng.stats.prefills, **lat,
+                       "ttft": eng.stats.ttft_percentiles(),
+                       "itl": eng.stats.itl_percentiles()},
             "static": static,
             "engine_wins": eng.stats.tokens_per_s() > static["tokens_per_s"],
         }
+    print(json.dumps(out))
+
+
+def resilience():
+    """The ISSUE-6 acceptance schedules as measured metrics, persisted to
+    BENCH_resilience.json by benchmarks/run.py.  Train side: NaN step +
+    corrupted newest checkpoint + 8->4 device loss; the run must rejoin the
+    fault-free loss trajectory, and goodput (distinct optimizer steps /
+    executed step attempts) quantifies the recovery tax.  Serve side: NaN
+    logits + dropped step + KV pool exhaustion from one seeded plan with
+    bit-exact survivor parity.  Both schedules must replay identically."""
+    import tempfile
+
+    import jax
+    import numpy as np
+    from repro.configs.base import RunConfig, ShapeSpec
+    from repro.core.api import ParallelContext
+    from repro.core.mesh import logical_mesh
+    from repro.models.registry import build_model, get_reduced
+    from repro.runtime.elastic import replan
+    from repro.runtime.faults import (DeviceLostError, FaultInjector,
+                                      FaultPlan)
+    from repro.runtime.train_loop import train
+    from repro.serve import EngineConfig, InferenceEngine, SamplingParams
+
+    out = {}
+    arch = get_reduced("yi-6b")
+
+    # ---- train: NaN @2, corrupt the step-5 ckpt, lose half the fleet @6 ----
+    run = RunConfig(param_dtype="float32", compute_dtype="float32",
+                    loss_chunk=8, q_chunk=8, kv_chunk=8, lr=1e-3)
+    shape = ShapeSpec("t", seq_len=16, global_batch=16, kind="train")
+    ctx8 = ParallelContext(mode="tesseract", data=8, depth=1, rows=1, cols=1)
+    mesh8 = logical_mesh(ctx8, jax.devices()[:8])
+    model8 = build_model(arch.model, ctx8, run)
+    ref = train(model8, mesh8, shape, steps=10, log_every=0)
+
+    plan = FaultPlan.parse(
+        "train.grads@2:nan;ckpt.write@5:corrupt(0,bit_flip);"
+        "train.step@6:device_loss(4)", seed=13)
+
+    def chaos_train():
+        inj = FaultInjector(plan)
+        with tempfile.TemporaryDirectory() as d:
+            try:
+                train(model8, mesh8, shape, steps=10, ckpt_dir=d,
+                      ckpt_every=2, log_every=0, injector=inj)
+                raise AssertionError("device loss did not surface")
+            except DeviceLostError as e:
+                partial = e.partial_result
+                rp = replan(e.n_surviving, ctx8,
+                            global_batch=shape.global_batch)
+            model4 = build_model(arch.model, rp.ctx, run)
+            mesh4 = logical_mesh(rp.ctx, jax.devices()[:rp.n_used])
+            res = train(model4, mesh4, shape, steps=10, ckpt_dir=d,
+                        ckpt_every=100, log_every=0,
+                        accum_steps=rp.accum_steps, injector=inj)
+            return partial, res, list(inj.fired)
+
+    partial, res, fired = chaos_train()
+    partial2, res2, fired2 = chaos_train()
+    # partial ran steps 0..last_step; the resumed run re-executes everything
+    # from the restored checkpoint up to where the crash hit
+    resume_from = 10 - len(res.losses)
+    recovery_steps = (partial.last_step + 1) - resume_from
+    executed = (partial.last_step + 1) + partial.nan_skips + len(res.losses)
+    rejoined = bool(np.allclose(res.losses, ref.losses[4:],
+                                rtol=1e-5, atol=1e-6))
+    out["train"] = {
+        "steps": 10,
+        "executed_step_attempts": executed,
+        "recovery_steps": recovery_steps,
+        "goodput": 10 / executed,
+        "nan_skips": partial.nan_skips + res.nan_skips,
+        "ckpt_fallbacks": res.ckpt_fallbacks,
+        "restarts": partial.restarts,
+        "faults_fired": len(fired),
+        "trajectory_rejoined": rejoined,
+        "replay_identical": bool(
+            fired2 == fired
+            and np.array_equal(np.array(res2.losses), np.array(res.losses))),
+    }
+
+    # ---- serve: NaN logits @2, drop @4, pool exhaust @5, device loss @8 ----
+    srun = RunConfig(param_dtype="float32", compute_dtype="float32",
+                     loss_chunk=32, q_chunk=16, kv_chunk=16)
+    sctx = ParallelContext(mode="tesseract", data=2, depth=1, rows=2, cols=2)
+    smesh = logical_mesh(sctx)
+    smodel = build_model(arch.model, sctx, srun)
+    params = smodel.init(jax.random.PRNGKey(0))
+    cfg = EngineConfig(n_slots=8, block_size=4, num_blocks=128,
+                       max_seq_len=64)
+
+    rng = np.random.RandomState(7)
+    lens = [5, 9, 16, 12, 7, 3, 21, 10]
+    n_new = [6, 10, 4, 8, 5, 12, 3, 7]
+    prompts = [rng.randint(0, 250, (l,)).tolist() for l in lens]
+    splan = FaultPlan.parse(
+        "serve.logits@2:nan(3);serve.step@4:drop_step;"
+        "serve.step@5:pool_exhaust(2);serve.step@8:device_loss(4)", seed=17)
+
+    def serve_run(injector=None):
+        e = InferenceEngine(smodel, smesh, params, cfg, injector=injector)
+        rs = [e.add_request(p, SamplingParams(max_new_tokens=n))
+              for p, n in zip(prompts, n_new)]
+        o = e.run()
+        return [o[r.rid] for r in rs], e.stats, \
+            list(e.injector.fired) if injector is not None else []
+
+    sref, refstats, _ = serve_run()
+    got, stats, sfired = serve_run(FaultInjector(splan))
+    got2, stats2, sfired2 = serve_run(FaultInjector(splan))
+    out["serve"] = {
+        "tokens": stats.tokens,
+        "steps": stats.steps,
+        "ref_steps": refstats.steps,
+        "extra_steps": stats.steps - refstats.steps,
+        "nan_quarantines": stats.nan_quarantines,
+        "preemptions": stats.preemptions,
+        "dropped_steps": stats.dropped_steps,
+        "pool_exhaust_events": stats.pool_exhaust_events,
+        "shed": stats.shed,
+        "failed": stats.failed,
+        "survivor_parity": got == sref,
+        "replay_identical": sfired2 == sfired and got2 == got,
+    }
     print(json.dumps(out))
 
 
@@ -535,4 +663,5 @@ if __name__ == "__main__":
      "pipeline": pipeline_throughput,
      "zero1_memory": zero1_memory,
      "attention": attention,
-     "serve_throughput": serve_throughput}[sys.argv[1]]()
+     "serve_throughput": serve_throughput,
+     "resilience": resilience}[sys.argv[1]]()

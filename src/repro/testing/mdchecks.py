@@ -1206,6 +1206,137 @@ def check_train_elastic_accum():
     print("PASS train_elastic_accum")
 
 
+def check_chaos_train():
+    """The ISSUE-6 acceptance schedule on the train side: one NaN step, one
+    corrupted checkpoint (the newest at crash time), then device loss with
+    an 8 -> 4 elastic replan — all from one seeded FaultPlan.  The run must
+    recover, rejoin the fault-free 8-device loss trajectory, and the whole
+    schedule must replay identically from the same seed."""
+    import tempfile
+
+    import jax
+    from repro.configs.base import RunConfig, ShapeSpec
+    from repro.core.api import ParallelContext
+    from repro.core.mesh import logical_mesh
+    from repro.models.registry import build_model, get_reduced
+    from repro.runtime.elastic import replan
+    from repro.runtime.faults import (DeviceLostError, FaultInjector,
+                                      FaultPlan)
+    from repro.runtime.train_loop import train
+
+    run = RunConfig(param_dtype="float32", compute_dtype="float32",
+                    loss_chunk=8, q_chunk=8, kv_chunk=8, lr=1e-3)
+    shape = ShapeSpec("t", seq_len=16, global_batch=16, kind="train")
+    arch = get_reduced("yi-6b")
+    ctx8 = ParallelContext(mode="tesseract", data=8, depth=1, rows=1, cols=1)
+    mesh8 = logical_mesh(ctx8, jax.devices()[:8])
+    model8 = build_model(arch.model, ctx8, run)
+
+    ref = train(model8, mesh8, shape, steps=10, log_every=0)
+
+    # NaN at 2; corrupt the step-5 checkpoint (newest when the device dies
+    # at 6, so recovery MUST fall back to step 3); lose half the fleet at 6
+    plan = FaultPlan.parse(
+        "train.grads@2:nan;ckpt.write@5:corrupt(0,bit_flip);"
+        "train.step@6:device_loss(4)", seed=13)
+
+    def chaos_run():
+        inj = FaultInjector(plan)
+        with tempfile.TemporaryDirectory() as d:
+            try:
+                train(model8, mesh8, shape, steps=10, ckpt_dir=d,
+                      ckpt_every=2, log_every=0, injector=inj)
+                raise AssertionError("device loss did not surface")
+            except DeviceLostError as e:
+                partial = e.partial_result
+                rp = replan(e.n_surviving, ctx8,
+                            global_batch=shape.global_batch)
+            assert rp.ctx.data == 4 and rp.accum_steps == 2, rp
+            model4 = build_model(arch.model, rp.ctx, run)
+            mesh4 = logical_mesh(rp.ctx, jax.devices()[:rp.n_used])
+            # same injector: spent faults stay spent across the replan
+            res = train(model4, mesh4, shape, steps=10, ckpt_dir=d,
+                        ckpt_every=100, log_every=0,
+                        accum_steps=rp.accum_steps, injector=inj)
+            return partial, res, list(inj.fired)
+
+    partial, res, fired = chaos_run()
+    assert partial.nan_skips == 1, partial.nan_skips
+    assert res.ckpt_fallbacks == 1, res.ckpt_fallbacks   # corrupt step-5
+    # restored from step 3 -> the 4-device run covers steps 4..9
+    assert res.last_step == 9 and len(res.losses) == 6, \
+        (res.last_step, len(res.losses))
+    np.testing.assert_allclose(res.losses, ref.losses[4:],
+                               rtol=1e-5, atol=1e-6,
+                               err_msg="post-recovery trajectory diverged")
+    assert fired == [("train.grads", 2, "nan"), ("ckpt.write", 5, "corrupt"),
+                     ("train.step", 6, "device_loss")], fired
+
+    partial2, res2, fired2 = chaos_run()
+    assert fired2 == fired, "fault schedule did not replay identically"
+    np.testing.assert_array_equal(
+        np.array(res2.losses), np.array(res.losses),
+        err_msg="replay from the same seed diverged")
+    print(f"  chaos train: NaN skip + corrupt-ckpt fallback + 8->4 replan, "
+          f"trajectory rejoined {res.losses}")
+    print("PASS chaos_train")
+
+
+def check_chaos_serve():
+    """ISSUE-6 acceptance, serve side: NaN logits in one slot, a dropped
+    engine step, KV pool exhaustion and a device loss (8 -> 4 replan) from
+    one seeded plan — every surviving request keeps bit-exact greedy parity
+    with the fault-free run, and the schedule replays identically."""
+    import jax
+    from repro.runtime.faults import FaultInjector, FaultPlan
+    from repro.serve import EngineConfig, InferenceEngine, SamplingParams
+
+    rng = np.random.RandomState(7)
+    lens = [5, 9, 16, 12, 7, 3, 21, 10]
+    n_new = [6, 10, 4, 8, 5, 12, 3, 7]
+    prompts = [rng.randint(0, 250, (l,)).tolist() for l in lens]
+
+    _, run, ctx, mesh, model = _build(
+        "yi-6b", dict(mode="tesseract", data=2, depth=1, rows=2, cols=2))
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = EngineConfig(n_slots=8, block_size=4, num_blocks=128,
+                       max_seq_len=64)
+
+    eng = InferenceEngine(model, mesh, params, cfg)
+    reqs = [eng.add_request(p, SamplingParams(max_new_tokens=n))
+            for p, n in zip(prompts, n_new)]
+    ref_out = eng.run()
+    ref = [ref_out[r.rid] for r in reqs]
+
+    plan = FaultPlan.parse(
+        "serve.logits@2:nan(3);serve.step@4:drop_step;"
+        "serve.step@5:pool_exhaust(2);serve.step@8:device_loss(4)", seed=17)
+
+    def chaos_run():
+        e = InferenceEngine(model, mesh, params, cfg,
+                            injector=FaultInjector(plan))
+        rs = [e.add_request(p, SamplingParams(max_new_tokens=n))
+              for p, n in zip(prompts, n_new)]
+        out = e.run()
+        return [out[r.rid] for r in rs], e.stats, list(e.injector.fired)
+
+    got, stats, fired = chaos_run()
+    assert stats.nan_quarantines >= 1, "NaN guard never fired"
+    assert stats.dropped_steps == 1, stats.dropped_steps
+    assert stats.pool_exhaust_events == 1, stats.pool_exhaust_events
+    assert stats.failed == 0, f"{stats.failed} requests failed (expected " \
+                              f"quarantine-and-replay, not shedding)"
+    assert got == ref, f"survivor parity broke under chaos\n{got}\n{ref}"
+
+    got2, stats2, fired2 = chaos_run()
+    assert fired2 == fired, "fault schedule did not replay identically"
+    assert got2 == got, "replay from the same seed diverged"
+    print(f"  chaos serve: {stats.nan_quarantines} quarantines, "
+          f"{stats.preemptions} preemptions, 8->4 replan — "
+          f"bit-exact parity + identical replay")
+    print("PASS chaos_serve")
+
+
 CHECKS = {
     "summa_exact": check_summa_exact,
     "ring_schedule": check_ring_schedule,
@@ -1227,6 +1358,8 @@ CHECKS = {
     "attn_impl_parity": check_attn_impl_parity,
     "pipeline_parity": check_pipeline_parity,
     "train_elastic_accum": check_train_elastic_accum,
+    "chaos_train": check_chaos_train,
+    "chaos_serve": check_chaos_serve,
 }
 
 

@@ -1,0 +1,429 @@
+"""Deterministic fault injection + recovery invariants (DESIGN.md §11).
+
+Unit layer: FaultPlan/FaultInjector semantics, checkpoint corruption
+detection and fallback.  Integration layer (single device): the train
+loop's NaN ladder and the serve engine's SLO guardrails, asserting the
+§11 invariants — bit-exact survivor parity, fault-free trajectory rejoin,
+bounded retries, identical replay from the same seed.  The 8-device
+acceptance schedules (device loss + 8->4 replan combined with NaN, ckpt
+corruption and pool exhaustion) run via the mdchecks subprocess harness.
+"""
+import dataclasses
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import CheckpointCorruptError, CheckpointManager
+from repro.configs.base import RunConfig, ShapeSpec
+from repro.core.api import ParallelContext
+from repro.core.mesh import logical_mesh
+from repro.models.registry import build_model, get_reduced
+from repro.runtime.faults import (DeviceLostError, FaultInjector, FaultPlan,
+                                  FaultSpec, corrupt_checkpoint,
+                                  injector_from_run)
+from repro.runtime.train_loop import train
+from repro.serve import (EngineConfig, InferenceEngine, QueueFullError,
+                         SamplingParams)
+
+CTX = ParallelContext(mode="tesseract", data=1, depth=1, rows=1, cols=1)
+RUN = RunConfig(param_dtype="float32", compute_dtype="float32", loss_chunk=16,
+                q_chunk=8, kv_chunk=8, lr=1e-3)
+SHAPE = ShapeSpec("t", seq_len=16, global_batch=4, kind="train")
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FaultInjector semantics
+# ---------------------------------------------------------------------------
+
+def test_plan_parse_roundtrip():
+    text = ("train.grads@5:nan;ckpt.write@9:corrupt(bit_flip);"
+            "serve.logits@3:nan(1)x2;train.step@7:device_loss(4);"
+            "serve.step@2:pool_exhaust(3)")
+    plan = FaultPlan.parse(text, seed=11)
+    assert FaultPlan.parse(plan.compact(), seed=11) == plan
+    assert plan.at("train.grads", 5)[0].kind == "nan"
+    assert plan.at("train.grads", 4) == ()
+    assert sorted(plan.sites()) == ["ckpt.write", "serve.logits",
+                                    "serve.step", "train.grads", "train.step"]
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(site="nope.where", step=0, kind="nan")
+    with pytest.raises(ValueError):
+        FaultSpec(site="train.grads", step=0, kind="device_loss")  # bad kind
+    with pytest.raises(ValueError):
+        FaultSpec(site="train.grads", step=-1, kind="nan")
+    with pytest.raises(ValueError):
+        FaultPlan.random(0, 10, {"train.grads/corrupt": 0.5})
+    # RunConfig validates the plan DSL at construction time
+    with pytest.raises(ValueError):
+        dataclasses.replace(RUN, fault_plan="bogus@0:nan")
+
+
+def test_injector_once_semantics_and_replay():
+    plan = FaultPlan.parse("train.grads@2:nan;serve.logits@3:inf(1)x2")
+    inj = FaultInjector(plan)
+    assert [s.kind for s in inj.fire("train.grads", 2)] == ["nan"]
+    assert inj.fire("train.grads", 2) == []          # spent after 1 attempt
+    assert len(inj.fire("serve.logits", 3)) == 1     # x2: fires twice
+    assert len(inj.fire("serve.logits", 3)) == 1
+    assert inj.fire("serve.logits", 3) == []
+    assert inj.exhausted
+    # a fresh injector replays the identical fired log
+    inj2 = FaultInjector(plan)
+    for site, step in (("train.grads", 2), ("serve.logits", 3),
+                       ("serve.logits", 3), ("serve.logits", 3)):
+        inj2.fire(site, step)
+    assert inj2.fired == inj.fired
+
+
+def test_random_plan_is_stable_under_extension():
+    """Draws are pure in (seed, site, kind, step): widening the horizon or
+    adding sites never reshuffles earlier decisions (same no-hash() rule
+    the data stream follows — PYTHONHASHSEED must not matter)."""
+    a = FaultPlan.random(3, 50, {"train.grads/nan": 0.1})
+    b = FaultPlan.random(3, 80, {"train.grads/nan": 0.1,
+                                 "serve.step/drop_step": 0.2})
+    sa = {(s.site, s.step) for s in a.specs}
+    sb = {(s.site, s.step) for s in b.specs
+          if s.site == "train.grads" and s.step < 50}
+    assert sa == sb
+    assert a == FaultPlan.random(3, 50, {"train.grads/nan": 0.1})
+
+
+def test_injector_from_run_site_filter():
+    run = dataclasses.replace(
+        RUN, fault_plan="train.grads@1:nan;serve.step@1:drop_step",
+        fault_seed=5)
+    ti = injector_from_run(run, sites=("train", "ckpt"))
+    si = injector_from_run(run, sites=("serve",))
+    assert [s.site for s in ti.plan.specs] == ["train.grads"]
+    assert [s.site for s in si.plan.specs] == ["serve.step"]
+    assert injector_from_run(RUN) is None            # no plan set
+
+
+# ---------------------------------------------------------------------------
+# checkpoint corruption detection + durable fallback
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["bit_flip", "truncate", "manifest"])
+def test_ckpt_corruption_detected(tmp_path, mode):
+    mgr = CheckpointManager(tmp_path, keep=5)
+    state = {"w": np.arange(64, dtype=np.float32).reshape(8, 8)}
+    mgr.save(0, state, blocking=True)
+    assert mgr.latest_valid_step() == 0
+    mgr.verify(0)                                    # intact passes
+    corrupt_checkpoint(tmp_path, 0, mode=mode, seed=3)
+    with pytest.raises(CheckpointCorruptError):
+        mgr.verify(0)
+    assert mgr.latest_valid_step() is None
+
+
+def test_restore_latest_falls_back_to_durable(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=5)
+    base = np.arange(16, dtype=np.float32)
+    for s in range(3):
+        mgr.save(s, {"w": base + s}, blocking=True)
+    corrupt_checkpoint(tmp_path, 2, mode="bit_flip", seed=1)
+    corrupt_checkpoint(tmp_path, 1, mode="truncate")
+    from jax.sharding import SingleDeviceSharding
+    sh = {"w": SingleDeviceSharding(jax.devices()[0])}
+    ab = {"w": jax.ShapeDtypeStruct((16,), np.float32)}
+    state, step = mgr.restore_latest(ab, sh)
+    assert step == 0 and mgr.last_fallbacks == 2
+    np.testing.assert_array_equal(np.asarray(state["w"]), base)
+    corrupt_checkpoint(tmp_path, 0, mode="manifest")
+    state, step = mgr.restore_latest(ab, sh)
+    assert state is None and step is None and mgr.last_fallbacks == 3
+
+
+# ---------------------------------------------------------------------------
+# train loop: NaN ladder + crash consistency (single device)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tmodel():
+    arch = get_reduced("yi-6b")
+    return arch, logical_mesh(CTX)
+
+
+def _train_ref(arch, mesh, steps=8):
+    model = build_model(arch.model, CTX, RUN)
+    return train(model, mesh, SHAPE, steps=steps, log_every=0)
+
+
+def test_nan_skip_rejoins_trajectory(tmp_path, tmodel):
+    """A transient NaN step is where-selected away and the SAME step is
+    retried — the loss trajectory stays bit-identical to fault-free."""
+    arch, mesh = tmodel
+    ref = _train_ref(arch, mesh)
+    run = dataclasses.replace(RUN, fault_plan="train.grads@3:nan",
+                              fault_seed=7)
+    model = build_model(arch.model, CTX, run)
+    res = train(model, mesh, SHAPE, steps=8, log_every=0)
+    assert res.nan_skips == 1 and res.restarts == 0
+    np.testing.assert_array_equal(np.array(res.losses),
+                                  np.array(ref.losses))
+    assert res.fault_log == [("train.grads", 3, "nan")]
+
+
+def test_nan_crash_corrupt_ckpt_recovery(tmp_path, tmodel):
+    """Combined: NaN step, corrupted newest checkpoint, then a crash — the
+    loop falls back to the last DURABLE checkpoint and rejoins the
+    fault-free trajectory."""
+    arch, mesh = tmodel
+    ref = _train_ref(arch, mesh)
+    run = dataclasses.replace(
+        RUN, fault_plan="train.grads@3:nan;ckpt.write@3:corrupt(0,bit_flip)",
+        fault_seed=7)
+    model = build_model(arch.model, CTX, run)
+
+    def crash_once(step, fired=[False]):
+        if step == 5 and not fired[0]:
+            fired[0] = True
+            raise RuntimeError("injected crash")
+
+    res = train(model, mesh, SHAPE, steps=8, ckpt_dir=tmp_path, ckpt_every=2,
+                log_every=0, fault_hook=crash_once)
+    assert res.nan_skips == 1 and res.restarts == 1
+    assert res.ckpt_fallbacks == 1        # corrupt step-3 ckpt skipped
+    np.testing.assert_allclose(res.losses[-3:], ref.losses[-3:],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_persistent_nan_backs_off_loss_scale(tmodel):
+    """A NaN that survives the retry budget triggers loss-scale halving
+    (the §9 mixed-precision lever) before giving up; once the fault clears
+    the run completes."""
+    arch, mesh = tmodel
+    run = dataclasses.replace(RUN, fault_plan="train.grads@1:nanx4",
+                              loss_scale=4.0, nan_skip_limit=1, fault_seed=0)
+    model = build_model(arch.model, CTX, run)
+    res = train(model, mesh, SHAPE, steps=4, log_every=0)
+    # 4 firings: 2 skips -> backoff to 2.0, 2 skips -> backoff to 1.0, clean
+    assert res.nan_skips == 4
+    assert res.loss_scale_backoffs == 2
+    assert len(res.losses) == 4 and all(np.isfinite(res.losses))
+
+
+def test_unrecoverable_nan_bounded(tmodel):
+    """NaN beyond every ladder rung with no checkpoint and no restart
+    budget must surface as FloatingPointError, not loop forever."""
+    arch, mesh = tmodel
+    run = dataclasses.replace(RUN, fault_plan="train.grads@1:nanx100",
+                              nan_skip_limit=1, fault_seed=0)
+    model = build_model(arch.model, CTX, run)
+    with pytest.raises(FloatingPointError):
+        train(model, mesh, SHAPE, steps=4, log_every=0, max_restarts=0)
+
+
+def test_device_loss_bypasses_restart_budget(tmp_path, tmodel):
+    """device_loss must re-raise THROUGH max_restarts (a same-mesh restart
+    cannot recover it) carrying the survivor count for the replan."""
+    arch, mesh = tmodel
+    run = dataclasses.replace(RUN, fault_plan="train.step@2:device_loss(4)",
+                              fault_seed=0)
+    model = build_model(arch.model, CTX, run)
+    with pytest.raises(DeviceLostError) as ei:
+        train(model, mesh, SHAPE, steps=6, ckpt_dir=tmp_path, ckpt_every=2,
+              log_every=0, max_restarts=100)
+    assert ei.value.n_surviving == 4
+    assert ei.value.partial_result.last_step == 1
+
+
+# ---------------------------------------------------------------------------
+# serve engine: SLO guardrails (single device)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smodel():
+    arch = get_reduced("yi-6b")
+    mesh = logical_mesh(CTX)
+    model = build_model(arch.model, CTX, RUN)
+    params = model.init(jax.random.PRNGKey(0))
+    return mesh, model, params
+
+
+def _prompts(seed=0, lens=(5, 9, 16, 12)):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, 250, (l,)).tolist() for l in lens]
+
+
+_CFG = EngineConfig(n_slots=4, block_size=8, num_blocks=64, max_seq_len=128)
+
+
+def _greedy(n=8):
+    return SamplingParams(temperature=0.0, max_new_tokens=n)
+
+
+def _run_engine(smodel, cfg=_CFG, plan=None, clock=None, **req_kw):
+    mesh, model, params = smodel
+    inj = FaultInjector(plan) if plan is not None else None
+    eng = InferenceEngine(model, mesh, params, cfg, injector=inj,
+                          clock=clock)
+    reqs = [eng.add_request(p, _greedy(), rid=i, **req_kw)
+            for i, p in enumerate(_prompts())]
+    out = eng.run()
+    return eng, reqs, [out[i] for i in range(len(reqs))]
+
+
+def test_sampling_default_not_shared(smodel):
+    mesh, model, params = smodel
+    eng = InferenceEngine(model, mesh, params, _CFG)
+    a = eng.add_request([1, 2, 3])
+    b = eng.add_request([4, 5, 6])
+    assert a.sampling is not b.sampling   # per-call construction, no alias
+
+
+def test_nan_quarantine_keeps_parity(smodel):
+    """A poisoned slot is quarantined and re-prefilled (position-keyed PRNG
+    replay); every request — including the poisoned one — finishes with
+    bit-exact tokens, and the schedule replays identically."""
+    _, _, ref = _run_engine(smodel)
+    plan = FaultPlan.parse("serve.logits@2:nan(1)", seed=5)
+    eng, _, got = _run_engine(smodel, plan=plan)
+    assert eng.stats.nan_quarantines == 1 and eng.stats.failed == 0
+    assert got == ref
+    eng2, _, got2 = _run_engine(smodel, plan=plan)
+    assert got2 == got and eng2.injector.fired == eng.injector.fired
+
+
+def test_nan_retries_bounded(smodel):
+    """Persistent poison in one slot fails ONLY that request after
+    nan_retry_limit re-prefills; the other slots finish with parity."""
+    _, _, ref = _run_engine(smodel)
+    plan = FaultPlan.parse(";".join(f"serve.logits@{s}:nan(1)x99"
+                                    for s in range(40)), seed=5)
+    eng, reqs, got = _run_engine(smodel, plan=plan)
+    failed = [r for r in reqs if r.state == "failed"]
+    assert len(failed) == 1 and "logits" in failed[0].fail_reason
+    assert eng.stats.failed == 1
+    survivors = [i for i, r in enumerate(reqs) if r.state != "failed"]
+    assert [got[i] for i in survivors] == [ref[i] for i in survivors]
+
+
+def test_dropped_step_keeps_parity(smodel):
+    _, _, ref = _run_engine(smodel)
+    plan = FaultPlan.parse("serve.step@3:drop_step", seed=1)
+    eng, _, got = _run_engine(smodel, plan=plan)
+    assert eng.stats.dropped_steps == 1
+    assert got == ref
+
+
+def test_bounded_admission_queue(smodel):
+    mesh, model, params = smodel
+    cfg = dataclasses.replace(_CFG, max_waiting=2)
+    eng = InferenceEngine(model, mesh, params, cfg)
+    eng.add_request([1, 2, 3])
+    eng.add_request([4, 5, 6])
+    with pytest.raises(QueueFullError):
+        eng.add_request([7, 8, 9])
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_deadline_and_ttft_shedding(smodel):
+    """Expired requests are shed — and ONLY them; survivors keep bit-exact
+    parity.  Driven by the injectable engine clock."""
+    mesh, model, params = smodel
+    _, _, ref = _run_engine(smodel)
+    clk = _FakeClock()
+    eng = InferenceEngine(model, mesh, params, _CFG, clock=clk)
+    prompts = _prompts()
+    doomed = eng.add_request(prompts[0], _greedy(), rid=0, deadline_s=5.0)
+    ttft_doomed = eng.add_request(prompts[1], _greedy(), rid=1,
+                                  ttft_budget_s=2.0)
+    survivors = [eng.add_request(p, _greedy(), rid=i + 2)
+                 for i, p in enumerate(prompts[2:])]
+    eng.step()                       # everyone prefills at t=0
+    clk.t = 10.0                     # past both budgets
+    out = eng.run()
+    assert doomed.state == "failed" and "deadline" in doomed.fail_reason
+    # rid 1 got its first token during the t=0 prefill, so its TTFT budget
+    # was met — only the deadline shed fires
+    assert ttft_doomed.state == "finished"
+    assert eng.stats.shed == 1 and eng.stats.failed == 1
+    assert [out[r.rid] for r in survivors] == ref[2:]
+
+    # a TTFT budget that expires BEFORE the first token sheds on admission
+    clk2 = _FakeClock()
+    eng2 = InferenceEngine(model, mesh, params, _CFG, clock=clk2)
+    late = eng2.add_request(prompts[0], _greedy(), rid=0, ttft_budget_s=2.0)
+    clk2.t = 3.0
+    eng2.step()
+    assert late.state == "failed" and "ttft" in late.fail_reason
+
+
+def test_pool_exhaust_shrinks_then_recovers(smodel):
+    """Injected pool exhaustion starves block growth -> preemption storm ->
+    decode-batch shrink (degraded); once pressure clears the admission cap
+    grows back and health returns to healthy.  Parity holds throughout."""
+    mesh, model, params = smodel
+    cfg = dataclasses.replace(_CFG, num_blocks=40, oom_shrink_after=2,
+                              oom_recover_after=2)
+    eng0 = InferenceEngine(model, mesh, params, cfg)
+    for i, p in enumerate(_prompts()):
+        eng0.add_request(p, _greedy(16), rid=i)
+    ref = eng0.run()
+
+    plan = FaultPlan.parse("serve.step@2:pool_exhaust(4)", seed=9)
+    eng = InferenceEngine(model, mesh, params, cfg,
+                          injector=FaultInjector(plan))
+    for i, p in enumerate(_prompts()):
+        eng.add_request(p, _greedy(16), rid=i)
+    saw_degraded = False
+    for _ in range(200):
+        if not eng.sched.has_work:
+            break
+        eng.step()
+        saw_degraded |= eng.stats.health == "degraded"
+    assert eng.stats.pool_exhaust_events == 1
+    assert saw_degraded, "exhaustion window never degraded the engine"
+    out = {r.rid: list(r.generated) for r in eng.requests}
+    assert out == ref, "parity broke under pool exhaustion"
+    # drive calm steps: the cap recovers to n_slots and health clears
+    for _ in range(20):
+        eng.step()
+    assert eng.sched.max_active == cfg.n_slots
+    assert eng.stats.health == "healthy"
+
+
+def test_engine_stats_percentiles(smodel):
+    eng, _, _ = _run_engine(smodel)
+    lat = eng.stats.latency_percentiles()
+    ttft = eng.stats.ttft_percentiles()
+    itl = eng.stats.itl_percentiles()
+    for d in (lat, ttft, itl):
+        assert set(d) == {"p50_ms", "p95_ms", "p99_ms"}
+        assert d["p50_ms"] <= d["p95_ms"] <= d["p99_ms"]
+    assert len(eng.stats.ttfts) == 4          # one TTFT per request
+    assert len(eng.stats.itls) > 0
+
+
+# ---------------------------------------------------------------------------
+# acceptance schedules (8 fake devices, subprocess harness)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("check", ["chaos_train", "chaos_serve"])
+def test_chaos_mdcheck(check):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.testing.mdchecks", check],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert r.returncode == 0, \
+        f"{check} failed:\n{r.stdout[-3000:]}\n{r.stderr[-3000:]}"
+    assert "PASS" in r.stdout

@@ -30,6 +30,8 @@ CHECKS = [
     "attn_impl_parity",
     "pipeline_parity",
     "train_elastic_accum",
+    # chaos_train / chaos_serve live in tests/test_chaos.py (same
+    # subprocess harness) next to the rest of the fault-injection suite
 ]
 
 

@@ -284,3 +284,87 @@ def test_effective_schedule_resolution():
         ParallelContext(mode="megatron1d", cols=4, matmul_schedule="auto")
     with pytest.raises(ValueError):
         ParallelContext(matmul_schedule="bogus")
+
+
+# ---------------------------------------------------------------------------
+# scheduler edge cases under a fully exhausted block pool
+# ---------------------------------------------------------------------------
+
+class _FakeCache:
+    """Minimal PagedKVCache stand-in for scheduler-only tests: real
+    BlockPool freelists and block math, no device arrays."""
+
+    def __init__(self, n_groups=1, blocks_per_group=5, block_size=4,
+                 max_seq_len=64):
+        self.n_groups = n_groups
+        self.block_size = block_size
+        self.max_seq_len = max_seq_len
+        self.pool = BlockPool(n_groups=n_groups,
+                              blocks_per_group=blocks_per_group)
+
+    def blocks_for(self, n):
+        return -(-n // self.block_size)
+
+    def fits(self, n):
+        return (n <= self.max_seq_len
+                and self.blocks_for(n) <= self.pool.capacity(0))
+
+
+def _sreq(plen, new=4, rid=None):
+    from repro.serve.scheduler import Request
+    return Request(list(range(1, plen + 1)),
+                   SamplingParams(max_new_tokens=new), rid=rid)
+
+
+def test_scheduler_zero_free_blocks_blocks_admission():
+    from repro.serve.scheduler import Scheduler
+    cache = _FakeCache(blocks_per_group=5)       # capacity 4 (1 scratch)
+    sched = Scheduler(cache, n_slots=2)
+    a = sched.add(_sreq(12, new=4))              # blocks_for(13) = 4: all
+    assert sched.admit() == [a]
+    assert cache.pool.available(0) == 0
+    b = sched.add(_sreq(3, new=1))
+    assert sched.admit() == []                   # zero free blocks: b waits
+    assert b.state == "waiting" and b in sched.waiting
+
+
+def test_scheduler_single_request_pool_self_evicts():
+    """The only resident of a group that must grow into a dry freelist is
+    its own eviction victim: it preempts ITSELF (blocks freed, trajectory
+    folded for re-prefill) instead of deadlocking."""
+    from repro.serve.scheduler import Scheduler
+    cache = _FakeCache(blocks_per_group=5)       # capacity 4
+    sched = Scheduler(cache, n_slots=1)
+    a = sched.add(_sreq(12, new=4))              # target 16 = exactly 4 blk
+    assert sched.admit() == [a]
+    a.num_cached = 16                            # blocks full to the brim
+    preempted = sched.ensure_decode_capacity()
+    assert preempted == [a] and a.state == "waiting"
+    assert a.block_ids == [] and a.slot is None
+    assert sched.slots == [None]
+    assert cache.pool.available(0) == 4          # everything back on free
+    assert sched.waiting[0] is a                 # front of queue (replay)
+
+
+def test_scheduler_retire_while_preempting():
+    """Growth preempts the youngest co-resident; retiring the survivor
+    right after must keep the freelist consistent (no double free) and let
+    the evicted request re-admit."""
+    from repro.serve.scheduler import Scheduler
+    cache = _FakeCache(blocks_per_group=7)       # capacity 6
+    sched = Scheduler(cache, n_slots=2)
+    a = sched.add(_sreq(8, new=8))               # blocks_for(9) = 3
+    assert sched.admit() == [a]
+    b = sched.add(_sreq(8, new=8))               # 3 more: freelist dry
+    assert sched.admit() == [b]
+    assert cache.pool.available(0) == 0
+    a.num_cached = 12                            # a must grow; b is younger
+    preempted = sched.ensure_decode_capacity()
+    assert preempted == [b] and b.state == "waiting" and b.block_ids == []
+    assert len(a.block_ids) == 4                 # grew into b's freed pages
+    sched.retire(a)
+    assert a.state == "finished" and a.block_ids == [] and a.slot is None
+    assert cache.pool.available(0) == 6          # full pool back, no leaks
+    assert sched.admit() == [b]                  # evictee re-admits cleanly
+    with pytest.raises(ValueError):              # double free still guarded
+        cache.pool.free([b.block_ids[0], b.block_ids[0]])
