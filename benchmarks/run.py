@@ -204,15 +204,34 @@ def bench_zero1():
 
 def bench_serve():
     """Continuous batching vs the static-batch decode loop on a mixed-length
-    workload (tokens/s and p50/p95 per-token latency per batch size),
-    persisted to BENCH_serve.json.  Greedy tokens are asserted identical
-    inside the subprocess; the engine must win tokens/s."""
+    workload (tokens/s and p50/p95 per-token latency per batch size), plus
+    the radix prefix cache on a shared-system-prompt workload (DESIGN.md
+    §12), persisted to BENCH_serve.json.  Greedy tokens are asserted
+    identical inside the subprocess; the engine must win tokens/s; the
+    cache's deterministic reuse counters are regression-gated exact-match
+    against the committed file, its TTFT-p95 reduction against a floor."""
     out = _sub("serve_throughput")
+    out.update(_sub("serve_prefix"))
     payload = {**out,
                "note": "8 fake CPU host devices, tesseract [2,2,1] x dp2, "
                        "yi-6b reduced; wall-clock indicative only; greedy "
-                       "token parity engine==static asserted in-run"}
+                       "token parity engine==static and prefix-cache-on=="
+                       "off asserted in-run"}
     path = HERE.parent / "BENCH_serve.json"
+    # diff the deterministic prefix counters BEFORE overwriting
+    regressions = []
+    pf = out["prefix"]
+    if path.exists():
+        old = json.loads(path.read_text())
+        if "prefix" in old:
+            opf = old["prefix"]
+            # same seeds, same greedy workload -> exact counters
+            for k in ("cache_hit_rate", "prefix_tokens_reused",
+                      "prefix_tokens_total", "cow_splits", "tokens"):
+                old_v = opf["on"].get(k)
+                if old_v is not None and pf["on"][k] != old_v:
+                    regressions.append(
+                        f"prefix.on.{k}: {old_v} -> {pf['on'][k]} (exact)")
     path.write_text(json.dumps(payload, indent=2) + "\n")
     losses = []
     for key, d in out.items():
@@ -229,9 +248,25 @@ def bench_serve():
              f"p95={s['p95_ms']:.1f}ms")
         if not d["engine_wins"]:
             losses.append(key)
+    on, off = pf["on"], pf["off"]
+    _row("serve/prefix/on", 0.0,
+         f"hit_rate={on['cache_hit_rate']:.3f} "
+         f"reused={on['prefix_tokens_reused']}/{on['prefix_tokens_total']} "
+         f"cow={on['cow_splits']} chunks={on['prefill_chunks']} "
+         f"ttft_p95={on['ttft']['p95_ms']:.1f}ms")
+    _row("serve/prefix/off", 0.0,
+         f"ttft_p95={off['ttft']['p95_ms']:.1f}ms "
+         f"(reduction {pf['ttft_p95_reduction'] * 100:+.1f}%)")
     _row("serve/written", 0.0, str(path))
     # persisted first so a noisy wall-clock loss stays diagnosable
     assert not losses, f"continuous batching lost at {losses}: see {path}"
+    assert pf["on"]["cache_hit_rate"] > 0, "prefix cache never hit"
+    # wall-clock floor, not a point estimate: the cache must never make
+    # TTFT materially WORSE than cache-off (CPU jitter tolerance 10%)
+    assert pf["ttft_p95_reduction"] > -0.10, \
+        f"prefix cache regressed TTFT p95 by " \
+        f"{-pf['ttft_p95_reduction'] * 100:.1f}%: see {path}"
+    assert not regressions, "; ".join(regressions) + f": see {path}"
 
 
 def bench_resilience():

@@ -63,6 +63,14 @@ def main():
                     help="per-request time-to-first-token budget (0 = none)")
     ap.add_argument("--max-waiting", type=int, default=0,
                     help="bound on the admission queue (0 = unbounded)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache: shared prompt prefixes reuse "
+                         "refcounted pool pages, divergent tails split "
+                         "copy-on-write (DESIGN.md §12)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill width interleaved with decode "
+                         "steps (0 = monolithic bucketed prefill; the "
+                         "prefix cache auto-chunks when 0)")
     args = ap.parse_args()
 
     import jax
@@ -92,7 +100,8 @@ def main():
     engine = InferenceEngine(model, mesh, params, EngineConfig(
         n_slots=args.n_slots, block_size=args.block_size,
         num_blocks=args.num_blocks, max_seq_len=args.max_seq_len,
-        max_waiting=args.max_waiting))
+        max_waiting=args.max_waiting, prefix_cache=args.prefix_cache,
+        prefill_chunk=args.prefill_chunk))
 
     plens = [int(x) for x in args.prompt_lens.split(",")]
     rng = np.random.RandomState(0)
@@ -137,6 +146,14 @@ def main():
           f"nan_quarantines={s.nan_quarantines} "
           f"batch_shrinks={s.batch_shrinks} "
           f"dropped_steps={s.dropped_steps}")
+    if args.prefix_cache or args.prefill_chunk:
+        print(f"prefix: hit_rate={s.cache_hit_rate():.3f} "
+              f"hits={s.prefix_hits}/{s.prefix_lookups} "
+              f"tokens_reused={s.prefix_tokens_reused}/"
+              f"{s.prefix_tokens_total} cow_splits={s.cow_splits} "
+              f"evictions={s.cache_evictions} "
+              f"prefill_chunks={s.prefill_chunks} "
+              f"cached_nodes={len(engine.prefix) if engine.prefix else 0}")
 
 
 if __name__ == "__main__":

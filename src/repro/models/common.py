@@ -388,3 +388,102 @@ def paged_attention(q, pool_k, pool_v, table, pos, *, kv_map=None,
     return decode_attention(q, k, v, cur_pos=pos, kv_map=None,
                             local_window=local_window,
                             softmax_scale=softmax_scale, pos_mask=pos_mask)
+
+
+# ---------------------------------------------------------------------------
+# Chunked-prefill primitives (serve/ prefix cache + chunk interleave;
+# DESIGN.md §12).  A chunk step processes C consecutive prompt positions per
+# batch slot against the same paged pool the decode step uses; per-slot
+# chunk starts differ, so positions/masks carry a [B, C] batch axis that
+# the train-path blockwise attention (one shared q_pos vector) cannot
+# express.
+# ---------------------------------------------------------------------------
+
+def chunk_pos_mask(positions, S: int, local_window: int = 0):
+    """[B, C, S] causal validity mask for a prefill chunk.
+
+    positions: [B, C] absolute q positions (garbage in padded rows is fine:
+    the attend below keeps every row finite and callers only read rows
+    inside their chunk length).  Position-only — hoisted out of the layer
+    scan like decode_pos_mask."""
+    kv = jnp.arange(S)
+    mask = kv[None, None, :] <= positions[:, :, None]
+    if local_window > 0:
+        mask &= kv[None, None, :] > (positions[:, :, None] - local_window)
+    return mask
+
+
+def paged_chunk_indices(table, positions, bs: int, valid):
+    """(blk, off) [B, C] scatter coordinates for a whole prefill chunk.
+
+    Padded entries (``valid`` False) are redirected to the group's scratch
+    block (local id 0) at offset 0 — garbage writes land where they are
+    masked by construction.  Position-only; hoisted out of the layer scan."""
+    nb = table.shape[1]
+    blk_i = jnp.clip(positions // bs, 0, nb - 1)
+    blk = jnp.take_along_axis(table, blk_i, axis=1)
+    blk = jnp.where(valid, blk, 0)
+    off = jnp.where(valid, positions % bs, 0)
+    return blk, off
+
+
+def paged_update_chunk(pool, table, positions, new_k, new_v, valid,
+                       idx=None):
+    """Scatter a C-position chunk of K/V into the pool.
+
+    pool: {"k","v": [P_loc, bs, Hkv, D]}; positions: [B, C] absolute;
+    new_k/new_v: [B, C, Hkv, D]; valid: [B, C].  ``idx`` is the hoisted
+    paged_chunk_indices.  Invalid entries write garbage into the scratch
+    block (masked by contract), exactly like retired decode slots."""
+    bs = pool["k"].shape[1]
+    blk, off = (idx if idx is not None
+                else paged_chunk_indices(table, positions, bs, valid))
+    k = pool["k"].at[blk, off].set(new_k.astype(pool["k"].dtype))
+    v = pool["v"].at[blk, off].set(new_v.astype(pool["v"].dtype))
+    return dict(pool, k=k, v=v)
+
+
+def chunk_attention(q, k_cache, v_cache, *, mask, softmax_scale=None,
+                    kv_map=None):
+    """Causal attention of a C-token chunk against a contiguous KV view.
+
+    q: [B, C, Hq, D]; k_cache/v_cache: [B, S, H, D] (H == Hq when the GQA
+    map was folded into the gather, else Hkv with contiguous grouping);
+    mask: [B, C, S] from chunk_pos_mask.  Full-score fp32 masked softmax —
+    no online accumulation — so the result is independent of how the
+    prompt was split into chunks (chunked == monolithic prefill
+    numerics-for-numerics, which the greedy parity checks lean on).
+    Fully-masked rows (padding) come out zero, not NaN."""
+    B, C, Hq, D = q.shape
+    S, H = k_cache.shape[1], k_cache.shape[2]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    if kv_map is not None:
+        k_cache = jnp.take(k_cache, kv_map, axis=2)
+        v_cache = jnp.take(v_cache, kv_map, axis=2)
+        H = Hq
+    row_has = jnp.any(mask, axis=-1)[:, None, :, None]   # [B, 1, C, 1]
+    if H == Hq:
+        s = jnp.einsum("bchd,bshd->bhcs", q, k_cache,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(mask[:, None], s, -jnp.inf)
+        s = jnp.where(row_has, s, 0.0)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(row_has, p, 0.0)
+        out = jnp.einsum("bhcs,bshd->bhcd", p.astype(v_cache.dtype), v_cache,
+                         preferred_element_type=jnp.float32)
+        out = out.transpose(0, 2, 1, 3)                  # [B, C, Hq, Dv]
+    else:
+        g = Hq // H
+        qg = q.reshape(B, C, H, g, D)
+        s = jnp.einsum("bchgd,bshd->bhgcs", qg, k_cache,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(mask[:, None, None], s, -jnp.inf)
+        rh = row_has[:, :, None]                         # [B, 1, 1, C, 1]
+        s = jnp.where(rh, s, 0.0)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(rh, p, 0.0)
+        out = jnp.einsum("bhgcs,bshd->bhgcd", p.astype(v_cache.dtype),
+                         v_cache, preferred_element_type=jnp.float32)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(
+            B, C, Hq, v_cache.shape[-1])
+    return out.astype(q.dtype)

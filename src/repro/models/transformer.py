@@ -400,6 +400,67 @@ class DenseLM:
                                  vocab_real=self.cfg.vocab_size)
         return logits, new_pool
 
+    def _block_chunk_paged(self, p, x, pool_l, table, ops, *, positions,
+                           valid, idx, mask, kv_map):
+        """Chunked-prefill analogue of _block_decode_paged: scatter C new
+        positions per slot into the pool, then attend the whole chunk
+        against the request's pages (update-then-attend, so a COW donor's
+        stale tail is overwritten before it could ever be visible — and the
+        causal mask hides whatever this chunk didn't reach)."""
+        cfg = self.cfg
+        h = self._norm(ops, x, p["ln1"], p.get("ln1b"))
+        q, k, v = self._qkv(p, h, ops, positions)
+        pool_l = cm.paged_update_chunk(pool_l, table, positions, k, v,
+                                       valid, idx=idx)
+        kg, vg = cm.paged_gather(pool_l["k"], pool_l["v"], table, kv_map)
+        out = cm.chunk_attention(q, kg, vg, mask=mask)
+        x = x + self._attn_out(p, out, ops, self._head_mask(ops))
+        h2 = self._norm(ops, x, p["ln2"], p.get("ln2b"))
+        x = x + self._mlp(p, h2, ops)
+        return x, pool_l
+
+    def prefill_chunk_paged(self, params, pool, table, ids, pos, lens, ops):
+        """Prefill C prompt positions per slot straight into the block pool.
+
+        ids: [B', C] host token layout (chunk tokens, 0-padded); table:
+        [B_loc, nb] LOCAL block ids; pos: [B_loc] chunk start positions;
+        lens: [B_loc] valid positions this chunk (0 = idle slot).  Returns
+        (full-vocab logits [B_loc, v_pad] at each slot's LAST valid chunk
+        position — only meaningful for slots whose prompt completes this
+        chunk — and the updated pool).  The chunk attention is the fp32
+        full-score jnp path regardless of attn_impl (per-slot chunk starts
+        are outside the flash kernel's static q_start contract); decode
+        steps keep their configured kernel."""
+        x = ops.embed(ids, params["embed"]).astype(self.cdt)
+        cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt)
+                                      if a.dtype == self.pdt and a.ndim > 1
+                                      else a, t)
+        # hoisted position-only work, shared by every layer in the scan
+        bs = pool["k"].shape[2]
+        C = x.shape[1]
+        positions = pos[:, None] + jnp.arange(C, dtype=pos.dtype)
+        valid = jnp.arange(C, dtype=lens.dtype)[None, :] < lens[:, None]
+        idx = cm.paged_chunk_indices(table, positions, bs, valid)
+        mask = cm.chunk_pos_mask(positions, table.shape[1] * bs,
+                                 self.cfg.local_window) & valid[:, :, None]
+        kv_map = None if self.kv_shard else self._kv_map(ops)
+
+        def body(xx, xs):
+            bp, pl = xs
+            y, pl2 = self._block_chunk_paged(cast(bp), xx, pl, table, ops,
+                                             positions=positions,
+                                             valid=valid, idx=idx,
+                                             mask=mask, kv_map=kv_map)
+            return y, pl2
+
+        x, new_pool = lax.scan(body, x, (params["blocks"], pool))
+        x = self._norm(ops, x, params["ln_f"], params.get("ln_fb"))
+        last = jnp.clip(lens - 1, 0, C - 1)
+        xi = jnp.take_along_axis(x, last[:, None, None], axis=1)
+        logits = ops.head_logits(xi, params["head"].astype(self.cdt),
+                                 vocab_real=self.cfg.vocab_size)
+        return logits, new_pool
+
     def prefill_cache_specs(self, ops):
         """Cache specs in prefill layout: batch over data, seq sharded over
         the sequence-parallel axes (kept local — no gathered-cache output)."""

@@ -30,6 +30,7 @@ chaos tests assert.
 """
 from __future__ import annotations
 
+import re
 import zlib
 from dataclasses import dataclass, field, replace
 
@@ -42,6 +43,7 @@ SITES = {
     "ckpt.write": ("corrupt",),
     "serve.step": ("device_loss", "straggler", "drop_step", "pool_exhaust"),
     "serve.logits": ("nan", "inf"),
+    "serve.prefix": ("evict", "flush"),
 }
 
 
@@ -94,9 +96,12 @@ def _parse_spec(text: str) -> FaultSpec:
     ``serve.logits@3:nan(1)x2``."""
     t = text.strip()
     attempts = 1
-    if "x" in t.rsplit(")", 1)[-1]:
-        t, _, a = t.rpartition("x")
-        attempts = int(a)
+    # only a trailing x<digits> is an attempts suffix — an "x" inside a
+    # site or kind name (serve.prefix, flush) is plain spelling
+    m = re.search(r"x(\d+)$", t)
+    if m:
+        attempts = int(m.group(1))
+        t = t[:m.start()]
     loc, _, rest = t.partition(":")
     site, _, step = loc.partition("@")
     kind, arg, mode = rest, 0.0, ""

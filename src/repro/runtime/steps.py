@@ -818,6 +818,123 @@ def build_paged_decode_step(model, mesh, n_slots: int, num_blocks: int,
                       mesh=mesh, plan=plan)
 
 
+def build_chunk_prefill_step(model, mesh, n_slots: int, chunk: int,
+                             num_blocks: int, block_size: int,
+                             max_blocks: int):
+    """Chunked prefill against the SAME mesh-sharded paged pool as decode.
+
+    fn(params, pool, tables, pos, lens, ids) -> (logits, pool)
+
+    - ids: [n_slots, chunk] int32 host-layout prompt tokens (0-padded).
+    - pos: [n_slots] int32 chunk start (== tokens already cached).
+    - lens: [n_slots] int32 valid positions this chunk (0 = idle slot).
+    - logits: [n_slots, v_pad] rows taken at each slot's last valid chunk
+      position — the sampler reads them only for slots whose prompt
+      completes this chunk.
+
+    One compile per chunk width; the engine reuses the decode plan's
+    sharding (tables/pos/lens group-sharded, ids over the token axes), so
+    interleaving chunk and decode steps never reshards the pool.
+    """
+    from ..core.ops import kv_group_axes
+    from ..core import collectives as col_mod
+
+    ctx = model.ctx
+    plan = make_plan(ctx, ShapeSpec("paged", 1, n_slots, "decode"))
+    ops = make_ops(ctx, plan)
+    specs = model.specs(ops)
+    pool_sds, pool_specs = model.paged_cache_abstract(num_blocks, block_size,
+                                                      plan)
+    gaxes = kv_group_axes(ctx, plan)
+    sizes = dict(data=ctx.data, depth=ctx.depth, row=ctx.rows, col=ctx.cols)
+    n_groups = 1
+    for a in gaxes:
+        n_groups *= sizes[a]
+    bpg = num_blocks // n_groups
+
+    table_spec = _group_spec(gaxes, None)
+    pos_spec = _group_spec(gaxes)
+    logits_spec = _group_spec(gaxes, None)
+    ids_spec = ops.spec_tokens_in()
+
+    def local_step(params, pool, tables, pos, lens, ids):
+        if gaxes:
+            tables = tables - col_mod.axis_linear_index(gaxes) * bpg
+        logits, new_pool = model.prefill_chunk_paged(params, pool, tables,
+                                                     ids, pos, lens, ops)
+        return logits, new_pool
+
+    tables_sds = jax.ShapeDtypeStruct((n_slots, max_blocks), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
+    lens_sds = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
+    ids_sds = jax.ShapeDtypeStruct((n_slots, chunk), jnp.int32)
+
+    in_specs = (specs, pool_specs, table_spec, pos_spec, pos_spec, ids_spec)
+    out_specs = (logits_spec, pool_specs)
+    in_sh = (_shardings(mesh, specs), _shardings(mesh, pool_specs),
+             NamedSharding(mesh, table_spec), NamedSharding(mesh, pos_spec),
+             NamedSharding(mesh, pos_spec), NamedSharding(mesh, ids_spec))
+    out_sh = (NamedSharding(mesh, logits_spec), _shardings(mesh, pool_specs))
+    smapped = shard_map(local_step, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs)
+    fn = jax.jit(smapped, donate_argnums=(1,), in_shardings=in_sh,
+                 out_shardings=out_sh)
+    abs_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return StepBundle(fn=fn,
+                      abstract_inputs=(abs_params, pool_sds, tables_sds,
+                                       pos_sds, lens_sds, ids_sds),
+                      in_shardings=in_sh, out_shardings=out_sh,
+                      mesh=mesh, plan=plan)
+
+
+def build_page_copy(model, mesh, num_blocks: int, block_size: int,
+                    decode_plan):
+    """Device-side COW page copy: pool pages ``src`` -> pages ``dst``.
+
+    Returns copy(pool, src, dst) -> pool with
+    ``pool[leaf][:, dst] = pool[leaf][:, src]`` (every layer at once).
+    src/dst are [n] GLOBAL block ids replicated to every device; a src/dst
+    pair lives inside ONE KV group, whose shard performs the real copy —
+    on every other group the pair falls outside the local block range and
+    degenerates to a scratch->scratch no-op.  The prefix cache uses this
+    to clone a shared donor page into a request's private block before the
+    divergent suffix overwrites it.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from ..core.ops import kv_group_axes
+    from ..core import collectives as col_mod
+
+    ctx = model.ctx
+    _, pool_specs = model.paged_cache_abstract(num_blocks, block_size,
+                                               decode_plan)
+    gaxes = kv_group_axes(ctx, decode_plan)
+    sizes = dict(data=ctx.data, depth=ctx.depth, row=ctx.rows, col=ctx.cols)
+    n_groups = 1
+    for a in gaxes:
+        n_groups *= sizes[a]
+    bpg = num_blocks // n_groups
+    ids_spec = P()
+
+    def local_copy(pool, src, dst):
+        if gaxes:
+            off = col_mod.axis_linear_index(gaxes) * bpg
+            src = src - off
+            dst = dst - off
+            mine = (dst >= 0) & (dst < bpg) & (src >= 0) & (src < bpg)
+            src = jnp.where(mine, src, 0)
+            dst = jnp.where(mine, dst, 0)
+        return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), pool)
+
+    in_sh = (_shardings(mesh, pool_specs), NamedSharding(mesh, ids_spec),
+             NamedSharding(mesh, ids_spec))
+    smapped = shard_map(local_copy, mesh=mesh,
+                       in_specs=(pool_specs, ids_spec, ids_spec),
+                       out_specs=pool_specs)
+    return jax.jit(smapped, donate_argnums=(0,), in_shardings=in_sh,
+                   out_shardings=_shardings(mesh, pool_specs))
+
+
 def build_paged_reshard(model, mesh, n_pre: int, bucket: int,
                         num_blocks: int, block_size: int, decode_plan):
     """Prefill->paged-pool cache reshard (replaces the prompt-replay hack).

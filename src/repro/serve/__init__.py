@@ -6,15 +6,18 @@ Public surface:
     SamplingParams                    — per-request sampling (serve/sampling.py)
     Request, Scheduler                — admission/preemption (serve/scheduler.py)
     PagedCacheConfig, PagedKVCache    — mesh-sharded block pool (serve/kv_cache.py)
+    RadixPrefixCache, PrefixHit       — shared-prompt index (serve/prefix_cache.py)
 """
 from .engine import (EngineConfig, EngineStats, InferenceEngine,
                      QueueFullError)
 from .kv_cache import BlockPool, PagedCacheConfig, PagedKVCache
+from .prefix_cache import PrefixHit, RadixPrefixCache
 from .sampling import SamplingParams, sample_tokens
 from .scheduler import Request, Scheduler
 
 __all__ = [
     "BlockPool", "EngineConfig", "EngineStats", "InferenceEngine",
-    "PagedCacheConfig", "PagedKVCache", "QueueFullError", "Request",
-    "SamplingParams", "Scheduler", "sample_tokens",
+    "PagedCacheConfig", "PagedKVCache", "PrefixHit", "QueueFullError",
+    "RadixPrefixCache", "Request", "SamplingParams", "Scheduler",
+    "sample_tokens",
 ]

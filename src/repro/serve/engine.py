@@ -28,9 +28,11 @@ import numpy as np
 
 from ..configs.base import ShapeSpec
 from ..runtime import faults as faults_mod
-from ..runtime.steps import (build_paged_decode_step, build_paged_reshard,
+from ..runtime.steps import (build_chunk_prefill_step, build_page_copy,
+                             build_paged_decode_step, build_paged_reshard,
                              build_prefill_step, make_plan)
 from .kv_cache import PagedCacheConfig, PagedKVCache
+from .prefix_cache import RadixPrefixCache
 from .sampling import SamplingParams, sample_tokens, slot_arrays
 from .scheduler import FAILED, RUNNING, WAITING, Request, Scheduler
 
@@ -54,6 +56,11 @@ class EngineConfig:
     nan_retry_limit: int = 2     # quarantine->re-prefill rounds before FAILED
     oom_shrink_after: int = 2    # consecutive preemption-storm steps -> shrink
     oom_recover_after: int = 8   # consecutive calm steps -> grow back
+    # --- shared-prompt serving (DESIGN.md §12) ---
+    prefix_cache: bool = False   # radix prefix index over the block pool
+    prefill_chunk: int = 0       # chunked prefill width (0 = monolithic;
+    #                              prefix_cache implies the chunked path
+    #                              with an auto-sized chunk)
 
 
 def _pcts(vals, qs=(50, 95, 99)):
@@ -82,9 +89,22 @@ class EngineStats:
     batch_shrinks: int = 0       # max_active reductions after OOM storms
     pool_exhaust_events: int = 0 # injected KV-pool exhaustion windows
     dropped_steps: int = 0       # injected lost engine iterations
+    # --- shared-prompt serving (DESIGN.md §12) ---
+    prefix_lookups: int = 0      # admissions that consulted the radix cache
+    prefix_hits: int = 0         # admissions that reused cached pages
+    prefix_tokens_reused: int = 0  # prompt positions served from shared pages
+    prefix_tokens_total: int = 0   # prompt positions admitted while cache on
+    cow_splits: int = 0          # copy-on-write donor-page copies
+    cache_evictions: int = 0     # cold cache leaves dropped for capacity
+    prefill_chunks: int = 0      # chunked-prefill step invocations
 
     def tokens_per_s(self) -> float:
         return self.tokens / self.wall if self.wall else 0.0
+
+    def cache_hit_rate(self) -> float:
+        """Fraction of admitted prompt tokens served from shared pages."""
+        return (self.prefix_tokens_reused / self.prefix_tokens_total
+                if self.prefix_tokens_total else 0.0)
 
     def latency_percentiles(self):
         return _pcts(self.token_times)
@@ -107,6 +127,7 @@ class InferenceEngine:
         self._hostage = None     # injected pool-exhaustion hold
         self._oom_streak = 0     # consecutive steps with preemptions
         self._calm_streak = 0    # consecutive steps without
+        self._evict_carry = 0    # cache evictions from pre-replan cache objs
         self._build()
 
     # ---------------------------------------------------------------- build
@@ -147,6 +168,19 @@ class InferenceEngine:
             self._seq_div = ctx.cols
         else:
             self._seq_div = ctx.depth * ctx.rows
+        # shared-prompt serving (DESIGN.md §12): the prefix cache implies
+        # the chunked paged prefill path — a hit resumes mid-prompt, which
+        # the monolithic bucketed prefill cannot do without rewriting the
+        # shared pages it is supposed to reuse.
+        self._chunked = bool(cfg.prefix_cache or cfg.prefill_chunk > 0)
+        self.prefix = None
+        self._page_copy = None
+        if cfg.prefix_cache:
+            self.prefix = RadixPrefixCache(self.cache.pool, cfg.block_size)
+            self.sched.prefix_cache = self.prefix
+            self._page_copy = build_page_copy(
+                model, mesh, cfg.num_blocks, cfg.block_size, self.plan)
+        self._chunk_bundles = {}     # chunk width -> StepBundle
         if not hasattr(self, "stats"):      # survives replan rebuilds
             self.stats = EngineStats()
             self.requests = []
@@ -305,6 +339,121 @@ class InferenceEngine:
                 self.sched.retire(req)
         return emitted
 
+    # ---------------------------------------------------- chunked prefill
+    def _chunk_width(self, remaining: int) -> int:
+        """Chunked-prefill width: the configured chunk, or (auto, when the
+        prefix cache turned chunking on) the smallest power-of-two multiple
+        of block_size covering the longest pending suffix, capped at the
+        pool's maximum resident length."""
+        if self.cfg.prefill_chunk > 0:
+            return self.cfg.prefill_chunk
+        cap = self.cache.max_blocks * self.cfg.block_size
+        c = self.cfg.block_size
+        while c < remaining and c < cap:
+            c = min(c * 2, cap)
+        return c
+
+    def _chunk_for(self, width: int):
+        if width not in self._chunk_bundles:
+            self._chunk_bundles[width] = build_chunk_prefill_step(
+                self.model, self.mesh, self.cfg.n_slots, width,
+                self.cfg.num_blocks, self.cfg.block_size,
+                self.cache.max_blocks)
+        return self._chunk_bundles[width]
+
+    def _apply_prefix_hits(self, admitted) -> None:
+        """Consume the PrefixHit the scheduler attached at admission: count
+        reuse, copy the COW donor page into the request's first private
+        block, and mark the shared prefix as already materialized so the
+        chunked prefill starts at the divergence point."""
+        for req in admitted:
+            hit = req.prefix_hit
+            self.stats.prefix_lookups += 1
+            self.stats.prefix_tokens_total += len(req.seq_tokens)
+            if hit is None or hit.tokens == 0:
+                continue
+            if hit.cow_len:
+                # the suffix prefill overwrites positions >= cow_len; the
+                # causal mask hides the stale donor tail until then
+                dst = req.block_ids[len(hit.full_blocks)]
+                self.pool = self._page_copy(
+                    self.pool, np.array([hit.cow_src], np.int32),
+                    np.array([dst], np.int32))
+                self.stats.cow_splits += 1
+            req.num_cached = hit.tokens
+            self.stats.prefix_hits += 1
+            self.stats.prefix_tokens_reused += hit.tokens
+
+    def _run_chunk_prefills(self) -> int:
+        """One fixed-shape chunked-prefill step for every mid-prefill slot
+        (running requests with no last_token yet).  Interleaves with
+        decode: each engine step advances every pending prompt by one
+        chunk, then the decode batch runs for the slots that already hold
+        a token.  Prompts that complete this chunk sample their first
+        token (at position len(seq), like the monolithic prefill) and are
+        indexed into the radix tree."""
+        pending = [r for r in self.sched.running if r.last_token is None]
+        if not pending:
+            return 0
+        n = self.cfg.n_slots
+        width = self._chunk_width(
+            max(len(r.seq_tokens) - r.num_cached for r in pending))
+        ids = np.zeros((n, width), np.int32)
+        pos = np.zeros((n,), np.int32)
+        lens = np.zeros((n,), np.int32)
+        slot_blocks = [[] for _ in range(n)]
+        groups = [self.sched.group_of_slot(s) for s in range(n)]
+        samplings = [SamplingParams()] * n
+        take = {}
+        for req in pending:
+            s = req.slot
+            seq = req.seq_tokens
+            t = min(width, len(seq) - req.num_cached)
+            ids[s, :t] = seq[req.num_cached:req.num_cached + t]
+            pos[s] = req.num_cached
+            lens[s] = t
+            slot_blocks[s] = req.block_ids
+            samplings[s] = req.sampling
+            take[req.rid] = t
+        tables = self.cache.make_table(slot_blocks, groups)
+        bundle = self._chunk_for(width)
+        logits, self.pool = bundle.fn(self.params, self.pool, tables,
+                                      pos, lens, ids)
+        self.stats.prefill_chunks += 1
+        finishing = [r for r in pending
+                     if r.num_cached + take[r.rid] == len(r.seq_tokens)]
+        emitted = 0
+        if finishing:
+            ok = self._finite_rows(logits)
+            temps, ks, ps, seeds = slot_arrays(samplings)
+            toks = np.asarray(sample_tokens(logits, temps, ks, ps, seeds,
+                                            pos + lens))
+        for req in pending:
+            if req not in finishing:
+                req.num_cached += take[req.rid]
+                continue
+            if not ok[req.slot]:
+                # poisoned chunk: quarantine just this request (bounded
+                # re-prefill replay); every other slot proceeds
+                self._quarantine(req)
+                continue
+            req.num_cached = len(req.seq_tokens)
+            if self.prefix is not None:
+                # only fully-covered prompt blocks are indexed (insert
+                # stops at len // block_size), so decode's appends at
+                # positions >= len(seq) never touch a shared page
+                self.prefix.insert(groups[req.slot], req.seq_tokens,
+                                   req.block_ids)
+            tok = int(toks[req.slot])
+            req.out_tokens.append(tok)
+            req.last_token = tok
+            self._record_emit(req)
+            emitted += 1
+        for req in finishing:
+            if req.state == RUNNING and req.finished:
+                self.sched.retire(req)
+        return emitted
+
     # ------------------------------------------------------ fault plumbing
     def _exhaust_pool(self, idx: int, hold_steps: int) -> None:
         """Injected KV-pool exhaustion: take every free block hostage for
@@ -338,6 +487,19 @@ class InferenceEngine:
                 print(f"[fault] serve step {idx}: device loss -> replan to "
                       f"{int(spec.arg)} devices")
                 self.replan_to(int(spec.arg))
+        for spec in self.injector.fire("serve.prefix", idx):
+            if self.prefix is None:
+                continue
+            if spec.kind == "flush":
+                n = self.prefix.flush()
+                print(f"[fault] serve step {idx}: prefix-cache flush "
+                      f"dropped {n} pages")
+            elif spec.kind == "evict":
+                # forced eviction pressure: only refcount-1 leaves may go,
+                # so pages shared with running requests must survive this
+                want = max(1, int(spec.arg))
+                for g in range(self.cache.n_groups):
+                    self.prefix.evict(g, want)
         return dropped
 
     def _poison_logits(self, logits, idx: int):
@@ -356,6 +518,9 @@ class InferenceEngine:
         degraded = (self.sched.max_active < self.cfg.n_slots
                     or self._hostage is not None)
         self.stats.health = "degraded" if degraded else "healthy"
+        if self.prefix is not None:
+            self.stats.cache_evictions = (self._evict_carry
+                                          + self.prefix.evictions)
 
     # ---------------------------------------------------------------- step
     def step(self):
@@ -375,10 +540,21 @@ class InferenceEngine:
             self._update_health()
             return []
         admitted = self.sched.admit()
-        prefill_emitted = self._run_prefills(admitted) if admitted else 0
+        if self.sched.admission_failures:
+            self.stats.failed += len(self.sched.admission_failures)
+            self.sched.admission_failures.clear()
+        if self._chunked:
+            if self.prefix is not None and admitted:
+                self._apply_prefix_hits(admitted)
+            prefill_emitted = self._run_chunk_prefills()
+        else:
+            prefill_emitted = self._run_prefills(admitted) if admitted else 0
         preempted = self.sched.ensure_decode_capacity()
         self.stats.preemptions += len(preempted)
-        running = self.sched.running
+        # mid-chunk-prefill requests (last_token still None) sit out the
+        # decode batch; their slots degrade to scratch like retired ones
+        running = [r for r in self.sched.running
+                   if r.last_token is not None]
         emitted = []
         if running:
             n = self.cfg.n_slots
@@ -476,6 +652,10 @@ class InferenceEngine:
         # injected pool-exhaustion hostages hold OLD pool block ids — drop
         # them rather than freeing stale ids into the rebuilt pool
         self._hostage = None
+        # cached page ids die with the old pool: the rebuilt cache starts
+        # empty; its eviction count carries into the stats
+        if self.prefix is not None:
+            self._evict_carry += self.prefix.evictions
         old_sched = self.sched
         old_pool_np = {k: np.asarray(v) for k, v in self.pool.items()}
         params_np = jax.tree.map(np.asarray, self.params)
@@ -497,6 +677,7 @@ class InferenceEngine:
         self.sched.waiting = old_sched.waiting
         self.sched._admit_clock = old_sched._admit_clock
         self.sched.max_active = old_sched.max_active
+        self.sched.admission_failures = old_sched.admission_failures
         new_pool_np = {k: np.array(v) for k, v in self.pool.items()}
         for slot in range(min(len(old_sched.slots), self.cfg.n_slots)):
             req = old_sched.slots[slot]

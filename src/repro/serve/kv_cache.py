@@ -37,6 +37,13 @@ class BlockPool:
 
     Allocation and liberation are O(1) list ops; ids are global.  The
     scheduler uses ``available`` for admission and preemption decisions.
+
+    Blocks are refcounted so the prefix cache can share pages between
+    requests: ``alloc`` hands out blocks at refcount 1, ``ref`` adds a
+    holder, and ``free`` drops one holder — the block returns to the
+    freelist only when the last holder releases it.  The legacy
+    single-owner flow (alloc -> free) is the refcount-1 special case and
+    behaves exactly as before, including the double-free guard.
     """
 
     def __init__(self, n_groups: int, blocks_per_group: int):
@@ -50,6 +57,7 @@ class BlockPool:
         self._free = [list(range(g * blocks_per_group + 1,
                                  (g + 1) * blocks_per_group))
                       for g in range(n_groups)]
+        self._rc = {}            # block id -> live holder count (absent == 0)
 
     def available(self, group: int) -> int:
         return len(self._free[group])
@@ -63,6 +71,9 @@ class BlockPool:
     def group_of(self, block_id: int) -> int:
         return block_id // self.blocks_per_group
 
+    def refcount(self, block_id: int) -> int:
+        return self._rc.get(block_id, 0)
+
     def alloc(self, group: int, n: int):
         """Pop ``n`` blocks from ``group``'s freelist; None if they don't fit."""
         free = self._free[group]
@@ -70,16 +81,31 @@ class BlockPool:
             return None
         out = free[:n]
         del free[:n]
+        for b in out:
+            self._rc[b] = 1
         return out
 
+    def ref(self, block_ids) -> None:
+        """Add a holder to already-allocated blocks (prefix-cache sharing)."""
+        for b in block_ids:
+            if self._rc.get(b, 0) < 1:
+                raise ValueError(f"ref of unallocated block {b}")
+            self._rc[b] += 1
+
     def free(self, block_ids) -> None:
+        """Drop one holder per block; last holder returns it to the freelist."""
         for b in block_ids:
             g = self.group_of(b)
             if b == self.scratch(g):
                 raise ValueError(f"cannot free scratch block {b}")
-            if b in self._free[g]:
+            rc = self._rc.get(b, 0)
+            if rc < 1:
                 raise ValueError(f"double free of block {b}")
-            self._free[g].append(b)
+            if rc == 1:
+                del self._rc[b]
+                self._free[g].append(b)
+            else:
+                self._rc[b] = rc - 1
 
 
 class PagedKVCache:

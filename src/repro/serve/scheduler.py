@@ -61,6 +61,7 @@ class Request:
         self.last_token = None       # next decode step's input token
         self.preemptions = 0
         self.admit_seq = -1          # admission order (preemption priority)
+        self.prefix_hit = None       # PrefixHit consumed by the engine
 
     @property
     def seq_tokens(self):
@@ -100,6 +101,13 @@ class Scheduler:
         # it back once the pool calms down.  Only gates NEW admissions —
         # requests already running are never evicted by a cap change.
         self.max_active = n_slots
+        # Optional RadixPrefixCache (engine attaches it): admission then
+        # consults the cache for shared prefix pages.  None keeps the
+        # legacy slot-major admission byte-for-byte.
+        self.prefix_cache = None
+        # Requests FAILED at admission (prompt can never be resident, e.g.
+        # after an elastic shrink); the engine drains this list.
+        self.admission_failures: list = []
 
     # ------------------------------------------------------------- helpers
     def group_of_slot(self, slot: int) -> int:
@@ -127,6 +135,23 @@ class Scheduler:
     def admit(self):
         """Fill free slots from the waiting queue; returns admitted requests
         (the engine prefills them and sets num_cached/last_token)."""
+        # A request whose resident sequence can never fit the pool (possible
+        # after an elastic shrink rebuilt a smaller cache) would otherwise
+        # sit unadmittable forever and wedge the engine loop: FAIL it here
+        # with a clear reason.  On an unchanged cache this never fires —
+        # add() already gated fits(target_len) >= fits(len(seq)+1).
+        for req in [r for r in self.waiting
+                    if not self.cache.fits(len(r.seq_tokens) + 1)]:
+            self.waiting.remove(req)
+            req.state = FAILED
+            req.fail_reason = (
+                f"prompt of {len(req.seq_tokens)} tokens can never be "
+                f"resident: needs {self.cache.blocks_for(len(req.seq_tokens) + 1)} "
+                f"blocks, pool capacity is {self.cache.pool.capacity(0)} "
+                f"blocks/group")
+            self.admission_failures.append(req)
+        if self.prefix_cache is not None:
+            return self._admit_with_prefix_cache()
         admitted = []
         for slot in range(self.n_slots):
             if len(self.running) >= self.max_active:
@@ -159,6 +184,54 @@ class Scheduler:
             admitted.append(pick)
         return admitted
 
+    def _admit_with_prefix_cache(self):
+        """Admission consulting the radix cache: a hit's full blocks are
+        shared (pool.ref), only the remainder is freshly allocated, and a
+        dry freelist first evicts cold cache leaves before giving up on a
+        candidate.  Same FCFS-with-holes policy as the legacy loop."""
+        pc = self.prefix_cache
+        admitted = []
+        for slot in range(self.n_slots):
+            if len(self.running) >= self.max_active:
+                break
+            if self.slots[slot] is not None:
+                continue
+            g = self.group_of_slot(slot)
+            pick = hit = None
+            for req in self.waiting:
+                seq = req.seq_tokens
+                h = pc.lookup(g, seq, len(seq) - 1)
+                need_new = (self.cache.blocks_for(len(seq) + 1)
+                            - len(h.full_blocks))
+                short = need_new - self.cache.pool.available(g)
+                if short > 0:
+                    # cold shareable leaves first; the hit path is pinned
+                    pc.evict(g, short,
+                             protect=set(h.full_blocks)
+                             | ({h.cow_src} if h.cow_src is not None
+                                else set()))
+                    short = need_new - self.cache.pool.available(g)
+                if short <= 0:
+                    pick, hit = req, h
+                    break
+            if pick is None:
+                continue
+            self.waiting.remove(pick)
+            need_new = (self.cache.blocks_for(len(pick.seq_tokens) + 1)
+                        - len(hit.full_blocks))
+            fresh = self.cache.pool.alloc(g, need_new)
+            assert fresh is not None
+            self.cache.pool.ref(hit.full_blocks)   # request's own hold
+            pick.block_ids = list(hit.full_blocks) + fresh
+            pick.prefix_hit = hit
+            pick.slot = slot
+            pick.state = RUNNING
+            pick.admit_seq = self._admit_clock
+            self._admit_clock += 1
+            self.slots[slot] = pick
+            admitted.append(pick)
+        return admitted
+
     def preempt(self, req: Request) -> None:
         """Evict: free pages, fold generated tokens into the prompt, requeue
         at the front for re-prefill."""
@@ -173,6 +246,7 @@ class Scheduler:
         req.slot = None
         req.num_cached = 0
         req.last_token = None
+        req.prefix_hit = None
         req.state = WAITING
         req.preemptions += 1
         self.waiting.appendleft(req)
@@ -190,6 +264,9 @@ class Scheduler:
             while need > len(req.block_ids):
                 g = self.group_of_slot(slot)
                 got = self.cache.pool.alloc(g, 1)
+                if got is None and self.prefix_cache is not None \
+                        and self.prefix_cache.evict(g, 1):
+                    got = self.cache.pool.alloc(g, 1)
                 if got is not None:
                     req.block_ids.extend(got)
                     continue
@@ -210,4 +287,5 @@ class Scheduler:
         req.block_ids = []
         self.slots[req.slot] = None
         req.slot = None
+        req.prefix_hit = None
         req.state = FINISHED

@@ -1337,6 +1337,86 @@ def check_chaos_serve():
     print("PASS chaos_serve")
 
 
+def check_prefix_cache():
+    """ISSUE-7 acceptance: overlapping-prefix workloads keep bit-identical
+    greedy tokens cache-on vs cache-off — on q=1 and q=2 grids, under
+    cache-eviction pressure with forced ``serve.prefix`` faults (eviction
+    must respect refcounts: shared pages survive), and across an elastic
+    8 -> 4 replan — while measuring a hit rate > 0 and COW splits."""
+    import jax
+    from repro.runtime.faults import FaultInjector, FaultPlan
+    from repro.serve import EngineConfig, InferenceEngine, SamplingParams
+
+    rng = np.random.RandomState(21)
+    sys_prompt = rng.randint(0, 250, (10,)).tolist()
+    # shared system prompt + per-request suffixes: block_size 4 puts the
+    # shared/unique boundary 2 tokens into block 2 (a COW donor on every
+    # later hit); an identical twin exercises the whole-prompt-hit clamp
+    prompts = [sys_prompt + rng.randint(0, 250, (sl,)).tolist()
+               for sl in (5, 9, 2, 13, 5, 7)]
+    prompts.append(list(prompts[0]))                        # identical twin
+    prompts.append(prompts[1][:12] + rng.randint(0, 250, (6,)).tolist())
+    n_new = [6, 4, 8, 5, 7, 3, 6, 5]
+
+    def run_eng(ctx_kw, *, cache_on, num_blocks, n_slots, plan=None,
+                replan_to=0):
+        _, run, ctx, mesh, model = _build("yi-6b", ctx_kw)
+        params = model.init(jax.random.PRNGKey(0))
+        cfg = EngineConfig(n_slots=n_slots, block_size=4,
+                           num_blocks=num_blocks, max_seq_len=64,
+                           prefix_cache=cache_on)
+        inj = FaultInjector(plan) if plan is not None else None
+        e = InferenceEngine(model, mesh, params, cfg, injector=inj)
+        rs = [e.add_request(p, SamplingParams(max_new_tokens=n))
+              for p, n in zip(prompts, n_new)]
+        if replan_to:
+            e.step()
+            e.step()
+            e.replan_to(replan_to)
+        out = e.run()
+        return [out[r.rid] for r in rs], e.stats
+
+    grids = ((1, dict(mode="tesseract", data=1, depth=1, rows=1, cols=1),
+              2, 64),
+             (2, dict(mode="tesseract", data=2, depth=1, rows=2, cols=2),
+              4, 128))
+    for q, ctx_kw, n_slots, nb in grids:
+        ref, _ = run_eng(ctx_kw, cache_on=False, num_blocks=nb,
+                         n_slots=n_slots)
+        got, st = run_eng(ctx_kw, cache_on=True, num_blocks=nb,
+                          n_slots=n_slots)
+        assert got == ref, f"q={q}: cache-on diverged\n{got}\n{ref}"
+        assert st.cache_hit_rate() > 0 and st.prefix_tokens_reused > 0, \
+            "shared-prefix workload never hit the cache"
+        assert st.cow_splits >= 1, "mid-block divergence never COW-split"
+        print(f"  q={q}: parity ok, hit_rate={st.cache_hit_rate():.3f} "
+              f"({st.prefix_hits}/{st.prefix_lookups} admissions, "
+              f"{st.prefix_tokens_reused} tokens), cow={st.cow_splits}")
+
+    # tiny pool -> capacity evictions, plus forced serve.prefix faults;
+    # only refcount-1 leaves may be reclaimed, so parity must survive
+    q1 = grids[0][1]
+    ref, _ = run_eng(q1, cache_on=False, num_blocks=16, n_slots=2)
+    plan = FaultPlan.parse("serve.prefix@3:evict(2);serve.prefix@6:flush",
+                           seed=5)
+    got, st = run_eng(q1, cache_on=True, num_blocks=16, n_slots=2,
+                      plan=plan)
+    assert got == ref, f"eviction/fault parity broke\n{got}\n{ref}"
+    assert st.cache_evictions >= 1, "tiny pool never evicted a cache leaf"
+    print(f"  eviction: parity ok under {st.cache_evictions} evictions "
+          f"+ forced evict/flush faults")
+
+    # elastic 8 -> 4 replan with the cache on (index dies with the old
+    # pool; carried residents un-share into private pages)
+    q2 = grids[1][1]
+    ref, _ = run_eng(q2, cache_on=False, num_blocks=128, n_slots=4)
+    got, st = run_eng(q2, cache_on=True, num_blocks=128, n_slots=4,
+                      replan_to=4)
+    assert got == ref, f"post-replan parity broke\n{got}\n{ref}"
+    print("  replan: 8 -> 4 devices, cache flushed, bit-exact parity")
+    print("PASS prefix_cache")
+
+
 CHECKS = {
     "summa_exact": check_summa_exact,
     "ring_schedule": check_ring_schedule,
@@ -1360,6 +1440,7 @@ CHECKS = {
     "train_elastic_accum": check_train_elastic_accum,
     "chaos_train": check_chaos_train,
     "chaos_serve": check_chaos_serve,
+    "prefix_cache": check_prefix_cache,
 }
 
 

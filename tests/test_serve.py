@@ -368,3 +368,91 @@ def test_scheduler_retire_while_preempting():
     assert sched.admit() == [b]                  # evictee re-admits cleanly
     with pytest.raises(ValueError):              # double free still guarded
         cache.pool.free([b.block_ids[0], b.block_ids[0]])
+
+
+def test_scheduler_fails_unresidentable_prompt_at_admission():
+    """A waiting request whose prompt can never fit the (possibly shrunken)
+    pool is FAILED at admission with a clear reason instead of wedging the
+    engine loop forever."""
+    from repro.serve.scheduler import Scheduler
+    cache = _FakeCache(blocks_per_group=9)          # capacity 8
+    sched = Scheduler(cache, n_slots=1)
+    r = sched.add(_sreq(28, new=2))                 # blocks_for(29) = 8: ok
+    # elastic shrink rebuilt a smaller pool under the same waiting queue
+    sched.cache = _FakeCache(blocks_per_group=5)    # capacity 4
+    assert sched.admit() == []
+    assert r.state == "failed"
+    assert "never be resident" in r.fail_reason
+    assert sched.admission_failures == [r]
+    assert not sched.waiting                        # queue drains cleanly
+
+
+# ---------------------------------------------------------------------------
+# prefill buckets / pool refcounts / radix prefix cache
+# ---------------------------------------------------------------------------
+
+def test_engine_bucket_edges(setup):
+    """_bucket: length 1 -> smallest bucket; exact power-of-two boundaries
+    stay put; anything above the largest bucket clamps to the pool cap."""
+    mesh, model, params = setup
+    eng = InferenceEngine(model, mesh, params, EngineConfig(
+        n_slots=2, block_size=4, num_blocks=32, max_seq_len=64))
+    base = 4                              # lcm(block_size=4, seq_div=1)
+    assert eng._bucket(1) == base
+    assert eng._bucket(base) == base      # boundary: no spill to next bucket
+    assert eng._bucket(base + 1) == 2 * base
+    assert eng._bucket(2 * base) == 2 * base
+    cap = -(-eng.cache.max_blocks * 4 // base) * base
+    assert eng._bucket(10 ** 6) == cap    # above the largest bucket
+
+
+def test_block_pool_refcount_roundtrip():
+    """ref/free round-trips: a page returns to the freelist only when the
+    LAST holder releases it; over-release and ref-of-free are guarded."""
+    pool = BlockPool(n_groups=1, blocks_per_group=6)     # capacity 5
+    a, b = pool.alloc(0, 2)
+    assert pool.refcount(a) == 1
+    pool.ref([a])                         # second holder
+    assert pool.refcount(a) == 2
+    pool.free([a])                        # first release: still resident
+    assert pool.refcount(a) == 1 and pool.available(0) == 3
+    pool.free([a])                        # last release: back on freelist
+    assert pool.refcount(a) == 0 and pool.available(0) == 4
+    with pytest.raises(ValueError):
+        pool.free([a])                    # over-release
+    with pytest.raises(ValueError):
+        pool.ref([a])                     # ref of an unallocated page
+    pool.free([b])
+
+
+def test_prefix_cache_cow_split_leaves_donor_intact():
+    """A divergent prompt gets the cached block as a COW *donor*; the
+    donor page itself is never freed or mutated while cached, and eviction
+    only ever reclaims refcount-1 leaves."""
+    from repro.serve import RadixPrefixCache
+    pool = BlockPool(n_groups=1, blocks_per_group=8)     # capacity 7
+    pc = RadixPrefixCache(pool, block_size=4)
+    prompt = list(range(12))                             # 3 full blocks
+    blocks = pool.alloc(0, 3)
+    pc.insert(0, prompt, blocks)                         # cache holds too
+    assert [pool.refcount(x) for x in blocks] == [2, 2, 2]
+    pool.free(blocks)                                    # request retires
+    assert [pool.refcount(x) for x in blocks] == [1, 1, 1]
+
+    # shares 1 full block, then 2 tokens into the second cached block
+    q = [0, 1, 2, 3, 4, 5, 99, 98, 97]
+    hit = pc.lookup(0, q, len(q) - 1)
+    assert hit.tokens == 6
+    assert hit.full_blocks == blocks[:1]
+    assert hit.cow_src == blocks[1] and hit.cow_len == 2
+
+    pool.ref(hit.full_blocks)                            # request's hold
+    freed = pc.evict(0, 10, protect={hit.cow_src})
+    assert freed == 1                     # only the cold rc-1 leaf went
+    assert pool.refcount(blocks[0]) == 2  # shared with the request: intact
+    assert pool.refcount(blocks[1]) == 1  # protected donor: intact
+    assert pool.refcount(blocks[2]) == 0  # the evicted leaf
+
+    pool.free(hit.full_blocks)
+    assert pc.flush() == 2                # drops the two remaining nodes
+    assert pool.available(0) == pool.capacity(0)
