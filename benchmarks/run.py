@@ -20,7 +20,11 @@ Prints ``name,us_per_call,derived`` CSV rows.
                       jax.vjp, autotuned tiles -> BENCH_attention.json
   roofline_summary  — dry-run roofline terms for the three hillclimb cells
 
-Run:  PYTHONPATH=src python -m benchmarks.run [--quick]
+Run:  PYTHONPATH=src python -m benchmarks.run [--quick | --check]
+
+``--check`` runs only the shardcheck gate: the full static-analysis sweep
+diffed against the committed SHARDCHECK.json (nonzero exit on drift, rule
+findings, or lint findings — see src/repro/analysis/shardcheck.py).
 """
 from __future__ import annotations
 
@@ -382,6 +386,28 @@ def bench_attention():
     assert pd["kernel_wins"], pd
 
 
+def bench_shardcheck(mode: str = "--check"):
+    """The shardcheck gate (DESIGN.md §13): sweep every traced entry point
+    and diff the extracted collective IR against the committed
+    SHARDCHECK.json — the same discipline as the BENCH_*.json gates, but
+    for the collective CONTRACT rather than measured numbers.  ``--update``
+    refreshes the baseline after a reviewed contract change."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.shardcheck", mode,
+         "--baseline", str(HERE.parent / "SHARDCHECK.json")],
+        env=env, capture_output=True, text=True, timeout=2400,
+        cwd=str(HERE.parent))
+    tail = "\n".join((r.stdout + r.stderr).strip().splitlines()[-12:])
+    _row("shardcheck/gate", 0.0,
+         f"rc={r.returncode} ({mode})")
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"shardcheck {mode} failed — collective contract drift or "
+            f"rule finding:\n{tail}")
+
+
 def bench_roofline_summary():
     res = HERE / "results" / "dryrun"
     if not res.exists():
@@ -397,6 +423,12 @@ def bench_roofline_summary():
 
 def main() -> None:
     quick = "--quick" in sys.argv
+    if "--check" in sys.argv:
+        # drift-gate-only mode for CI: nonzero exit on SHARDCHECK.json
+        # drift, rule findings, or lint findings — no measurements
+        print("name,us_per_call,derived")
+        bench_shardcheck("--check")
+        return
     print("name,us_per_call,derived")
     bench_ratios_p64()
     bench_table1()
@@ -411,6 +443,7 @@ def main() -> None:
         bench_attention()
         bench_fig7_accuracy()
         bench_measured_strong()
+        bench_shardcheck("--check")
 
 
 if __name__ == '__main__':

@@ -1,0 +1,11 @@
+"""Static analysis over the repo's jitted programs and source.
+
+* ``collective_ir`` — jaxpr -> normalized collective IR (+ replication
+  taint analysis) for every traced entry point.
+* ``rules`` — the bug-class rule catalog run over the IR (DESIGN.md §13).
+* ``baseline`` — the committed SHARDCHECK.json collective contract.
+* ``shardcheck`` — the sweep driver / CLI gluing the above together.
+* ``pallas_lint`` — GridMapping checks for kernels/*.py pallas_calls.
+* ``lint`` — repo-custom AST lint (hash() seeding, mutable defaults,
+  bare except) run over ``src/`` in CI.
+"""

@@ -1,0 +1,91 @@
+"""SHARDCHECK.json baseline: the committed collective contract.
+
+Tracing is deterministic, so the extracted IR summary of every swept entry
+point is committed and diffed EXACTLY (the same discipline as the
+BENCH_*.json regression gates in benchmarks/run.py): a new collective kind,
+a changed count, or changed wire bytes is a contract change that must be
+reviewed and re-baselined with ``python -m repro.analysis.shardcheck
+--update``, never silently absorbed.
+
+Schema (one entry per swept entry point)::
+
+    {"entries": {
+        "<entry>": {
+            "axis_sizes": {"data": 2, ...},
+            "n_shard_maps": 1,
+            "collectives": {"psum@dataxdepth": {"count": 15,
+                                                "wire_bytes": 111360}},
+            "total_wire_bytes": 872448
+        }, ...}}
+
+Entries with no explicit collectives (plain-jit reshard helpers where XLA
+inserts the transfers below the jaxpr level) legitimately summarize to an
+empty ``collectives`` dict — committing that emptiness is itself the
+contract that nothing EXPLICIT was added.
+"""
+from __future__ import annotations
+
+import json
+
+from .collective_ir import IRProgram
+
+
+def summarize(prog: IRProgram) -> dict:
+    """Canonical, JSON-stable summary of one entry's IR."""
+    coll = {k: {"count": int(v["count"]),
+                "wire_bytes": int(round(v["wire_bytes"]))}
+            for k, v in sorted(prog.by_key().items())}
+    return {
+        "axis_sizes": {str(k): int(v)
+                       for k, v in sorted(prog.axis_sizes.items())},
+        "n_shard_maps": len(prog.shard_map_eqns),
+        "collectives": coll,
+        "total_wire_bytes": int(round(prog.total_wire_bytes())),
+    }
+
+
+def load(path) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def write(path, entries: dict) -> None:
+    with open(path, "w") as f:
+        json.dump({"entries": entries}, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def diff(baseline: dict, entries: dict) -> list:
+    """Exact diff of {entry: summary} against a loaded baseline.
+
+    Returns human-readable drift lines; empty means conformant.  Both
+    missing and novel entries/collectives fail — an entry disappearing from
+    the sweep is as much drift as a new collective appearing in one.
+    """
+    old = baseline.get("entries", {})
+    out = []
+    for name in sorted(set(old) | set(entries)):
+        if name not in entries:
+            out.append(f"{name}: in baseline but not swept")
+            continue
+        if name not in old:
+            out.append(f"{name}: swept but not in baseline "
+                       f"(run --update and review)")
+            continue
+        o, n = old[name], entries[name]
+        for field in ("axis_sizes", "n_shard_maps", "total_wire_bytes"):
+            if o.get(field) != n.get(field):
+                out.append(f"{name}.{field}: baseline {o.get(field)!r} "
+                           f"!= traced {n.get(field)!r}")
+        oc, nc = o.get("collectives", {}), n.get("collectives", {})
+        for key in sorted(set(oc) | set(nc)):
+            if key not in nc:
+                out.append(f"{name}: collective {key} vanished "
+                           f"(baseline {oc[key]})")
+            elif key not in oc:
+                out.append(f"{name}: NEW collective {key} {nc[key]} "
+                           f"not in baseline")
+            elif oc[key] != nc[key]:
+                out.append(f"{name}: {key} drifted "
+                           f"{oc[key]} -> {nc[key]}")
+    return out

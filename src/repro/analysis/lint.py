@@ -1,0 +1,113 @@
+"""Repo-custom AST lint for the footguns this repo has shipped fixes for.
+
+Three rules, each a bug class with a PR number attached:
+
+* ``REPRO001 hash-for-seeding`` — the ``hash()`` builtin is salted per
+  process (PYTHONHASHSEED), so seeds/bucket ids derived from it are not
+  reproducible across runs.  PR 3 and PR 6 both replaced ``hash()`` with
+  ``zlib.crc32``; nothing in this codebase legitimately wants ``hash()``.
+* ``REPRO002 mutable-default-arg`` — a mutable default is evaluated once
+  and shared across calls (PR 6: the scheduler's ``SamplingParams()``
+  default aliased one object across requests).  Any list/dict/set display
+  or constructor call in a default is flagged unless the callee is a
+  known-immutable constructor (``P``/``PartitionSpec``, ``frozenset``,
+  ``tuple``, numeric casts).
+* ``REPRO003 bare-except`` — ``except:`` swallows KeyboardInterrupt and
+  SystemExit; name the exception (at minimum ``except Exception``).
+
+Run as ``python -m repro.analysis.lint [paths...]`` (default ``src``);
+prints ``path:line: CODE message`` per finding and exits 1 if any.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+# constructors whose result is immutable: safe as a default argument
+IMMUTABLE_DEFAULT_CALLS = {
+    "P", "PartitionSpec", "frozenset", "tuple", "int", "float", "bool",
+    "str", "bytes", "complex",
+}
+
+
+def _callee_name(call: ast.Call) -> str:
+    f = call.func
+    while isinstance(f, ast.Attribute):
+        f = f.value if isinstance(f.value, ast.Attribute) else f
+        if isinstance(f, ast.Attribute):
+            f = f.value
+        break
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    return ""
+
+
+def _mutable_default(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        return _callee_name(node) not in IMMUTABLE_DEFAULT_CALLS
+    return False
+
+
+def lint_source(src: str, path: str = "<str>") -> list:
+    """Lint one file's source; returns ``(path, line, code, message)``."""
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [(path, e.lineno or 0, "REPRO000",
+                 f"syntax error: {e.msg}")]
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Name) and node.func.id == "hash":
+            out.append((path, node.lineno, "REPRO001",
+                        "hash() is salted per process (PYTHONHASHSEED); "
+                        "use zlib.crc32 for stable seeds/bucket ids"))
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.Lambda)):
+            args = node.args
+            for d in list(args.defaults) + [d for d in args.kw_defaults
+                                            if d is not None]:
+                if _mutable_default(d):
+                    name = getattr(node, "name", "<lambda>")
+                    out.append((path, d.lineno, "REPRO002",
+                                f"mutable default argument in {name}() is "
+                                f"evaluated once and shared across calls; "
+                                f"default to None and construct inside"))
+        elif isinstance(node, ast.ExceptHandler) and node.type is None:
+            out.append((path, node.lineno, "REPRO003",
+                        "bare 'except:' swallows KeyboardInterrupt/"
+                        "SystemExit; catch a named exception"))
+    return out
+
+
+def lint_paths(paths) -> list:
+    findings = []
+    for root in paths:
+        root = Path(root)
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            findings += lint_source(f.read_text(), str(f))
+    return findings
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    paths = argv or ["src"]
+    findings = lint_paths(paths)
+    for path, line, code, msg in findings:
+        print(f"{path}:{line}: {code} {msg}")
+    if findings:
+        print(f"{len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print(f"lint clean: {', '.join(paths)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -75,6 +75,64 @@ def _einsum(subs, *args, ctx: ParallelContext, out_dtype):
 
 
 # --------------------------------------------------------------------------
+# Exact per-op wire-byte model (repro.analysis.shardcheck rule d).
+#
+# benchmarks/comm_model.py models the *asymptotic* schedules for roofline
+# curves; the functions below count the bytes this file's implementations
+# actually move, collective by collective, under the same ring cost model as
+# roofline/hlo.py (all_gather/psum_scatter over n devices move (n-1)/n of
+# the gathered/scattered payload per device; ppermute moves the payload).
+# shardcheck traces each schedule and requires byte-exact agreement, so any
+# edit to the collective structure above must be mirrored here (that is the
+# point: the model IS the reviewed comm contract).
+# --------------------------------------------------------------------------
+
+def matmul_comm_bytes(ctx: ParallelContext, e_loc: int, f_loc: int,
+                      g_loc: int, *, batch: int = 1, train: bool = True,
+                      itemsize: int = 4, schedule: str | None = None) -> dict:
+    """Wire bytes per device for ONE ``tesseract_matmul`` call.
+
+    ``e_loc``/``f_loc``/``g_loc`` are the LOCAL block dims of A ([batch,
+    E_loc, F_loc]) and W ([F_loc, G_loc]); ``itemsize`` is the compute-dtype
+    width.  Returns {"fwd", "bwd", "total"} (bwd = 0 when not train).
+    """
+    q = ctx.q
+    sched = schedule or effective_schedule(ctx, e_loc)
+    a = batch * e_loc * f_loc * itemsize          # local A block bytes
+    w = f_loc * g_loc * itemsize                  # local W block bytes
+    w_rs = f_loc * g_loc * (2 if ctx.dgrad_rs_bf16 else itemsize)
+    if sched == "ring":
+        fwd = 0 if q == 1 else q * (a + w)        # skew + (q-1) shifts each
+        # pass 1: W stream (q shifts) + dA accumulator ring ((q-1) shifts +
+        # final shift + unskew); pass 2: A stream + dW accumulator ring.
+        bwd = 0 if q == 1 else (q * w + (q + 1) * a + q * a
+                                + (q + 1) * w_rs)
+    else:
+        fwd = (q - 1) * (a + w)                   # fused gathers of A and W
+        regather = ((0 if ctx.cache_act_gather else (q - 1) * a)
+                    + (0 if ctx.cache_weight_gather else (q - 1) * w))
+        # psum_scatter of the [q, ...] dA / dW partial stacks
+        bwd = regather + (q - 1) * a + (q - 1) * w_rs
+    if train and ctx.reduce_dgrad_in_op:
+        ndd = ctx.data * ctx.depth                # in-op dW all-reduce
+        bwd += 2 * w_rs * (ndd - 1) / ndd if ndd > 1 else 0
+    if not train:
+        bwd = 0
+    return {"fwd": float(fwd), "bwd": float(bwd), "total": float(fwd + bwd)}
+
+
+def ring_vs_fused(ctx: ParallelContext, e_loc: int, f_loc: int, g_loc: int,
+                  *, batch: int = 1, train: bool = True,
+                  itemsize: int = 4) -> dict:
+    """Implementation-exact {schedule: {"fwd","bwd","total"}} byte table for
+    one matmul — the tight reference shardcheck diffs traced bytes against
+    (benchmarks/comm_model.ring_vs_fused stays the asymptotic roofline)."""
+    return {s: matmul_comm_bytes(ctx, e_loc, f_loc, g_loc, batch=batch,
+                                 train=train, itemsize=itemsize, schedule=s)
+            for s in ("ring", "fused")}
+
+
+# --------------------------------------------------------------------------
 # Ring schedule machinery (matmul_schedule="ring", DESIGN.md §2b).
 #
 # Permutations over the [q, q] (row, col) grid.  ppermute over the axis

@@ -19,6 +19,51 @@ CANDIDATES = ((128, 128), (128, 256), (256, 128), (256, 256), (256, 512),
 
 _CACHE: dict = {}
 
+# Repo-committed tile choices, keyed backend -> "Tq,Tk,D,causal" -> [bq, bk]
+# (autotune_cache.json next to this file).  Loaded once at import — pure
+# json, no jax — and consulted by flash_tiles() AFTER the in-process cache
+# (a fresh measurement on this machine beats the committed sweep) but
+# BEFORE DEFAULT_TILES.  Regenerate with commit_cache() after a sweep.
+COMMITTED_CACHE_PATH = pathlib.Path(__file__).with_name(
+    "autotune_cache.json")
+_COMMITTED: dict = {}
+_BACKEND = None
+
+
+def _load_committed(path=COMMITTED_CACHE_PATH) -> int:
+    p = pathlib.Path(path)
+    if not p.exists():
+        return 0
+    _COMMITTED.clear()
+    for backend, table in json.loads(p.read_text()).items():
+        per = _COMMITTED.setdefault(backend, {})
+        for ks, v in table.items():
+            tq, tk, d, causal = ks.split(",")
+            per[(int(tq), int(tk), int(d), causal == "True")] = tuple(v)
+    return sum(len(t) for t in _COMMITTED.values())
+
+
+def _backend_name() -> str:
+    global _BACKEND
+    if _BACKEND is None:
+        try:
+            import jax
+            _BACKEND = jax.default_backend()
+        except Exception:
+            _BACKEND = "cpu"
+    return _BACKEND
+
+
+def commit_cache(path=COMMITTED_CACHE_PATH) -> None:
+    """Merge the in-process cache into the committed per-backend JSON."""
+    p = pathlib.Path(path)
+    data = json.loads(p.read_text()) if p.exists() else {}
+    table = data.setdefault(_backend_name(), {})
+    for k, v in _CACHE.items():
+        table[",".join(map(str, k))] = list(v)
+    p.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+    _load_committed(p)
+
 
 def _sig(Tq: int, Tk: int, D: int, causal: bool) -> tuple:
     # batch/head counts replicate the per-block work and never change the
@@ -27,8 +72,16 @@ def _sig(Tq: int, Tk: int, D: int, causal: bool) -> tuple:
 
 
 def flash_tiles(Tq: int, Tk: int, D: int, *, causal: bool = True) -> tuple:
-    """Cached best (bq, bk) for a flash shape; the default when untuned."""
-    return _CACHE.get(_sig(Tq, Tk, D, causal), DEFAULT_TILES)
+    """Cached best (bq, bk) for a flash shape; the default when untuned.
+
+    Resolution order: in-process cache (this run's measurements) ->
+    committed per-backend autotune_cache.json -> DEFAULT_TILES."""
+    sig = _sig(Tq, Tk, D, causal)
+    hit = _CACHE.get(sig)
+    if hit is not None:
+        return hit
+    hit = _COMMITTED.get(_backend_name(), {}).get(sig)
+    return hit if hit is not None else DEFAULT_TILES
 
 
 def set_tiles(Tq: int, Tk: int, D: int, causal: bool, tiles) -> None:
@@ -103,3 +156,6 @@ def load_cache(path) -> int:
         tq, tk, d, causal = ks.split(",")
         _CACHE[(int(tq), int(tk), int(d), causal == "True")] = tuple(v)
     return len(_CACHE)
+
+
+_load_committed()

@@ -74,6 +74,16 @@ class Roofline:
         return asdict(self)
 
 
+def wire_time_s(wire_bytes: float, *, link_bw: float = LINK_BW) -> float:
+    """Ring-model seconds on the interconnect for a per-device byte count.
+
+    The bridge between repro.analysis.shardcheck's extracted wire bytes and
+    this module's collective_term_s: the analyzer records each swept entry's
+    jaxpr-level bytes through THIS conversion so the SHARDCHECK.json
+    baseline and the roofline tables share one clock."""
+    return wire_bytes / link_bw
+
+
 def exposed_collective_term(compute_s: float, collective_s: float,
                             schedule: str = "fused") -> float:
     """Exposed (non-overlapped) collective time for a step.

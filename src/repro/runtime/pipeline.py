@@ -182,6 +182,25 @@ def schedule_1f1b(n_micro: int, n_stages: int):
             n_slots, info)
 
 
+def expected_ring_transfers(schedule) -> dict:
+    """Pipe-axis transfer counts implied by a ``schedule_1f1b`` result.
+
+    The 1F1B executor below issues exactly TWO ppermutes per tick (one
+    activation forward, one cotangent backward, unconditionally — masked
+    ticks still permute garbage slots), so a traced step must contain
+    ``2 * n_ticks`` pipe-axis ppermute occurrences once the executing scan's
+    multiplicity is unrolled.  repro.analysis.shardcheck diffs the extracted
+    IR against this; a drift means the schedule tables and the device
+    program disagree."""
+    fwd_tbl, bwd_tbl, _k, info = schedule
+    return {
+        "n_ticks": int(info["n_ticks"]),
+        "ppermutes": 2 * int(info["n_ticks"]),
+        "busy_fwd": int((np.asarray(fwd_tbl) >= 0).sum()),
+        "busy_bwd": int((np.asarray(bwd_tbl) >= 0).sum()),
+    }
+
+
 def pipeline_1f1b_grads(stage_step, params, a_proto, n_micro: int, *,
                         axis: str = "pipe", loss_seed=1.0, schedule=None):
     """Value-and-grad of an S-stage 1F1B pipeline (manual per-stage vjp).

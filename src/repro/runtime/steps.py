@@ -92,6 +92,11 @@ class StepBundle:
     # layouts_to_json(opt_layouts) in their manifest so restore can re-shard
     # across dp-degree changes (checkpoint/ckpt.py + optim/zero.py).
     opt_layouts: Any = None
+    # Ground truth for repro.analysis.shardcheck (train steps only): the
+    # fused grad reductions the traced jaxpr must contain per axis set,
+    # plus per-leaf layout facts for the zaxes-overlap rule.  See
+    # _shardcheck_meta below for the schema.
+    shardcheck_meta: Any = None
 
     def opt_layouts_json(self):
         from ..optim import zero as zopt
@@ -102,6 +107,56 @@ class StepBundle:
 def _shardings(mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def _shardcheck_meta(mesh, specs, red_tree, is_tess, layouts):
+    """StepBundle.shardcheck_meta for a train step: what the deferred
+    grad-sync machinery promises the traced jaxpr will contain, derived
+    from the same trees the step builder wires into grad_sync /
+    zreduce_scatter (so the analyzer checks the implementation against the
+    builder's intent, not against a re-derivation of it).
+
+    Schema:
+      mesh_axes / axis_sizes  — the declared mesh
+      grad_psum_axes          — {sorted axis tuple: n leaves} fused grad
+                                psums (grad_sync bwd / pipeline red())
+      grad_rs_axes            — {sorted axis tuple: n leaves} ZeRO-1
+                                zreduce_scatter calls (zn > 1 leaves only)
+      leaves                  — per-leaf {name, spec_axes, reduce_axes,
+                                zaxes, tess} for the layout rules
+    """
+    is_p = lambda x: isinstance(x, P)
+    kps = jax.tree_util.tree_flatten_with_path(specs, is_leaf=is_p)[0]
+    red_l = jax.tree_util.tree_leaves(
+        red_tree, is_leaf=lambda x: isinstance(x, tuple))
+    tess_l = jax.tree_util.tree_leaves(is_tess)
+    lay_l = (jax.tree_util.tree_leaves(layouts)
+             if layouts is not None else [None] * len(kps))
+    psums: dict = {}
+    rs: dict = {}
+    leaves = []
+    for (kp, spec), red, tess, lay in zip(kps, red_l, tess_l, lay_l):
+        red = tuple(sorted(red))
+        if red:
+            psums[red] = psums.get(red, 0) + 1
+        zaxes = tuple(sorted(lay.zaxes)) if lay is not None else ()
+        if lay is not None and not tess and lay.zn > 1:
+            rs[zaxes] = rs.get(zaxes, 0) + 1
+        leaves.append({
+            "name": jax.tree_util.keystr(kp),
+            "spec_axes": tuple(spec_axes(spec)),
+            "reduce_axes": red,
+            "zaxes": zaxes,
+            "tess": bool(tess),
+        })
+    return {
+        "mesh_axes": tuple(str(a) for a in mesh.axis_names),
+        "axis_sizes": dict(zip([str(a) for a in mesh.axis_names],
+                               mesh.devices.shape)),
+        "grad_psum_axes": psums,
+        "grad_rs_axes": rs,
+        "leaves": leaves,
+    }
 
 
 def batch_abstract(ops, shape: ShapeSpec, ctx: ParallelContext, model=None):
@@ -421,11 +476,15 @@ def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1,
     else:
         abs_opt = jax.eval_shape(partial(adamw.adamw_init, master=opt_master),
                                  abs_params)
+    red_tree = jax.tree.map(
+        lambda s, t: tuple(sorted(pvary_axes(s, t))), specs, is_tess)
     return StepBundle(
         fn=fn,
         abstract_inputs=(abs_params, abs_opt, batch_sds),
         in_shardings=in_sh, out_shardings=out_sh, mesh=mesh, plan=plan,
-        opt_layouts=layouts)
+        opt_layouts=layouts,
+        shardcheck_meta=_shardcheck_meta(mesh, specs, red_tree, is_tess,
+                                         layouts))
 
 
 # ---------------------------------------------------------------------------
@@ -662,7 +721,9 @@ def _build_pipeline_train_step(model, mesh, shape: ShapeSpec,
         fn=fn,
         abstract_inputs=(abs_params, abs_opt, batch_sds),
         in_shardings=in_sh, out_shardings=out_sh, mesh=mesh, plan=plan,
-        pipe_info=sched[3], opt_layouts=layouts)
+        pipe_info=sched[3], opt_layouts=layouts,
+        shardcheck_meta=_shardcheck_meta(mesh, pspecs, red_axes, is_tess,
+                                         layouts))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,59 @@
+"""AST lint rules (repro.analysis.lint) fire on their bug class and stay
+quiet on the idioms this repo actually uses — including the whole of src/,
+which is the CI contract."""
+import pathlib
+
+from repro.analysis.lint import lint_paths, lint_source, main
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+
+
+def _codes(src):
+    return [c for _p, _l, c, _m in lint_source(src)]
+
+
+def test_repro001_hash_for_seeding():
+    assert _codes("seed = hash(name) % 2**32\n") == ["REPRO001"]
+    # the sanctioned replacement is clean
+    assert _codes("import zlib\nseed = zlib.crc32(name.encode())\n") == []
+    # method calls named .hash() are not the builtin
+    assert _codes("seed = obj.hash()\n") == []
+
+
+def test_repro002_mutable_default():
+    assert _codes("def f(x, acc=[]):\n    return acc\n") == ["REPRO002"]
+    assert _codes("def f(x, acc={}):\n    return acc\n") == ["REPRO002"]
+    assert _codes("def f(x, *, acc=set()):\n    return acc\n") == ["REPRO002"]
+    assert _codes("def f(p=SamplingParams()):\n    return p\n") == \
+        ["REPRO002"]  # the PR 6 scheduler bug shape
+    assert _codes("f = lambda x, acc=[]: acc\n") == ["REPRO002"]
+    # immutable constructors stay allowed (P() specs are pervasive here)
+    assert _codes("def f(spec=P('data', None)):\n    return spec\n") == []
+    assert _codes("def f(axes=tuple()):\n    return axes\n") == []
+    assert _codes("def f(x=None, y=3, z=(1, 2)):\n    return x\n") == []
+
+
+def test_repro003_bare_except():
+    src = "try:\n    f()\nexcept:\n    pass\n"
+    assert _codes(src) == ["REPRO003"]
+    assert _codes(src.replace("except:", "except Exception:")) == []
+
+
+def test_syntax_error_is_reported_not_raised():
+    out = lint_source("def broken(:\n", "bad.py")
+    assert out[0][2] == "REPRO000"
+
+
+def test_src_tree_is_clean():
+    findings = lint_paths([SRC])
+    assert findings == [], "\n".join(
+        f"{p}:{l}: {c} {m}" for p, l, c, m in findings)
+
+
+def test_cli_exit_codes(tmp_path):
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    dirty = tmp_path / "dirty.py"
+    dirty.write_text("seed = hash('a')\n")
+    assert main([str(clean)]) == 0
+    assert main([str(dirty)]) == 1

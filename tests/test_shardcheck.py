@@ -1,0 +1,227 @@
+"""Unit tests for the shardcheck static analyzer (DESIGN.md §13).
+
+Everything here runs single-device: the rules take IR / meta as plain data,
+so the regression tests feed deliberately broken inputs that could never
+trace (jax itself rejects unknown axes at trace time).  End-to-end trace
+facts live in the ``shardcheck`` mdcheck (tests/test_multidevice.py style
+subprocess with 8 fake devices), invoked by ``test_shardcheck_mdcheck``.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+from repro.analysis import baseline as bl
+from repro.analysis import rules
+from repro.analysis.collective_ir import Collective, IRProgram
+
+
+def _coll(kind, axes, *, mult=1, group=2, ob=1024, path=()):
+    return Collective(kind=kind, axes=tuple(axes), shape=(16, 16),
+                      dtype="float32", mult=mult, group=group,
+                      operand_bytes=ob, path=tuple(path))
+
+
+# ---------------------------------------------------------------------------
+# collective IR data model
+# ---------------------------------------------------------------------------
+
+def test_wire_bytes_ring_model():
+    # same formulas as roofline/hlo.py: frac = (n-1)/n
+    assert _coll("all_gather", ("col",), group=4, ob=100).wire_bytes == 300
+    assert _coll("psum", ("col",), group=4, ob=100).wire_bytes == 150
+    assert _coll("psum_scatter", ("col",), group=4, ob=100).wire_bytes == 75
+    assert _coll("ppermute", ("pipe",), group=4, ob=100).wire_bytes == 100
+    assert _coll("psum", ("data",), group=1, ob=100).wire_bytes == 0
+
+
+def test_irprogram_aggregation():
+    prog = IRProgram(collectives=[
+        _coll("psum", ("data",), mult=3, ob=100),
+        _coll("psum", ("data",), mult=1, ob=100),
+        _coll("psum_scatter", ("data", "depth"), mult=2, ob=100),
+    ], axis_sizes={"data": 2, "depth": 2})
+    assert prog.by_key()["psum@data"]["count"] == 4
+    assert prog.psum_axis_counts() == {("data",): 4, ("data", "depth"): 2}
+    assert prog.total_wire_bytes() == 4 * 100 + 2 * 50
+
+
+# ---------------------------------------------------------------------------
+# rule catalog on deliberately broken inputs
+# ---------------------------------------------------------------------------
+
+def test_mesh_rule_rejects_unknown_axis():
+    prog = IRProgram(collectives=[_coll("psum", ("ghost",))])
+    out = rules.check_mesh(prog, ("data", "row", "col"), "toy")
+    assert len(out) == 1 and out[0].rule == "mesh"
+    assert "ghost" in out[0].message
+    assert rules.check_mesh(prog, ("ghost",), "toy") == []
+
+
+def test_layout_rule_depth_reduction_on_depth_sharded_leaf():
+    # PR 4 bug class: a depth-sharded head leaf whose deferred grad psum
+    # covers 'depth' would sum DISTINCT shards
+    meta = {"leaves": [{"name": "['head']", "spec_axes": ("depth", "col"),
+                        "reduce_axes": ("data", "depth"), "zaxes": (),
+                        "tess": False}]}
+    out = rules.check_layouts(meta, "toy")
+    assert len(out) == 1 and out[0].rule == "layout"
+    assert "depth" in out[0].message and "PR 4" in out[0].message
+
+
+def test_layout_rule_zero_slices_own_axis_and_double_reduction():
+    meta = {"leaves": [
+        {"name": "a", "spec_axes": ("depth",), "reduce_axes": (),
+         "zaxes": ("depth",), "tess": False},          # slices its own axis
+        {"name": "b", "spec_axes": (), "reduce_axes": ("data",),
+         "zaxes": ("data",), "tess": False},           # double reduction
+        {"name": "ok", "spec_axes": ("row", "col"),
+         "reduce_axes": ("data",), "zaxes": ("depth",), "tess": True},
+    ]}
+    out = rules.check_layouts(meta, "toy")
+    assert {f.message.split(":")[0] for f in out} == {"a", "b"}
+
+
+def test_gradsync_rule_missing_pipe_psum():
+    # PR 3 bug class: the pipeline red() dropping 'pipe' for
+    # stage-replicated leaves -> the ('data','pipe') psum counts short
+    meta = {"grad_psum_axes": {("data", "pipe"): 4, ("data",): 2},
+            "grad_rs_axes": {}}
+    prog = IRProgram(collectives=[
+        _coll("psum", ("data", "pipe"), mult=3),    # one leaf short
+        _coll("psum", ("data",), mult=2),
+    ])
+    out = rules.check_grad_sync(prog, meta, "pipe2")
+    assert len(out) == 1 and out[0].rule == "gradsync"
+    assert "missing 'pipe'" in out[0].message
+    # the full complement passes (>= semantics: extra loss psums are fine)
+    prog.collectives.append(_coll("psum", ("data", "pipe"), mult=1))
+    assert rules.check_grad_sync(prog, meta, "pipe2") == []
+
+
+def test_gradsync_rule_missing_zero_reduce_scatter():
+    meta = {"grad_psum_axes": {}, "grad_rs_axes": {("data",): 2}}
+    prog = IRProgram(collectives=[_coll("psum_scatter", ("data",), mult=1)])
+    out = rules.check_grad_sync(prog, meta, "zero1")
+    assert len(out) == 1 and "reduce_scatter" in out[0].message
+
+
+def test_run_all_composes():
+    meta = {"mesh_axes": ("data",), "grad_psum_axes": {("data",): 1},
+            "grad_rs_axes": {}, "leaves": []}
+    prog = IRProgram(collectives=[_coll("psum", ("ghost",))])
+    out = rules.run_all(prog, meta, entry="toy")
+    assert {f.rule for f in out} == {"mesh", "gradsync"}
+
+
+# ---------------------------------------------------------------------------
+# comm model (core/summa byte formulas; trace-exactness in the mdcheck)
+# ---------------------------------------------------------------------------
+
+def test_matmul_comm_bytes_model():
+    from repro.core.api import ParallelContext
+    from repro.core.summa import matmul_comm_bytes, ring_vs_fused
+
+    ctx = ParallelContext(mode="tesseract", data=1, depth=2, rows=2,
+                          cols=2, reduce_dgrad_in_op=False)
+    e, f, g, b = 16, 32, 32, 2
+    a_b = b * e * f * 4
+    w_b = f * g * 4
+    fused = matmul_comm_bytes(ctx, e, f, g, batch=b, schedule="fused")
+    assert fused["fwd"] == (ctx.q - 1) * (a_b + w_b)
+    # default ctx caches the weight gather, not the activation gather:
+    # bwd = (q-1)a regather + (q-1)a dgrad + (q-1)w reduce-scatter
+    assert fused["bwd"] == 2 * (ctx.q - 1) * a_b + (ctx.q - 1) * w_b
+    ring = matmul_comm_bytes(ctx, e, f, g, batch=b, schedule="ring")
+    assert ring["fwd"] == ctx.q * (a_b + w_b)
+    both = ring_vs_fused(ctx, e, f, g, batch=b)
+    assert both["ring"]["total"] == ring["total"]
+    assert both["fused"]["total"] == fused["total"]
+    # q=1 collapses every inter-shard term
+    ctx1 = ParallelContext(mode="tesseract", data=4, depth=1, rows=1,
+                           cols=1, reduce_dgrad_in_op=False)
+    assert matmul_comm_bytes(ctx1, e, f, g, batch=b)["total"] == 0
+    # serving (train=False) has no backward traffic
+    assert matmul_comm_bytes(ctx, e, f, g, batch=b, train=False)["bwd"] == 0
+    # in-op dgrad reduction adds the 2*w*(n-1)/n all-reduce term
+    ctx_i = ParallelContext(mode="tesseract", data=1, depth=2, rows=2,
+                            cols=2, reduce_dgrad_in_op=True)
+    extra = matmul_comm_bytes(ctx_i, e, f, g, batch=b)["bwd"] - fused["bwd"]
+    assert extra == 2 * w_b * (2 - 1) / 2
+
+
+def test_expected_ring_transfers():
+    from repro.runtime.pipeline import expected_ring_transfers, schedule_1f1b
+
+    sched = schedule_1f1b(4, 2)
+    exp = expected_ring_transfers(sched)
+    assert exp["ppermutes"] == 2 * exp["n_ticks"]
+    # every microbatch crosses every stage once per direction
+    assert exp["busy_fwd"] == 4 * 2 and exp["busy_bwd"] == 4 * 2
+
+
+# ---------------------------------------------------------------------------
+# baseline contract
+# ---------------------------------------------------------------------------
+
+def _entries():
+    prog = IRProgram(collectives=[_coll("psum", ("data",), mult=2, ob=100)],
+                     axis_sizes={"data": 2})
+    return {"e1": bl.summarize(prog)}
+
+
+def test_baseline_roundtrip_and_exact_diff(tmp_path):
+    p = tmp_path / "SHARDCHECK.json"
+    entries = _entries()
+    bl.write(p, entries)
+    assert bl.diff(bl.load(p), entries) == []
+
+    drifted = _entries()
+    drifted["e1"]["collectives"]["psum@data"]["count"] = 3
+    assert any("psum@data" in d for d in bl.diff(bl.load(p), drifted))
+
+    new_coll = _entries()
+    new_coll["e1"]["collectives"]["all_gather@col"] = {
+        "count": 1, "wire_bytes": 64}
+    assert any("NEW" in d for d in bl.diff(bl.load(p), new_coll))
+
+    assert any("not swept" in d for d in bl.diff(bl.load(p), {}))
+    extra = _entries()
+    extra["e2"] = extra["e1"]
+    assert any("e2" in d for d in bl.diff(bl.load(p), extra))
+
+
+def test_committed_baseline_is_current_format():
+    data = bl.load(REPO / "SHARDCHECK.json")["entries"]
+    assert "train_flat_q2_dp2" in data
+    assert "serve_prefill_q2_dp2" in data
+    for name in ("matmul_fused_q2_d2", "matmul_ring_q2_d2"):
+        e = data[name]
+        assert e["traced_bytes"] == e["predicted_bytes"], name
+    kernels = [k for k in data if k.startswith("kernel:")]
+    assert kernels, "kernel lint stats missing from baseline"
+    for name, e in data.items():
+        if "collectives" in e:
+            assert e["total_wire_bytes"] == sum(
+                c["wire_bytes"] for c in e["collectives"].values()), name
+
+
+# ---------------------------------------------------------------------------
+# end-to-end on 8 fake devices (subprocess, same harness as multidevice)
+# ---------------------------------------------------------------------------
+
+def test_shardcheck_mdcheck():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.testing.mdchecks", "shardcheck"],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert r.returncode == 0, \
+        f"shardcheck failed:\n{r.stdout[-3000:]}\n{r.stderr[-3000:]}"
+    assert "PASS" in r.stdout
