@@ -216,15 +216,18 @@ def bench_serve():
     against the committed file, its TTFT-p95 reduction against a floor."""
     out = _sub("serve_throughput")
     out.update(_sub("serve_prefix"))
+    out.update(_sub("serve_spec"))
     payload = {**out,
                "note": "8 fake CPU host devices, tesseract [2,2,1] x dp2, "
                        "yi-6b reduced; wall-clock indicative only; greedy "
-                       "token parity engine==static and prefix-cache-on=="
-                       "off asserted in-run"}
+                       "token parity engine==static, prefix-cache-on==off "
+                       "and speculative==plain asserted in-run"}
     path = HERE.parent / "BENCH_serve.json"
-    # diff the deterministic prefix counters BEFORE overwriting
+    # diff the deterministic prefix + speculation counters BEFORE
+    # overwriting
     regressions = []
     pf = out["prefix"]
+    sp = out["spec"]
     if path.exists():
         old = json.loads(path.read_text())
         if "prefix" in old:
@@ -236,6 +239,19 @@ def bench_serve():
                 if old_v is not None and pf["on"][k] != old_v:
                     regressions.append(
                         f"prefix.on.{k}: {old_v} -> {pf['on'][k]} (exact)")
+        # a committed file without a "spec" section predates speculative
+        # decoding: re-baseline instead of failing
+        if "spec" in old:
+            osp = old["spec"]
+            for cell in ("ngram", "draft_ideal"):
+                for k in ("steps", "spec_rounds", "spec_proposed",
+                          "spec_accepted", "spec_committed",
+                          "acceptance_rate", "tokens_per_round"):
+                    old_v = osp.get(cell, {}).get(k)
+                    if old_v is not None and sp[cell][k] != old_v:
+                        regressions.append(
+                            f"spec.{cell}.{k}: {old_v} -> "
+                            f"{sp[cell][k]} (exact)")
     path.write_text(json.dumps(payload, indent=2) + "\n")
     losses = []
     for key, d in out.items():
@@ -261,6 +277,14 @@ def bench_serve():
     _row("serve/prefix/off", 0.0,
          f"ttft_p95={off['ttft']['p95_ms']:.1f}ms "
          f"(reduction {pf['ttft_p95_reduction'] * 100:+.1f}%)")
+    for cell in ("ngram", "draft_ideal"):
+        c = sp[cell]
+        _row(f"serve/spec/{cell}", 0.0,
+             f"acceptance={c['acceptance_rate']:.2f} "
+             f"tokens/round={c['tokens_per_round']:.2f} "
+             f"steps {sp['plain']['steps']}->{c['steps']} "
+             f"({c['speedup_steps']:.2f}x) "
+             f"model={c['model_speedup_at_recorded_acceptance']:.2f}x")
     _row("serve/written", 0.0, str(path))
     # persisted first so a noisy wall-clock loss stays diagnosable
     assert not losses, f"continuous batching lost at {losses}: see {path}"
@@ -270,6 +294,17 @@ def bench_serve():
     assert pf["ttft_p95_reduction"] > -0.10, \
         f"prefix cache regressed TTFT p95 by " \
         f"{-pf['ttft_p95_reduction'] * 100:.1f}%: see {path}"
+    # speculation floors (ISSUE 9): the ideal-draft cell must measure >2x
+    # fewer engine decode steps end-to-end, and the recorded acceptance
+    # rates must map to >2x modeled decode tok/s on a memory-bound target
+    assert sp["draft_ideal"]["speedup_steps"] > 2.0, \
+        f"ideal-draft speculation only " \
+        f"{sp['draft_ideal']['speedup_steps']:.2f}x in steps: see {path}"
+    for cell in ("ngram", "draft_ideal"):
+        m = sp[cell]["model_speedup_at_recorded_acceptance"]
+        assert m > 2.0, \
+            f"spec.{cell}: modeled decode tok/s {m:.2f}x <= 2x at " \
+            f"acceptance {sp[cell]['acceptance_rate']:.2f}: see {path}"
     assert not regressions, "; ".join(regressions) + f": see {path}"
 
 

@@ -96,6 +96,10 @@ def _serve_entries():
     out["serve_chunk_prefill_q2_dp2"] = (
         chk.fn.trace(*chk.abstract_inputs).jaxpr, dict(meta))
 
+    ver = rs.build_spec_verify_step(model, mesh, B, 4, num_blocks, bs, nb)
+    out["serve_spec_verify_q2_dp2"] = (
+        ver.fn.trace(*ver.abstract_inputs).jaxpr, dict(meta))
+
     copy_fn = rs.build_page_copy(model, mesh, num_blocks, bs, pdec.plan)
     pool_sds, _ = model.paged_cache_abstract(num_blocks, bs, pdec.plan)
     ids = jax.ShapeDtypeStruct((4,), jnp.int32)

@@ -71,6 +71,18 @@ def main():
                     help="chunked prefill width interleaved with decode "
                          "steps (0 = monolithic bucketed prefill; the "
                          "prefix cache auto-chunks when 0)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: proposals verified per "
+                         "engine step (0 = plain decode; DESIGN.md §14)")
+    ap.add_argument("--spec-mode", default="auto",
+                    choices=("auto", "draft", "ngram"),
+                    help="proposal source: a draft model (--draft-config) "
+                         "or the model-free n-gram prompt-lookup fallback; "
+                         "auto picks draft when one is configured")
+    ap.add_argument("--draft-config", default="",
+                    help="arch name of the draft model (e.g. smollm-360m); "
+                         "built reduced iff --reduced, on the same mesh, "
+                         "with vocab_size aligned to the target")
     args = ap.parse_args()
 
     import jax
@@ -97,11 +109,25 @@ def main():
     model = build_model(arch.model, ctx, run)
     params = model.init(jax.random.PRNGKey(0))
 
+    draft_model = draft_params = None
+    if args.draft_config:
+        import dataclasses
+        darch = (get_reduced(args.draft_config) if args.reduced
+                 else get_arch(args.draft_config))
+        # the verify step judges draft proposals in the target's vocab, so
+        # the draft head must emit the same token space
+        dcfg = dataclasses.replace(darch.model,
+                                   vocab_size=model.cfg.vocab_size)
+        draft_model = build_model(dcfg, ctx, run)
+        draft_params = draft_model.init(jax.random.PRNGKey(7))
+
     engine = InferenceEngine(model, mesh, params, EngineConfig(
         n_slots=args.n_slots, block_size=args.block_size,
         num_blocks=args.num_blocks, max_seq_len=args.max_seq_len,
         max_waiting=args.max_waiting, prefix_cache=args.prefix_cache,
-        prefill_chunk=args.prefill_chunk))
+        prefill_chunk=args.prefill_chunk, spec_k=args.spec_k,
+        spec_mode=args.spec_mode),
+        draft_model=draft_model, draft_params=draft_params)
 
     plens = [int(x) for x in args.prompt_lens.split(",")]
     rng = np.random.RandomState(0)
@@ -154,6 +180,12 @@ def main():
               f"evictions={s.cache_evictions} "
               f"prefill_chunks={s.prefill_chunks} "
               f"cached_nodes={len(engine.prefix) if engine.prefix else 0}")
+    if args.spec_k:
+        print(f"spec: mode={engine.spec_mode} k={args.spec_k} "
+              f"rounds={s.spec_rounds} proposed={s.spec_proposed} "
+              f"accepted={s.spec_accepted} committed={s.spec_committed} "
+              f"acceptance={s.acceptance_rate():.3f} "
+              f"tokens/slot-round={s.tokens_per_round():.3f}")
 
 
 if __name__ == "__main__":

@@ -419,18 +419,13 @@ class DenseLM:
         x = x + self._mlp(p, h2, ops)
         return x, pool_l
 
-    def prefill_chunk_paged(self, params, pool, table, ids, pos, lens, ops):
-        """Prefill C prompt positions per slot straight into the block pool.
-
-        ids: [B', C] host token layout (chunk tokens, 0-padded); table:
-        [B_loc, nb] LOCAL block ids; pos: [B_loc] chunk start positions;
-        lens: [B_loc] valid positions this chunk (0 = idle slot).  Returns
-        (full-vocab logits [B_loc, v_pad] at each slot's LAST valid chunk
-        position — only meaningful for slots whose prompt completes this
-        chunk — and the updated pool).  The chunk attention is the fp32
-        full-score jnp path regardless of attn_impl (per-slot chunk starts
-        are outside the flash kernel's static q_start contract); decode
-        steps keep their configured kernel."""
+    def _chunk_trunk(self, params, pool, table, ids, pos, lens, ops):
+        """Shared chunk body for prefill_chunk_paged / verify_chunk_paged:
+        scatter up to C positions per slot into the pool and run the layer
+        scan, returning the final hidden states [B_loc, C, h] plus the
+        updated pool.  The chunk attention is the fp32 full-score jnp path
+        regardless of attn_impl (per-slot chunk starts are outside the
+        flash kernel's static q_start contract)."""
         x = ops.embed(ids, params["embed"]).astype(self.cdt)
         cast = lambda t: jax.tree.map(lambda a: a.astype(self.cdt)
                                       if a.dtype == self.pdt and a.ndim > 1
@@ -455,11 +450,51 @@ class DenseLM:
 
         x, new_pool = lax.scan(body, x, (params["blocks"], pool))
         x = self._norm(ops, x, params["ln_f"], params.get("ln_fb"))
+        return x, new_pool
+
+    def prefill_chunk_paged(self, params, pool, table, ids, pos, lens, ops):
+        """Prefill C prompt positions per slot straight into the block pool.
+
+        ids: [B', C] host token layout (chunk tokens, 0-padded); table:
+        [B_loc, nb] LOCAL block ids; pos: [B_loc] chunk start positions;
+        lens: [B_loc] valid positions this chunk (0 = idle slot).  Returns
+        (full-vocab logits [B_loc, v_pad] at each slot's LAST valid chunk
+        position — only meaningful for slots whose prompt completes this
+        chunk — and the updated pool).  Decode steps keep their configured
+        kernel; the chunk trunk is the fp32 jnp path (see _chunk_trunk)."""
+        x, new_pool = self._chunk_trunk(params, pool, table, ids, pos, lens,
+                                        ops)
+        C = x.shape[1]
         last = jnp.clip(lens - 1, 0, C - 1)
         xi = jnp.take_along_axis(x, last[:, None, None], axis=1)
         logits = ops.head_logits(xi, params["head"].astype(self.cdt),
                                  vocab_real=self.cfg.vocab_size)
         return logits, new_pool
+
+    def verify_chunk_paged(self, params, pool, table, ids, pos, lens, ops):
+        """Speculative-verify forward: same chunk trunk as
+        prefill_chunk_paged, but logits at EVERY chunk position.
+
+        Row c of the output is the target distribution for the token at
+        absolute position pos+c+1, i.e. the distribution a plain decode
+        step would produce after committing ids[:, :c+1].  Accepted
+        proposals' K/V are already committed in-place by the trunk's
+        update-then-attend scatter; a rejected suffix needs no cleanup —
+        the engine simply does not advance ``num_cached`` past the
+        rejection point, so the stale pages beyond it are masked by
+        position and overwritten by the next verify/prefill write (the
+        same argument that makes COW donors' stale tails and
+        eviction-replay safe).  Returns ([B_loc, C, v_pad] logits, pool)."""
+        x, new_pool = self._chunk_trunk(params, pool, table, ids, pos, lens,
+                                        ops)
+        B, C, h = x.shape
+        # head_logits expects [B', 1, h]; flatten chunk rows into the batch
+        # axis (its token gather + local-batch dynamic-slice are layout-
+        # compatible with the flattened batch: b_loc scales by C).
+        logits = ops.head_logits(x.reshape(B * C, 1, h),
+                                 params["head"].astype(self.cdt),
+                                 vocab_real=self.cfg.vocab_size)
+        return logits.reshape(B, C, -1), new_pool
 
     def prefill_cache_specs(self, ops):
         """Cache specs in prefill layout: batch over data, seq sharded over

@@ -195,6 +195,35 @@ def paged_decode_traffic(n_slots: int, Hkv: int, D: int, *,
     }
 
 
+def spec_decode_speedup(acceptance: float, k: int, *,
+                        draft_cost_ratio: float = 0.0,
+                        verify_overhead: float = 1.0) -> dict:
+    """Analytic speculative-decoding speedup (DESIGN.md §14).
+
+    With i.i.d. per-token acceptance probability ``acceptance`` and ``k``
+    proposals per round, the expected committed tokens per verify round is
+    the truncated geometric sum E = (1 - a^(k+1)) / (1 - a) — every prefix
+    of accepted proposals plus the correction/bonus token the verify round
+    always commits.  Decode is memory-bound on the weight stream, so a
+    (k+1)-wide verify costs about one plain decode step (``verify_overhead``
+    scales it for the extra KV/activation traffic); a draft step costs
+    ``draft_cost_ratio`` of a target step (0 = free, the n-gram proposer).
+    Speedup over plain decode = E / (verify_overhead + k * ratio).
+    """
+    if not 0.0 <= acceptance <= 1.0:
+        raise ValueError(f"acceptance {acceptance} outside [0, 1]")
+    if k < 0:
+        raise ValueError(f"k {k} < 0")
+    a = min(acceptance, 1.0 - 1e-12)
+    e_tokens = (1.0 - a ** (k + 1)) / (1.0 - a)
+    cost = verify_overhead + k * draft_cost_ratio
+    return {
+        "expected_tokens_per_round": e_tokens,
+        "round_cost_decode_steps": cost,
+        "speedup": e_tokens / cost,
+    }
+
+
 def model_flops(cfg, shape) -> float:
     """6*N*D training flops (fwd+bwd) or 2*N*D serving flops."""
     n_active = cfg.active_param_count()

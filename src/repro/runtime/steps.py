@@ -948,6 +948,80 @@ def build_chunk_prefill_step(model, mesh, n_slots: int, chunk: int,
                       mesh=mesh, plan=plan)
 
 
+def build_spec_verify_step(model, mesh, n_slots: int, width: int,
+                           num_blocks: int, block_size: int,
+                           max_blocks: int):
+    """Batched multi-token speculative VERIFY over the paged pool.
+
+    fn(params, pool, tables, pos, lens, ids) -> (logits, pool)
+
+    - ids: [n_slots, width] int32 — per slot [last_token, draft_1..draft_k]
+      (0-padded; width = spec_k + 1).
+    - pos: [n_slots] int32 — first write position (== num_cached).
+    - lens: [n_slots] int32 — 1 + proposals this round (0 = idle slot).
+    - logits: [n_slots, width, v_pad] — row c is the target distribution
+      for the token at position pos+c+1, bit-matching what a plain decode
+      step at that position would produce (the spec_decode mdcheck pins
+      this).
+
+    The trunk is prefill_chunk_paged's (update-then-attend), so accepted
+    tokens' K/V are ALREADY committed in-place when the host reads the
+    logits; rollback is just not advancing cur_pos past the rejection
+    point (position masking + later overwrites make the stale suffix
+    unobservable — the eviction-replay argument).  Sharding is identical
+    to the chunk-prefill step; only the logits keep the chunk axis.
+    """
+    from ..core.ops import kv_group_axes
+    from ..core import collectives as col_mod
+
+    ctx = model.ctx
+    plan = make_plan(ctx, ShapeSpec("paged", 1, n_slots, "decode"))
+    ops = make_ops(ctx, plan)
+    specs = model.specs(ops)
+    pool_sds, pool_specs = model.paged_cache_abstract(num_blocks, block_size,
+                                                      plan)
+    gaxes = kv_group_axes(ctx, plan)
+    sizes = dict(data=ctx.data, depth=ctx.depth, row=ctx.rows, col=ctx.cols)
+    n_groups = 1
+    for a in gaxes:
+        n_groups *= sizes[a]
+    bpg = num_blocks // n_groups
+
+    table_spec = _group_spec(gaxes, None)
+    pos_spec = _group_spec(gaxes)
+    logits_spec = _group_spec(gaxes, None, None)
+    ids_spec = ops.spec_tokens_in()
+
+    def local_step(params, pool, tables, pos, lens, ids):
+        if gaxes:
+            tables = tables - col_mod.axis_linear_index(gaxes) * bpg
+        logits, new_pool = model.verify_chunk_paged(params, pool, tables,
+                                                    ids, pos, lens, ops)
+        return logits, new_pool
+
+    tables_sds = jax.ShapeDtypeStruct((n_slots, max_blocks), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
+    lens_sds = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
+    ids_sds = jax.ShapeDtypeStruct((n_slots, width), jnp.int32)
+
+    in_specs = (specs, pool_specs, table_spec, pos_spec, pos_spec, ids_spec)
+    out_specs = (logits_spec, pool_specs)
+    in_sh = (_shardings(mesh, specs), _shardings(mesh, pool_specs),
+             NamedSharding(mesh, table_spec), NamedSharding(mesh, pos_spec),
+             NamedSharding(mesh, pos_spec), NamedSharding(mesh, ids_spec))
+    out_sh = (NamedSharding(mesh, logits_spec), _shardings(mesh, pool_specs))
+    smapped = shard_map(local_step, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs)
+    fn = jax.jit(smapped, donate_argnums=(1,), in_shardings=in_sh,
+                 out_shardings=out_sh)
+    abs_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return StepBundle(fn=fn,
+                      abstract_inputs=(abs_params, pool_sds, tables_sds,
+                                       pos_sds, lens_sds, ids_sds),
+                      in_shardings=in_sh, out_shardings=out_sh,
+                      mesh=mesh, plan=plan)
+
+
 def build_page_copy(model, mesh, num_blocks: int, block_size: int,
                     decode_plan):
     """Device-side COW page copy: pool pages ``src`` -> pages ``dst``.

@@ -33,7 +33,8 @@ from ..runtime.steps import (build_chunk_prefill_step, build_page_copy,
                              build_prefill_step, make_plan)
 from .kv_cache import PagedCacheConfig, PagedKVCache
 from .prefix_cache import RadixPrefixCache
-from .sampling import SamplingParams, sample_tokens, slot_arrays
+from .sampling import (SamplingParams, sample_tokens, slot_arrays,
+                       spec_accept, spec_target_probs)
 from .scheduler import FAILED, RUNNING, WAITING, Request, Scheduler
 
 
@@ -61,6 +62,12 @@ class EngineConfig:
     prefill_chunk: int = 0       # chunked prefill width (0 = monolithic;
     #                              prefix_cache implies the chunked path
     #                              with an auto-sized chunk)
+    # --- speculative decoding (DESIGN.md §14) ---
+    spec_k: int = 0              # proposals per round (0 = plain decode)
+    spec_mode: str = "auto"      # auto | draft | ngram: auto takes draft
+    #                              when a draft model is attached, else the
+    #                              model-free n-gram prompt-lookup fallback
+    spec_ngram_max: int = 3      # longest n-gram the fallback matches
 
 
 def _pcts(vals, qs=(50, 95, 99)):
@@ -96,10 +103,29 @@ class EngineStats:
     prefix_tokens_total: int = 0   # prompt positions admitted while cache on
     cow_splits: int = 0          # copy-on-write donor-page copies
     cache_evictions: int = 0     # cold cache leaves dropped for capacity
-    prefill_chunks: int = 0      # chunked-prefill step invocations
+    prefill_chunks: int = 0      # chunked-prefill steps doing NEW work
+    #                              (replays after eviction don't count)
+    # --- speculative decoding (DESIGN.md §14) ---
+    spec_rounds: int = 0         # verify-step invocations
+    spec_proposed: int = 0       # draft tokens judged by the target
+    spec_accepted: int = 0       # draft tokens accepted verbatim
+    spec_committed: int = 0      # tokens committed by verify rounds
+    spec_slot_rounds: int = 0    # per-slot verify participations
 
     def tokens_per_s(self) -> float:
         return self.tokens / self.wall if self.wall else 0.0
+
+    def acceptance_rate(self) -> float:
+        """Fraction of judged proposals accepted verbatim."""
+        return (self.spec_accepted / self.spec_proposed
+                if self.spec_proposed else 0.0)
+
+    def tokens_per_round(self) -> float:
+        """Mean committed tokens per slot per verify round — the decode
+        speedup factor: a plain decode step commits exactly 1 token per
+        active slot, a verify round commits 1 + accepted (+ bonus)."""
+        return (self.spec_committed / self.spec_slot_rounds
+                if self.spec_slot_rounds else 0.0)
 
     def cache_hit_rate(self) -> float:
         """Fraction of admitted prompt tokens served from shared pages."""
@@ -118,7 +144,8 @@ class EngineStats:
 
 class InferenceEngine:
     def __init__(self, model, mesh, params, cfg: EngineConfig,
-                 injector=None, clock=None):
+                 injector=None, clock=None, draft_model=None,
+                 draft_params=None):
         self.model, self.mesh, self.params, self.cfg = model, mesh, params, cfg
         # injectable wall clock: deadline/TTFT tests drive a fake clock
         self.clock = clock or time.perf_counter
@@ -128,6 +155,14 @@ class InferenceEngine:
         self._oom_streak = 0     # consecutive steps with preemptions
         self._calm_streak = 0    # consecutive steps without
         self._evict_carry = 0    # cache evictions from pre-replan cache objs
+        # speculative decoding: the draft rides the same mesh; its params
+        # are kept as host arrays so elastic replans can re-place them on
+        # the rebuilt mesh exactly like the target's
+        self.draft_model = draft_model
+        self._draft_params_host = None
+        if draft_model is not None and cfg.spec_k > 0:
+            import jax
+            self._draft_params_host = jax.tree.map(np.asarray, draft_params)
         self._build()
 
     # ---------------------------------------------------------------- build
@@ -181,9 +216,47 @@ class InferenceEngine:
             self._page_copy = build_page_copy(
                 model, mesh, cfg.num_blocks, cfg.block_size, self.plan)
         self._chunk_bundles = {}     # chunk width -> StepBundle
+        # speculative decoding (DESIGN.md §14): one verify bundle of fixed
+        # width spec_k + 1 plus either a DraftRunner (parallel draft pool
+        # over the SAME block tables) or the n-gram fallback proposer
+        self._spec_on = cfg.spec_k > 0
+        self._draft = None
+        self._ngram = None
+        self._verify = None
+        if self._spec_on:
+            from ..runtime.steps import build_spec_verify_step
+            from .spec import DraftRunner, NgramProposer
+            mode = cfg.spec_mode
+            if mode == "auto":
+                mode = "draft" if self.draft_model is not None else "ngram"
+            if mode not in ("draft", "ngram"):
+                raise ValueError(f"spec_mode={cfg.spec_mode!r} not in "
+                                 f"(auto, draft, ngram)")
+            if mode == "draft" and self.draft_model is None:
+                raise ValueError("spec_mode='draft' needs a draft model")
+            self.spec_mode = mode
+            self._verify = build_spec_verify_step(
+                model, mesh, cfg.n_slots, cfg.spec_k + 1, cfg.num_blocks,
+                cfg.block_size, self.cache.max_blocks)
+            if mode == "draft":
+                if self.draft_model.cfg.vocab_size != model.cfg.vocab_size:
+                    raise ValueError(
+                        f"draft vocab {self.draft_model.cfg.vocab_size} != "
+                        f"target vocab {model.cfg.vocab_size}")
+                self._draft = DraftRunner(
+                    self.draft_model, mesh, self._draft_params_host,
+                    cfg.n_slots, cfg.num_blocks, cfg.block_size,
+                    self.cache.max_blocks)
+            else:
+                self._ngram = NgramProposer(max_n=cfg.spec_ngram_max)
         if not hasattr(self, "stats"):      # survives replan rebuilds
             self.stats = EngineStats()
             self.requests = []
+        elif self._spec_on:
+            # replan rebuild: the draft pool is fresh (zeroed) and block
+            # ids moved — every draft watermark is stale
+            for r in self.requests:
+                r.draft_cached = 0
 
     def _bucket(self, n: int) -> int:
         """Prefill bucket covering ``n`` tokens: power-of-two multiples of
@@ -254,9 +327,18 @@ class InferenceEngine:
                                 f"exceeded")
                 self.stats.shed += 1
 
-    def _record_emit(self, req: Request) -> None:
-        """TTFT / inter-token latency accounting on the engine clock."""
-        now = self.clock()
+    def _record_emit(self, req: Request, now: float | None = None) -> None:
+        """TTFT / inter-token latency accounting on the engine clock.
+
+        ``now`` is the emit stamp read ONCE per engine step, immediately
+        after the sampled tokens of the completing chunk / decode batch
+        materialize (the device sync point).  Stamping inside the
+        per-request loop instead would leak admission bookkeeping, COW
+        copies and radix inserts of EARLIER slots into LATER slots' TTFT
+        (ISSUE 9 satellite): all tokens of one batch are produced by the
+        same computation and must carry the same stamp."""
+        if now is None:
+            now = self.clock()
         if req.first_token_t is None:
             req.first_token_t = now
             self.stats.ttfts.append(now - req.arrival_t)
@@ -319,6 +401,7 @@ class InferenceEngine:
             toks = np.asarray(sample_tokens(logits, temps, ks, ps, seeds,
                                             lengths))
             ok = self._finite_rows(logits)
+            now = self.clock()    # one stamp for the whole sampled batch
             for j, req in enumerate(chunk):
                 if not ok[j]:
                     # poisoned prefill: quarantine just this request; its
@@ -326,10 +409,11 @@ class InferenceEngine:
                     self._quarantine(req)
                     continue
                 req.num_cached = len(req.seq_tokens)
+                req.prefill_high = max(req.prefill_high, req.num_cached)
                 tok = int(toks[j])
                 req.out_tokens.append(tok)
                 req.last_token = tok
-                self._record_emit(req)
+                self._record_emit(req, now)
                 emitted += 1
             self.stats.prefills += 1
         # a prefilled request may already be done (max_new_tokens == 1 after
@@ -369,8 +453,19 @@ class InferenceEngine:
         for req in admitted:
             hit = req.prefix_hit
             self.stats.prefix_lookups += 1
-            self.stats.prefix_tokens_total += len(req.seq_tokens)
+            # Once-per-request token accounting (ISSUE 9 satellite): a
+            # request evicted mid-chunk-prefill re-enters admission with
+            # the same prompt positions — counting them again would
+            # double-count the replayed work in prefix_tokens_total (and
+            # let reuse of positions this request itself already paid for
+            # inflate the hit rate past 1).  prefill_counted is the
+            # per-request high-water mark of positions already counted;
+            # only growth beyond it is new.
+            seq_len = len(req.seq_tokens)
+            self.stats.prefix_tokens_total += max(
+                0, seq_len - req.prefill_counted)
             if hit is None or hit.tokens == 0:
+                req.prefill_counted = max(req.prefill_counted, seq_len)
                 continue
             if hit.cow_len:
                 # the suffix prefill overwrites positions >= cow_len; the
@@ -382,7 +477,9 @@ class InferenceEngine:
                 self.stats.cow_splits += 1
             req.num_cached = hit.tokens
             self.stats.prefix_hits += 1
-            self.stats.prefix_tokens_reused += hit.tokens
+            self.stats.prefix_tokens_reused += max(
+                0, hit.tokens - req.prefill_counted)
+            req.prefill_counted = max(req.prefill_counted, seq_len)
 
     def _run_chunk_prefills(self) -> int:
         """One fixed-shape chunked-prefill step for every mid-prefill slot
@@ -419,7 +516,14 @@ class InferenceEngine:
         bundle = self._chunk_for(width)
         logits, self.pool = bundle.fn(self.params, self.pool, tables,
                                       pos, lens, ids)
-        self.stats.prefill_chunks += 1
+        # A chunk step counts as prefill work only when some slot advances
+        # past its prefill_high watermark: a slot evicted mid-prefill and
+        # re-admitted REPLAYS positions it already materialized once
+        # (restarting from the prefix-cache hit point), and those replayed
+        # chunks must not double-count (ISSUE 9 satellite).
+        if any(req.num_cached + take[req.rid] > req.prefill_high
+               for req in pending):
+            self.stats.prefill_chunks += 1
         finishing = [r for r in pending
                      if r.num_cached + take[r.rid] == len(r.seq_tokens)]
         emitted = 0
@@ -428,9 +532,14 @@ class InferenceEngine:
             temps, ks, ps, seeds = slot_arrays(samplings)
             toks = np.asarray(sample_tokens(logits, temps, ks, ps, seeds,
                                             pos + lens))
+            # stamp ONCE at the completing chunk's sampled tokens — before
+            # the per-slot retire/radix-insert bookkeeping below, so later
+            # slots' TTFT doesn't absorb earlier slots' host work
+            now = self.clock()
         for req in pending:
             if req not in finishing:
                 req.num_cached += take[req.rid]
+                req.prefill_high = max(req.prefill_high, req.num_cached)
                 continue
             if not ok[req.slot]:
                 # poisoned chunk: quarantine just this request (bounded
@@ -438,6 +547,7 @@ class InferenceEngine:
                 self._quarantine(req)
                 continue
             req.num_cached = len(req.seq_tokens)
+            req.prefill_high = max(req.prefill_high, req.num_cached)
             if self.prefix is not None:
                 # only fully-covered prompt blocks are indexed (insert
                 # stops at len // block_size), so decode's appends at
@@ -447,7 +557,7 @@ class InferenceEngine:
             tok = int(toks[req.slot])
             req.out_tokens.append(tok)
             req.last_token = tok
-            self._record_emit(req)
+            self._record_emit(req, now)
             emitted += 1
         for req in finishing:
             if req.state == RUNNING and req.finished:
@@ -522,6 +632,139 @@ class InferenceEngine:
             self.stats.cache_evictions = (self._evict_carry
                                           + self.prefix.evictions)
 
+    # --------------------------------------------------------- speculation
+    def _judge(self, req, rows, toks, proposals):
+        """Accept/reject one slot's verify rows -> (committed, n_accepted).
+
+        rows: [W, v_pad] target logits (row c governs position
+        num_cached + c + 1); toks: [W] the plain sampler's draw at each
+        row's position (the identical jitted code path plain decode uses,
+        so greedy acceptance is bit-exact by construction); proposals:
+        the judged draft tokens.
+
+        Greedy: accept while proposal c equals the argmax draw, commit the
+        first mismatching draw as the correction, bonus-commit the final
+        row's draw on full acceptance.  temperature > 0: Leviathan
+        rejection sampling against the post-mask target distribution
+        (point-mass proposals — the draft proposes greedily), residual
+        resampling on rejection; the committed token at every position is
+        marginally EXACTLY the plain sampler's distribution."""
+        if req.sampling.temperature <= 0.0:
+            committed, m = [], 0
+            for c, d in enumerate(proposals):
+                t = int(toks[c])
+                committed.append(t)
+                if t != int(d):
+                    return committed, m
+                m += 1
+            committed.append(int(toks[len(proposals)]))
+            return committed, m
+        if not proposals:
+            return [int(toks[0])], 0
+        sp = req.sampling
+        probs = np.asarray(spec_target_probs(
+            np.asarray(rows[:len(proposals)]), sp.temperature, sp.top_k,
+            sp.top_p))
+        committed, m = spec_accept(probs, proposals, None, sp.seed,
+                                   req.num_cached)
+        if m == len(proposals):
+            committed.append(int(toks[len(proposals)]))
+        return committed, m
+
+    def _spec_round(self, running, idx: int):
+        """One speculative decode round: propose k tokens per slot, verify
+        them all in ONE batched multi-token forward over the block tables,
+        commit the accepted prefix (+1 correction/bonus token) in place.
+
+        Rollback is implicit: a rejected suffix's K/V stays in the pool
+        but num_cached never advances past the rejection point, so it is
+        masked by position and overwritten by the next round's writes —
+        the same replay argument the scheduler's eviction parity proves.
+        Returns the [(rid, token)] list step() reports."""
+        n = self.cfg.n_slots
+        W = self.cfg.spec_k + 1
+        groups = [self.sched.group_of_slot(s) for s in range(n)]
+        slot_blocks = [[] for _ in range(n)]
+        for r in running:
+            slot_blocks[r.slot] = r.block_ids
+        tables = self.cache.make_table(slot_blocks, groups)
+        k_eff = {r.rid: max(0, r.spec_lookahead - 1) for r in running}
+        if self._draft is not None:
+            props = self._draft.propose(running, tables, k_eff)
+        else:
+            props = {r.rid: self._ngram.propose(r.seq_tokens,
+                                                k_eff[r.rid])
+                     for r in running}
+        ids = np.zeros((n, W), np.int32)
+        pos = np.zeros((n,), np.int32)
+        lens = np.zeros((n,), np.int32)
+        samplings = [SamplingParams()] * n
+        for r in running:
+            s = r.slot
+            pr = [int(t) for t in props[r.rid][:k_eff[r.rid]]]
+            props[r.rid] = pr
+            ids[s, 0] = r.last_token
+            if pr:
+                ids[s, 1:1 + len(pr)] = pr
+            pos[s] = r.num_cached
+            lens[s] = 1 + len(pr)
+            samplings[s] = r.sampling
+        logits, self.pool = self._verify.fn(self.params, self.pool, tables,
+                                            pos, lens, ids)
+        if self.injector is not None:
+            logits = self._poison_logits(logits, idx)
+        ok = self._finite_rows(logits)
+        lg = np.asarray(logits)                       # [n, W, v_pad]
+        temps, ks, ps, seeds = slot_arrays(samplings)
+        posmat = pos[:, None] + 1 + np.arange(W, dtype=np.int32)[None, :]
+        toks = np.asarray(sample_tokens(
+            lg.reshape(n * W, -1), np.repeat(temps, W), np.repeat(ks, W),
+            np.repeat(ps, W), np.repeat(seeds, W),
+            posmat.reshape(-1))).reshape(n, W)
+        now = self.clock()    # one stamp for the whole verified batch
+        emitted = []
+        for r in running:
+            s = r.slot
+            if not ok[s]:
+                self._quarantine(r)
+                continue
+            pr = props[r.rid]
+            committed, m_acc = self._judge(r, lg[s], toks[s], pr)
+            self.stats.spec_proposed += len(pr)
+            self.stats.spec_accepted += m_acc
+            self.stats.spec_slot_rounds += 1
+            n0 = r.num_cached
+            for t in committed:
+                r.num_cached += 1
+                t = int(t)
+                r.out_tokens.append(t)
+                r.last_token = t
+                self._record_emit(r, now)
+                emitted.append((r.rid, t))
+                self.stats.spec_committed += 1
+                if r.finished:
+                    break     # eos / budget: drop the committed tail
+            # draft watermark: positions <= n0 + m_acc hold draft K/V for
+            # the tokens actually committed; the correction token's
+            # position does not (the draft wrote the REJECTED proposal
+            # there), and position n0 + k_eff was never draft-written
+            r.draft_cached = min(n0 + m_acc + 1, r.num_cached,
+                                 n0 + k_eff[r.rid])
+            if r.finished and r.state == RUNNING:
+                if self.prefix is not None:
+                    # accepted tokens that completed full blocks become
+                    # shareable prefix pages; insert stops at
+                    # len // block_size, and rolled-back proposals never
+                    # enter seq_tokens, so a rejected branch is never
+                    # indexed.  [:-1]: the final committed token's K/V is
+                    # the never-written pending position — it must not
+                    # land inside an indexed block.
+                    self.prefix.insert(self.sched.group_of_slot(r.slot),
+                                       r.seq_tokens[:-1], r.block_ids)
+                self.sched.retire(r)
+        self.stats.spec_rounds += 1
+        return emitted
+
     # ---------------------------------------------------------------- step
     def step(self):
         """One engine iteration; returns [(rid, token)] emitted this step."""
@@ -549,6 +792,15 @@ class InferenceEngine:
             prefill_emitted = self._run_chunk_prefills()
         else:
             prefill_emitted = self._run_prefills(admitted) if admitted else 0
+        if self._spec_on:
+            # declare this round's write window BEFORE capacity runs: the
+            # k in-flight draft tokens per slot need resident pages
+            for r in self.sched.running:
+                if r.last_token is not None:
+                    remaining = (r.sampling.max_new_tokens
+                                 - len(r.generated))
+                    r.spec_lookahead = 1 + max(
+                        0, min(self.cfg.spec_k, remaining - 1))
         preempted = self.sched.ensure_decode_capacity()
         self.stats.preemptions += len(preempted)
         # mid-chunk-prefill requests (last_token still None) sit out the
@@ -556,7 +808,9 @@ class InferenceEngine:
         running = [r for r in self.sched.running
                    if r.last_token is not None]
         emitted = []
-        if running:
+        if running and self._spec_on:
+            emitted = self._spec_round(running, idx)
+        elif running:
             n = self.cfg.n_slots
             ids = np.zeros((n, 1), np.int32)
             pos = np.zeros((n,), np.int32)
@@ -578,6 +832,7 @@ class InferenceEngine:
             temps, ks, ps, seeds = slot_arrays(samplings)
             toks = np.asarray(sample_tokens(logits, temps, ks, ps, seeds,
                                             pos + 1))
+            now = self.clock()    # one stamp for the whole decode batch
             for req in running:
                 if not ok[req.slot]:
                     # poisoned slot: quarantine ONLY this request (bounded
@@ -588,7 +843,7 @@ class InferenceEngine:
                 tok = int(toks[req.slot])
                 req.out_tokens.append(tok)
                 req.last_token = tok
-                self._record_emit(req)
+                self._record_emit(req, now)
                 emitted.append((req.rid, tok))
                 if req.finished:
                     self.sched.retire(req)
@@ -661,6 +916,12 @@ class InferenceEngine:
         params_np = jax.tree.map(np.asarray, self.params)
 
         self.model = build_model(self.model.cfg, rp.ctx, self.model.run)
+        if self.draft_model is not None:
+            # the draft rides the same mesh: rebuild it for the new ctx;
+            # _build re-places its host params and zeroes its pool (draft
+            # KV is disposable — watermarks reset, parity unaffected)
+            self.draft_model = build_model(self.draft_model.cfg, rp.ctx,
+                                           self.draft_model.run)
         self.mesh = logical_mesh(rp.ctx, jax.devices()[:rp.n_used])
         self._build()    # stats/requests survive (guarded init in _build)
 

@@ -41,12 +41,23 @@ def mask_top_k(logits, k):
 
 def mask_top_p(logits, p):
     """Nucleus: keep the smallest prefix of the sorted distribution whose
-    probability mass reaches p; p >= 1 keeps all."""
-    order = jnp.argsort(-logits)
+    probability mass reaches p; p >= 1 keeps all.
+
+    Boundary contract (ISSUE 9): token i (in sorted order) is kept iff the
+    EXCLUSIVE prefix mass before it is < p, computed from the shifted
+    cumsum — not ``cum - probs``, whose per-element cancellation error
+    flips tokens sitting exactly on a cumsum edge.  The first token whose
+    cumulative probability crosses p is therefore always kept, the top
+    token is kept even when p <= probs[0] (p=0 degenerates to greedy, not
+    to an empty support), and ties at equal logits resolve deterministically
+    toward the smaller vocab id (stable argsort)."""
+    order = jnp.argsort(-logits, stable=True)
     sorted_logits = logits[order]
     probs = jax.nn.softmax(sorted_logits)
     cum = jnp.cumsum(probs)
-    keep_sorted = (cum - probs) < p             # first crossing included
+    excl = jnp.concatenate([jnp.zeros((1,), cum.dtype), cum[:-1]])
+    keep_sorted = excl < p                      # first crossing included
+    keep_sorted = keep_sorted.at[0].set(True)   # never empty support
     keep = jnp.zeros(logits.shape[-1], bool).at[order].set(keep_sorted)
     keep = keep | (p >= 1.0)
     return jnp.where(keep, logits, -jnp.inf)
@@ -80,3 +91,85 @@ def slot_arrays(params_list):
             np.array([p.top_k for p in params_list], np.int32),
             np.array([p.top_p for p in params_list], np.float32),
             np.array([p.seed for p in params_list], np.int32))
+
+
+# ---------------------------------------------------------------- speculation
+# Rejection sampling for speculative decoding (Leviathan et al. 2023): the
+# committed token at every position is marginally distributed EXACTLY as the
+# plain sampler's token at that position.  The target distribution is the
+# same temperature -> top_k -> top_p chain _sample_one draws through, made
+# explicit as probabilities; proposals from a point-mass proposer (n-gram
+# lookup) are the q = e_d special case.  All draws are keyed on
+# (seed, absolute position) like _sample_one, so eviction + re-prefill
+# replays the identical accept/reject trajectory.
+
+def _masked_probs_one(logits, temperature, top_k, top_p):
+    lg = logits / jnp.maximum(temperature, 1e-6)
+    lg = mask_top_k(lg, top_k)
+    lg = mask_top_p(lg, top_p)
+    return jax.nn.softmax(lg)
+
+
+@partial(jax.jit, static_argnums=())
+def spec_target_probs(logits, temperature, top_k, top_p):
+    """logits [R, v_pad] -> [R, v_pad] post-mask sampling distributions.
+
+    Row r is the categorical _sample_one draws from at temperature>0 —
+    the target p of the accept/reject test.  Scalars broadcast per row."""
+    R = logits.shape[0]
+    b = lambda a: jnp.broadcast_to(jnp.asarray(a), (R,))
+    return jax.vmap(_masked_probs_one)(logits, b(temperature), b(top_k),
+                                       b(top_p))
+
+
+def _spec_key(seed, position, tag):
+    """Sub-key for the accept (tag 1) / residual (tag 2) draws — distinct
+    from the bare (seed, position) key _sample_one consumes."""
+    k = jax.random.fold_in(jax.random.PRNGKey(seed), position)
+    return jax.random.fold_in(k, tag)
+
+
+def spec_accept(row_probs, proposals, draft_probs, seed, pos0):
+    """Host-side accept/reject over one slot's verify rows.
+
+    row_probs: [C, V] float target distributions (row c governs the token
+    at absolute position pos0 + c + 1); proposals: length-(C-1) int draft
+    tokens (proposal c is judged by row c); draft_probs: None for
+    point-mass proposers, else [C-1, V] draft distributions q.
+
+    Returns (tokens, n_accepted): ``tokens`` commits one token per judged
+    row up to and including the first rejection — accepted proposals
+    verbatim, then one token from the residual max(p - q, 0)/Z.  When every
+    proposal is accepted the caller appends the bonus token drawn by the
+    plain sampler from the final row.  Accept draws use sub-key tag 1 and
+    residual draws tag 2 at the committed token's own position, so the
+    stream is independent of the bonus-token stream and replay-stable."""
+    import numpy as np
+    tokens, n_acc = [], 0
+    for c, d in enumerate(proposals):
+        d = int(d)
+        p = np.asarray(row_probs[c], np.float64)
+        q_d = 1.0 if draft_probs is None else float(draft_probs[c][d])
+        position = int(pos0) + c + 1
+        u = float(jax.random.uniform(_spec_key(seed, position, 1)))
+        if u * q_d < p[d] or q_d <= 0.0:
+            tokens.append(d)
+            n_acc += 1
+            continue
+        # rejected: draw the correction from the residual distribution
+        if draft_probs is None:
+            r = p.copy()
+            r[d] = 0.0
+        else:
+            r = np.maximum(p - np.asarray(draft_probs[c], np.float64), 0.0)
+        z = r.sum()
+        if z <= 0.0:
+            # p == q numerically: any p-distributed draw is correct
+            r, z = p, p.sum()
+        gkey = _spec_key(seed, position, 2)
+        g = np.asarray(jax.random.gumbel(gkey, (r.shape[0],), jnp.float32),
+                       np.float64)
+        logr = np.where(r > 0.0, np.log(np.maximum(r / z, 1e-300)), -np.inf)
+        tokens.append(int(np.argmax(logr + g)))
+        break
+    return tokens, n_acc

@@ -62,6 +62,21 @@ class Request:
         self.preemptions = 0
         self.admit_seq = -1          # admission order (preemption priority)
         self.prefix_hit = None       # PrefixHit consumed by the engine
+        # --- speculative decoding (DESIGN.md §14) ---
+        # positions the DRAFT pool has materialized; disposable (reset on
+        # preemption — the draft re-prefills, target parity never depends
+        # on it)
+        self.draft_cached = 0
+        # positions the next decode round will write (1 = plain decode;
+        # 1 + k proposals when the engine speculates) — capacity accounting
+        self.spec_lookahead = 1
+        # --- prefill accounting (ISSUE 9 satellite): prompt positions
+        # already counted into EngineStats.prefix_tokens_* (once per
+        # request, not per admission) and the highest position ever
+        # materialized (survives preemption — replayed chunks are not new
+        # work).  Neither is reset by preempt().
+        self.prefill_counted = 0
+        self.prefill_high = 0
 
     @property
     def seq_tokens(self):
@@ -247,20 +262,26 @@ class Scheduler:
         req.num_cached = 0
         req.last_token = None
         req.prefix_hit = None
+        req.draft_cached = 0         # draft pages may be reallocated
+        req.spec_lookahead = 1
         req.state = WAITING
         req.preemptions += 1
         self.waiting.appendleft(req)
 
     def ensure_decode_capacity(self):
-        """Give every running request room for its next position; preempt
-        youngest-first inside a group when its freelist runs dry.  Returns
-        the requests preempted this round."""
+        """Give every running request room for its next position(s);
+        preempt youngest-first inside a group when its freelist runs dry.
+        ``spec_lookahead`` is the number of positions the next round may
+        write (1 = plain decode, 1 + k when the engine speculates — the k
+        in-flight draft tokens need resident pages before verification).
+        Returns the requests preempted this round."""
         preempted = []
         for slot in range(self.n_slots):
             req = self.slots[slot]
             if req is None:
                 continue
-            need = self.cache.blocks_for(req.num_cached + 1)
+            need = self.cache.blocks_for(req.num_cached
+                                         + max(1, req.spec_lookahead))
             while need > len(req.block_ids):
                 g = self.group_of_slot(slot)
                 got = self.cache.pool.alloc(g, 1)

@@ -1,0 +1,152 @@
+"""Speculative-decoding proposers for the serving engine (DESIGN.md §14).
+
+Two proposal sources feed the engine's verify round:
+
+- ``NgramProposer`` — model-free prompt-lookup: the longest recent n-gram
+  suffix of the request's own token history is matched against its earlier
+  occurrences and the continuation is proposed verbatim.  Zero extra
+  compute or memory; acceptance is high exactly when decode output echoes
+  the prompt (extraction, summarization, code edits).
+- ``DraftRunner`` — a small config from ``src/repro/configs`` drafting on
+  the SAME [data, depth, row, col] mesh: it keeps a parallel paged pool
+  ([L_d, P, bs, Hkv_d, D_d]) indexed by the SAME global block ids and
+  tables as the target pool, so there is no second allocator and no extra
+  scheduling — capacity reserved for the target automatically covers the
+  draft.  Per request a ``draft_cached`` watermark tracks how much of the
+  sequence the draft pool has materialized; catch-up runs as the draft's
+  own chunked prefill, then k greedy paged-decode steps emit proposals.
+
+The draft pool is disposable state: preemption resets ``draft_cached`` to
+0 and an elastic replan simply zeroes the whole pool — the next round
+re-prefills it.  Target-side correctness never depends on draft contents
+(rejection sampling / greedy verification gate every committed token), so
+staleness can only cost acceptance rate, never parity.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class NgramProposer:
+    """Prompt-lookup proposer: longest-suffix n-gram match over the
+    request's own resident tokens (prompt + generated)."""
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        if max_n < min_n or min_n < 1:
+            raise ValueError(f"bad n-gram range [{min_n}, {max_n}]")
+        self.max_n, self.min_n = max_n, min_n
+
+    def propose(self, tokens, k: int):
+        """Up to ``k`` proposed continuation tokens (possibly empty)."""
+        if k <= 0 or len(tokens) < self.min_n + 1:
+            return []
+        tokens = list(tokens)
+        for n in range(min(self.max_n, len(tokens) - 1), self.min_n - 1, -1):
+            suffix = tokens[-n:]
+            # most recent earlier occurrence wins (local context beats
+            # distant repeats)
+            for i in range(len(tokens) - n - 1, -1, -1):
+                if tokens[i:i + n] == suffix:
+                    cont = tokens[i + n:i + n + k]
+                    if cont:
+                        return cont
+        return []
+
+
+class DraftRunner:
+    """Draft-model executor sharing the target engine's block tables.
+
+    Owns the draft pool arrays and two step bundles (paged decode + fixed-
+    width chunked prefill) built from the draft model on the target's mesh
+    with the target's (n_slots, num_blocks, block_size, max_blocks) — the
+    pool's physical-block axis lines up 1:1 with the target pool, so any
+    table the engine builds addresses both."""
+
+    #: catch-up chunk width (single compile; gap loops over it)
+    CHUNK = 16
+
+    def __init__(self, model, mesh, params, n_slots: int, num_blocks: int,
+                 block_size: int, max_blocks: int):
+        import jax
+        import jax.numpy as jnp
+        from ..runtime.steps import (build_chunk_prefill_step,
+                                     build_paged_decode_step)
+        self.model, self.mesh, self.params = model, mesh, params
+        self.n_slots = n_slots
+        self.dec = build_paged_decode_step(model, mesh, n_slots, num_blocks,
+                                           block_size, max_blocks)
+        self.chunk = build_chunk_prefill_step(model, mesh, n_slots,
+                                              self.CHUNK, num_blocks,
+                                              block_size, max_blocks)
+        self.params = jax.device_put(params, self.dec.in_shardings[0])
+        self._pool_init = jax.jit(
+            lambda: jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                 self.dec.abstract_inputs[1]),
+            out_shardings=self.dec.in_shardings[1])
+        self.pool = self._pool_init()
+
+    def reset(self) -> None:
+        """Drop all draft KV (elastic replan / full invalidation)."""
+        self.pool = self._pool_init()
+
+    # ------------------------------------------------------------- propose
+    def _catch_up(self, reqs, tables) -> None:
+        """Chunk-prefill the draft pool from each request's draft_cached
+        watermark to its target num_cached (0 tokens for caught-up slots)."""
+        import jax.numpy as jnp
+        n = self.n_slots
+        while True:
+            behind = [r for r in reqs if r.draft_cached < r.num_cached]
+            if not behind:
+                return
+            ids = np.zeros((n, self.CHUNK), np.int32)
+            pos = np.zeros((n,), np.int32)
+            lens = np.zeros((n,), np.int32)
+            for r in behind:
+                s = r.slot
+                t = min(self.CHUNK, r.num_cached - r.draft_cached)
+                ids[s, :t] = r.seq_tokens[r.draft_cached:r.draft_cached + t]
+                pos[s] = r.draft_cached
+                lens[s] = t
+            _, self.pool = self.chunk.fn(self.params, self.pool,
+                                         jnp.asarray(tables),
+                                         jnp.asarray(pos), jnp.asarray(lens),
+                                         jnp.asarray(ids))
+            for r in behind:
+                r.draft_cached += min(self.CHUNK,
+                                      r.num_cached - r.draft_cached)
+
+    def propose(self, reqs, tables, k_eff: dict):
+        """Greedy draft proposals per request: {rid: [tokens...]}.
+
+        reqs: running requests with last_token set; tables: the engine's
+        [n_slots, max_blocks] GLOBAL table (capacity for num_cached +
+        k_eff + 1 already reserved); k_eff: rid -> proposal budget.  Slots
+        whose budget is exhausted stay in the fixed-shape batch frozen at
+        their last (pos, token) — the rewrite is idempotent, so no
+        per-step table rebuild is needed."""
+        import jax.numpy as jnp
+        self._catch_up(reqs, tables)
+        props = {r.rid: [] for r in reqs}
+        kmax = max(k_eff.values(), default=0)
+        if kmax == 0:
+            return props
+        n = self.n_slots
+        cur_id = np.zeros((n, 1), np.int32)
+        cur_pos = np.zeros((n,), np.int32)
+        for r in reqs:
+            cur_id[r.slot, 0] = r.last_token
+            cur_pos[r.slot] = r.num_cached
+        tables = jnp.asarray(tables)
+        for j in range(kmax):
+            lg, self.pool = self.dec.fn(self.params, self.pool, tables,
+                                        jnp.asarray(cur_pos),
+                                        jnp.asarray(cur_id))
+            nxt = np.asarray(lg).argmax(-1)
+            for r in reqs:
+                if j < k_eff[r.rid]:
+                    t = int(nxt[r.slot])
+                    props[r.rid].append(t)
+                    cur_id[r.slot, 0] = t
+                    cur_pos[r.slot] += 1
+        return props

@@ -603,6 +603,88 @@ def serve_prefix():
     print(json.dumps(out))
 
 
+def serve_spec():
+    """Speculative decoding on the serving engine (DESIGN.md §14).
+
+    Three cells on one greedy long-generation workload, all asserted
+    token-identical in-run: plain paged decode, the model-free n-gram
+    proposer (realistic acceptance), and an ideal draft (draft == target,
+    acceptance 1.0 by construction — the deterministic upper bound).  The
+    per-slot decode-step speedup ``speedup_steps`` is an exact counter, not
+    wall-clock: every verify round costs one weight-stream like a decode
+    step on a memory-bound target, so committed-tokens-per-round IS the
+    decode tok/s factor; ``model_*`` maps the recorded acceptance through
+    roofline.spec_decode_speedup with a smollm-360m/yi-6b draft cost
+    ratio."""
+    import jax
+    import numpy as np
+    from repro.configs.base import RunConfig
+    from repro.core.api import ParallelContext
+    from repro.core.mesh import logical_mesh
+    from repro.models.registry import build_model, get_reduced
+    from repro.roofline.analysis import spec_decode_speedup
+    from repro.serve import EngineConfig, InferenceEngine, SamplingParams
+    from repro.serve.engine import EngineStats
+
+    run = RunConfig(param_dtype="float32", compute_dtype="float32",
+                    loss_chunk=32, q_chunk=16, kv_chunk=16)
+    ctx = ParallelContext(mode="tesseract", data=2, depth=1, rows=2, cols=2)
+    mesh = logical_mesh(ctx)
+    model = build_model(get_reduced("yi-6b").model, ctx, run)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, 250, (6,)).tolist() for _ in range(4)]
+    n_new, spec_k = 96, 3
+    # smollm-360m drafting for yi-6b: per-step cost ratio ~ param ratio
+    draft_ratio = 0.36 / 6.0
+
+    def measure(spec_k_, mode, dm=None, dp=None):
+        eng = InferenceEngine(model, mesh, params, EngineConfig(
+            n_slots=4, block_size=8, num_blocks=128, max_seq_len=256,
+            spec_k=spec_k_, spec_mode=mode), draft_model=dm,
+            draft_params=dp)
+        for warmed in (False, True):             # first pass compiles
+            eng.stats = EngineStats()
+            reqs = [eng.add_request(p, SamplingParams(max_new_tokens=n_new))
+                    for p in prompts]
+            eng.run()
+        s = eng.stats
+        return [list(r.generated) for r in reqs], s
+
+    plain, ps = measure(0, "auto")
+    cells = {"plain": {"steps": ps.steps, "tokens": ps.tokens,
+                       "wall_s": ps.wall,
+                       "tokens_per_s": ps.tokens_per_s()}}
+    for cell, mode, dm, dp, ratio in (
+            ("ngram", "ngram", None, None, 0.0),
+            ("draft_ideal", "draft", model, params, draft_ratio)):
+        got, s = measure(spec_k, mode, dm, dp)
+        assert got == plain, f"{cell}: speculative tokens != plain decode"
+        acc = s.acceptance_rate()
+        cells[cell] = {
+            "steps": s.steps, "spec_rounds": s.spec_rounds,
+            "spec_proposed": s.spec_proposed,
+            "spec_accepted": s.spec_accepted,
+            "spec_committed": s.spec_committed,
+            "acceptance_rate": acc,
+            "tokens_per_round": s.tokens_per_round(),
+            "speedup_steps": ps.steps / s.steps,
+            "wall_s": s.wall, "tokens_per_s": s.tokens_per_s(),
+            "model_speedup_at_recorded_acceptance": spec_decode_speedup(
+                acc, spec_k, draft_cost_ratio=ratio)["speedup"],
+        }
+    out = {"spec": {
+        "workload": {"prompt_len": 6, "requests": len(prompts),
+                     "new_tokens": n_new, "spec_k": spec_k,
+                     "draft_cost_ratio": draft_ratio},
+        **cells,
+        "model_chat_typical": spec_decode_speedup(
+            0.8, spec_k, draft_cost_ratio=draft_ratio),
+    }}
+    print(json.dumps(out))
+
+
 def resilience():
     """The ISSUE-6 acceptance schedules as measured metrics, persisted to
     BENCH_resilience.json by benchmarks/run.py.  Train side: NaN step +
@@ -738,4 +820,5 @@ if __name__ == "__main__":
      "attention": attention,
      "serve_throughput": serve_throughput,
      "serve_prefix": serve_prefix,
+     "serve_spec": serve_spec,
      "resilience": resilience}[sys.argv[1]]()

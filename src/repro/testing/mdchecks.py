@@ -979,6 +979,103 @@ def check_engine_elastic():
     print("PASS engine_elastic")
 
 
+def check_spec_decode():
+    """Speculative decoding (DESIGN.md §14) commits bit-identical greedy
+    tokens to plain paged decode for q in {1, 2}, with both the n-gram
+    prompt-lookup proposer and a smollm-360m draft model, under pool
+    pressure (eviction + re-prefill mid-speculation) and through an
+    8 -> 4 elastic replan."""
+    import dataclasses
+
+    import jax
+    from repro.models.registry import build_model, get_reduced
+    from repro.serve import EngineConfig, InferenceEngine, SamplingParams
+
+    rng = np.random.RandomState(9)
+    # repetitive prompts give the n-gram proposer something to accept;
+    # parity must hold regardless of acceptance
+    prompts, n_new = [], []
+    for i in range(8):
+        base = rng.randint(0, 250, (rng.randint(3, 6),)).tolist()
+        prompts.append((base * 6)[:rng.randint(6, 18)])
+        n_new.append(int(rng.randint(4, 10)))
+
+    def run_spec(model, mesh, params, cfg_kw, draft=None, dparams=None):
+        eng = InferenceEngine(model, mesh, params,
+                              EngineConfig(n_slots=8, block_size=4,
+                                           max_seq_len=64, **cfg_kw),
+                              draft_model=draft, draft_params=dparams)
+        reqs = [eng.add_request(p, SamplingParams(max_new_tokens=n))
+                for p, n in zip(prompts, n_new)]
+        eng.run()
+        return [list(r.generated) for r in reqs], eng
+
+    grids = [
+        ("q1", dict(mode="tesseract", data=1, depth=1, rows=1, cols=1)),
+        ("q2_dp2", dict(mode="summa2d", data=2, depth=1, rows=2, cols=2)),
+    ]
+    for name, variant in grids:
+        _, run, ctx, mesh, model = _build("yi-6b", variant)
+        params = model.init(jax.random.PRNGKey(0))
+        plain, _ = run_spec(model, mesh, params, dict(num_blocks=128))
+
+        darch = get_reduced("smollm-360m")
+        dcfg = dataclasses.replace(darch.model,
+                                   vocab_size=model.cfg.vocab_size)
+        draft = build_model(dcfg, ctx, run)
+        dparams = draft.init(jax.random.PRNGKey(7))
+
+        for mode, dm, dp in (("ngram", None, None),
+                             ("draft", draft, dparams)):
+            got, eng = run_spec(model, mesh, params,
+                                dict(num_blocks=128, spec_k=3,
+                                     spec_mode=mode), dm, dp)
+            s = eng.stats
+            assert got == plain, \
+                f"{name}/{mode}: spec != plain\n{got}\n{plain}"
+            assert s.spec_rounds > 0 and s.spec_committed > 0
+            print(f"  spec {name}/{mode}: bit-identical "
+                  f"(acceptance={s.acceptance_rate():.2f}, "
+                  f"tokens/slot-round={s.tokens_per_round():.2f})")
+
+        # pool pressure: evictions interleave with speculative rounds;
+        # position-keyed replay must keep parity (rollback correctness)
+        got, eng = run_spec(model, mesh, params,
+                            dict(num_blocks=32, spec_k=3,
+                                 spec_mode="ngram"))
+        assert eng.stats.preemptions > 0, f"{name}: no eviction triggered"
+        assert got == plain, f"{name}: evicted spec run != plain"
+        print(f"  spec {name}/evict: parity held through "
+              f"{eng.stats.preemptions} preemptions")
+
+    # elastic: speculate, drop 8 -> 4 devices (verify bundle + draft pool
+    # rebuilt, draft watermarks reset), finish — tokens identical
+    _, run, ctx, mesh, model = _build(
+        "yi-6b", dict(mode="tesseract", data=2, depth=1, rows=2, cols=2))
+    params = model.init(jax.random.PRNGKey(0))
+    plain, _ = run_spec(model, mesh, params, dict(num_blocks=128))
+    darch = get_reduced("smollm-360m")
+    dcfg = dataclasses.replace(darch.model, vocab_size=model.cfg.vocab_size)
+    draft = build_model(dcfg, ctx, run)
+    dparams = draft.init(jax.random.PRNGKey(7))
+    eng = InferenceEngine(model, mesh, params, EngineConfig(
+        n_slots=8, block_size=4, num_blocks=128, max_seq_len=64,
+        spec_k=3, spec_mode="draft"), draft_model=draft,
+        draft_params=dparams)
+    reqs = [eng.add_request(p, SamplingParams(max_new_tokens=n))
+            for p, n in zip(prompts, n_new)]
+    for _ in range(3):
+        eng.step()
+    rp = eng.replan_to(4)
+    assert rp.ctx.data == 1 and rp.n_used == 4, rp
+    eng.run()
+    got = [list(r.generated) for r in reqs]
+    assert got == plain, f"post-replan spec tokens diverged\n{got}\n{plain}"
+    print(f"  spec elastic: 8 -> {rp.n_used} devices mid-speculation, "
+          f"tokens identical")
+    print("PASS spec_decode")
+
+
 def _mesh5(ctx, pipe):
     """[pipe x data x depth x row x col] mesh (pipe=1 kept as a real axis so
     the 1-stage baseline runs the same 1F1B code path)."""
@@ -1528,6 +1625,7 @@ CHECKS = {
     "chaos_train": check_chaos_train,
     "chaos_serve": check_chaos_serve,
     "prefix_cache": check_prefix_cache,
+    "spec_decode": check_spec_decode,
     "shardcheck": check_shardcheck,
 }
 

@@ -456,3 +456,193 @@ def test_prefix_cache_cow_split_leaves_donor_intact():
     pool.free(hit.full_blocks)
     assert pc.flush() == 2                # drops the two remaining nodes
     assert pool.available(0) == pool.capacity(0)
+
+
+# ---------------------------------------------------------------------------
+# nucleus boundary + speculative decoding (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+def test_mask_top_p_boundary_cases():
+    """Regression for the nucleus boundary: the first token whose cumulative
+    probability crosses p is kept, exact cumsum edges don't flip, ties at
+    equal logits break toward the smaller vocab id, and the support is
+    never empty."""
+    # equal logits -> exactly uniform probs (0.25 is exact in binary), so
+    # every p below sits exactly on a cumsum edge
+    lg = jnp.zeros((4,))
+    for p, keep_n in ((0.25, 1), (0.5, 2), (0.75, 3), (1.0, 4)):
+        out = np.asarray(mask_top_p(lg, p))
+        assert np.isfinite(out).sum() == keep_n, (p, out)
+        assert np.isfinite(out[:keep_n]).all()      # smaller ids win ties
+    # p = 0 degenerates to greedy (top token kept), not an empty support
+    lg2 = jnp.array([0.0, 3.0, 1.0, 2.0, -1.0])
+    out0 = np.asarray(mask_top_p(lg2, 0.0))
+    assert np.isfinite(out0[1]) and np.isneginf(np.delete(out0, 1)).all()
+    # all mass on one token: nothing else ever crosses p < 1
+    out3 = np.asarray(mask_top_p(jnp.array([50.0, 0.0, 0.0]), 0.999))
+    assert np.isfinite(out3[0]) and np.isneginf(out3[1:]).all()
+    # tied logits: the smaller vocab id of the tie is the one kept
+    out4 = np.asarray(mask_top_p(jnp.array([1.0, 2.0, 2.0, 0.0]), 0.3))
+    assert np.isfinite(out4[1]) and np.isneginf(out4[2])
+    # p >= 1 keeps everything bit-identically
+    np.testing.assert_array_equal(np.asarray(mask_top_p(lg2, 1.0)),
+                                  np.asarray(lg2))
+
+
+def test_spec_rejection_sampling_distribution():
+    """Leviathan accept/reject with a point-mass proposal commits tokens
+    marginally distributed EXACTLY as the plain sampler draws them:
+    empirical TV distance to the target distribution vanishes."""
+    from repro.serve.sampling import spec_accept, spec_target_probs
+    rng = np.random.RandomState(0)
+    V = 8
+    logits = (rng.randn(1, V) * 2.0).astype(np.float32)
+    target = np.asarray(spec_target_probs(jnp.asarray(logits),
+                                          0.8, 0, 0.9))[0]
+    N = 2500
+    counts = np.zeros(V)
+    d = int(np.argsort(target)[-2])   # a plausible but not top proposal
+    for i in range(N):
+        toks, _ = spec_accept(target[None, :], [d], None, seed=17, pos0=i)
+        counts[toks[0]] += 1
+    tv = 0.5 * np.abs(counts / N - target).sum()
+    assert tv < 0.05, (tv, counts / N, target)
+    # an out-of-nucleus proposal (p[d] == 0) is always rejected and the
+    # correction still follows the target
+    d0 = int(np.argmin(target))
+    if target[d0] == 0.0:
+        toks, n_acc = spec_accept(target[None, :], [d0], None, seed=3,
+                                  pos0=0)
+        assert n_acc == 0 and target[toks[0]] > 0.0
+
+
+def test_chunk_prefill_eviction_restart_and_stats(setup):
+    """A slot evicted mid-chunk-prefill restarts from the prefix-cache hit
+    point; replayed chunks don't inflate prefill_chunks and each prompt
+    position enters prefix_tokens_total exactly once (satellite 2)."""
+    mesh, model, params = setup
+
+    def fresh():
+        return InferenceEngine(model, mesh, params, EngineConfig(
+            n_slots=2, block_size=4, num_blocks=32, max_seq_len=64,
+            prefix_cache=True, prefill_chunk=4))
+
+    shared = list(range(1, 25))               # 24 tokens = 6 full blocks
+    long_p = shared + list(range(101, 109))   # 32 tokens
+
+    # reference: no eviction
+    ref = fresh()
+    ra = ref.add_request(shared, SamplingParams(max_new_tokens=2))
+    while not ra.finished:
+        ref.step()
+    rb = ref.add_request(long_p, SamplingParams(max_new_tokens=4))
+    ref.run()
+    want = list(rb.generated)
+    chunks_ref = ref.stats.prefill_chunks
+
+    eng = fresh()
+    a = eng.add_request(shared, SamplingParams(max_new_tokens=2))
+    while not a.finished:
+        eng.step()
+    base_chunks = eng.stats.prefill_chunks
+    base_total = eng.stats.prefix_tokens_total
+    b = eng.add_request(long_p, SamplingParams(max_new_tokens=4))
+    eng.step()                                # admit (radix hit) + 1 chunk
+    assert b.state == "running" and b.last_token is None, \
+        "test setup: b should still be mid-chunk-prefill"
+    assert b.num_cached > 20                  # restarted past the hit point
+    # evict mid-prefill (what ensure_decode_capacity does under pressure)
+    eng.sched.slots[b.slot] = None
+    eng.sched.preempt(b)
+    eng.run()
+    assert b.preemptions == 1
+    assert list(b.generated) == want          # replay parity
+    # re-admission restarted from the radix hit (24 shared tokens), and the
+    # replayed chunk over already-materialized positions was not re-counted
+    assert (eng.stats.prefill_chunks - base_chunks
+            == chunks_ref - base_chunks), \
+        (eng.stats.prefill_chunks, chunks_ref)
+    # b's 32 prompt positions counted once despite two admissions
+    assert eng.stats.prefix_tokens_total - base_total == len(long_p)
+
+
+class _TickClock:
+    """Injectable engine clock: each read advances 1s, so stamp identity
+    and ordering are exact."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+def test_ttft_stamped_at_completing_chunk(setup):
+    """TTFT attribution (satellite 3): requests whose prefill completes in
+    the same chunk step share ONE first-token stamp taken when the chunk's
+    sampled tokens materialize — host-side work for earlier slots (radix
+    insert, retire) never leaks into later slots' TTFT, and admission/COW
+    time is not the stamp."""
+    mesh, model, params = setup
+    clock = _TickClock()
+    eng = InferenceEngine(model, mesh, params, EngineConfig(
+        n_slots=2, block_size=4, num_blocks=32, max_seq_len=64,
+        prefix_cache=True, prefill_chunk=8), clock=clock)
+    p1, p2 = _prompts(seed=9, lens=(8, 8))
+    r1 = eng.add_request(p1, SamplingParams(max_new_tokens=3))
+    r2 = eng.add_request(p2, SamplingParams(max_new_tokens=3))
+    assert r1.arrival_t < r2.arrival_t
+    t_admitted = clock.t
+    eng.run()
+    assert r1.first_token_t is not None and r2.first_token_t is not None
+    # one batch = one stamp: identical TTFT clock for both slots
+    assert r1.first_token_t == r2.first_token_t
+    # stamped inside the completing chunk step, after admission
+    assert r1.first_token_t > t_admitted
+    assert len(eng.stats.ttfts) == 2
+
+
+def test_prefix_cache_spec_refcounts_property(setup):
+    """prefix_cache x speculation (satellite 4): over random accept/reject
+    histories every pool page returns to baseline refcounts, committed
+    sequences' full blocks are radix-indexed, and no rolled-back branch is
+    ever indexed."""
+    mesh, model, params = setup
+    rng = np.random.RandomState(3)
+    for trial in range(2):
+        eng = InferenceEngine(model, mesh, params, EngineConfig(
+            n_slots=2, block_size=4, num_blocks=32, max_seq_len=64,
+            prefix_cache=True, spec_k=3, spec_mode="ngram"))
+        reqs = []
+        for i in range(4):
+            base = rng.randint(0, 50, (4,)).tolist()
+            prompt = (base * 4)[:int(rng.randint(8, 15))]
+            sp = SamplingParams(temperature=0.7 if i % 2 else 0.0,
+                                seed=trial * 10 + i,
+                                max_new_tokens=int(rng.randint(4, 10)))
+            reqs.append(eng.add_request(prompt, sp))
+        eng.run()
+        assert all(r.state == "finished" for r in reqs)
+        assert eng.stats.spec_rounds > 0
+        # committed tokens completing full blocks are shareable: the radix
+        # covers every finished sequence's written prefix block-exactly
+        for r in reqs:
+            seq = r.seq_tokens[:-1]
+            hit = eng.prefix.lookup(0, seq, len(seq))
+            assert hit.tokens >= len(seq) // 4 * 4, (trial, r.rid)
+        # a rolled-back branch is never indexed: every cached path spells a
+        # prefix of some committed sequence
+        def walk(node_map, prefix):
+            for key, node in node_map.items():
+                path = prefix + list(key)
+                assert any(path == r.seq_tokens[:len(path)] for r in reqs), \
+                    path
+                walk(node.children, path)
+        walk(eng.prefix._roots[0], [])
+        # all request holds were released at retirement; dropping the cache
+        # holds returns the pool to its pristine freelist
+        eng.prefix.flush()
+        pool = eng.cache.pool
+        for g in range(pool.n_groups):
+            assert pool.available(g) == pool.capacity(g), trial
