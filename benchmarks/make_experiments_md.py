@@ -260,6 +260,48 @@ def main():
                     f"sweep, cached per shape |")
         return "\n".join(rows)
 
+    def longctx_table():
+        p = HERE.parent / "BENCH_longctx.json"
+        if not p.exists():
+            return ("(pending: `PYTHONPATH=src python -m benchmarks.run` "
+                    "writes BENCH_longctx.json)")
+        d = json.loads(p.read_text())
+        rows = ["| cell | value | gate |", "|---|---|---|"]
+        for name, c in d["train"].items():
+            if "max_loss_dev" not in c:
+                continue
+            rows.append(
+                f"| train {name} vs single device | max loss dev "
+                f"{c['max_loss_dev']:.1e} | < 2e-5 asserted (fp32) |")
+        for cell, c in d["wire_conformance"].items():
+            rows.append(
+                f"| seq-axis ppermutes, {cell} | {c['traced_ppermutes']} "
+                f"permutes / {c['traced_wire_bytes']} B traced | == "
+                f"`ring_attention_traffic` byte-exact |")
+        iso = d["iso_memory"]
+        rows.append(
+            f"| context at iso-memory (seq 1 -> 4) | "
+            f"{iso['context_ratio']:.0f}x context at "
+            f"{iso['temp_bytes_ratio']:.2f}x per-device temp bytes | "
+            f"{iso['context_per_memory_ratio']:.2f}x >= 2x floor |")
+        m = d["modeled_v5e"]
+        for nm, label in (("train_128k_seq8", "modeled v5e train 128k"),
+                          ("prefill_128k_seq8",
+                           "modeled v5e prefill 128k")):
+            c = m[nm]
+            rows.append(
+                f"| {label}, seq=8 | {c['wire_bytes']/2**30:.2f} GiB wire, "
+                f"comm/step {c['step_comm_s']*1e3:.2f} ms vs compute "
+                f"{c['step_compute_s']*1e3:.2f} ms | comm hidden: "
+                f"{c['comm_hidden']} |")
+        tiles = ", ".join(
+            f"seq{t['seq_shards']}/L{t['ring_step_Tk']}->"
+            f"({t['best'][0]},{t['best'][1]})"
+            for t in d["ring_step_autotune"])
+        rows.append(f"| ring-step autotuned tiles | {tiles} | committed "
+                    f"per-backend cache |")
+        return "\n".join(rows)
+
     def gspmd_table():
         rows = [perf_hdr]
         for arch in ("yi-6b", "llama3-405b"):
@@ -488,6 +530,24 @@ and greedy decode argmax bit-identical — plus the `attn_impl_parity` /
 pallas `serve_engine` / `zero1_parity` / `pipeline_parity` mdcheck cells:
 
 {attention_table()}
+
+### B+++++. Ring/striped flash attention over the seq axis (DESIGN.md §15)
+
+Measured by `benchmarks/run.py` (longctx case; 8 fake CPU devices, yi-6b
+reduced).  The sequence axis joins the mesh as
+`(data, seq, depth, row, col)`: each device keeps its resident Q shard and
+ppermutes K/V blocks around the seq ring while the flash kernel consumes
+one block per step (logsumexp-merged), so per-device activations scale
+with T/seq — context grows with the ring at iso-memory.  `striped`
+re-stripes token ownership (`shard r` holds positions `r + seq*arange`) to
+balance the causal mask's work across ranks.  Striped fp32 training parity
+vs the single-device flash baseline is asserted in-run; the seq-axis
+ppermute count and wire bytes of the traced train step must equal
+`roofline.ring_attention_traffic` byte-for-byte (also enforced as
+`train_ring_attn_*` entries in SHARDCHECK.json); the iso-memory cells are
+measured XLA buffer assignments:
+
+{longctx_table()}
 
 ### C. deepseek-v2-236b / train_4k (worst useful-FLOPs, MoE)
 

@@ -46,8 +46,9 @@ def _model_for(ctx, *, attn_impl="jnp", zero=False, pipe_mb=0):
 
 
 def _train_entry(*, data=1, depth=1, rows=1, cols=1, schedule="fused",
-                 inop=False, attn_impl="jnp", zero=False, pipe=1):
-    """Trace one train-step variant -> (closed_jaxpr, meta, bundle)."""
+                 inop=False, attn_impl="jnp", zero=False, pipe=1, seq=1,
+                 attn_schedule="local"):
+    """Trace one train-step variant -> (closed_jaxpr, meta, bundle, info)."""
     from ..configs.base import ShapeSpec
     from ..core.api import ParallelContext
     from ..core.mesh import logical_mesh, pipeline_mesh
@@ -55,15 +56,17 @@ def _train_entry(*, data=1, depth=1, rows=1, cols=1, schedule="fused",
 
     ctx = ParallelContext(mode="tesseract", data=data, depth=depth,
                           rows=rows, cols=cols, reduce_dgrad_in_op=inop,
-                          matmul_schedule=schedule, attn_impl=attn_impl)
-    n = pipe * data * depth * rows * cols
+                          matmul_schedule=schedule, attn_impl=attn_impl,
+                          seq=seq, attn_schedule=attn_schedule)
+    n = pipe * data * seq * depth * rows * cols
     mesh = (pipeline_mesh(ctx, pipe, jax.devices()[:n]) if pipe > 1
             else logical_mesh(ctx, jax.devices()[:n]))
     model = _model_for(ctx, attn_impl=attn_impl, zero=zero)
     shape = ShapeSpec("t", seq_len=SEQ, global_batch=BATCH, kind="train")
     bundle = build_train_step(model, mesh, shape)
     tr = bundle.fn.trace(*bundle.abstract_inputs)
-    return tr.jaxpr, bundle.shardcheck_meta, bundle
+    return tr.jaxpr, bundle.shardcheck_meta, bundle, dict(ctx=ctx,
+                                                          model=model)
 
 
 def _serve_entries():
@@ -129,7 +132,56 @@ TRAIN_SWEEP = {
     "train_zero1_q2_dp2": dict(data=2, rows=2, cols=2, zero=True),
     "train_pipe2_q1_dp2": dict(data=2, pipe=2),
     "train_pipe2_q2": dict(rows=2, cols=2, pipe=2),
+    # ring/striped flash attention over the seq axis (DESIGN.md §15): the
+    # seq-axis ppermute count and wire bytes are gated EXACTLY against
+    # core/ring_attention.ring_ppermute_{counts,bytes}
+    "train_ring_attn_q1_seq2": dict(seq=2, attn_schedule="striped"),
+    "train_ring_attn_q2_seq2": dict(rows=2, cols=2, seq=2,
+                                    attn_schedule="striped"),
 }
+
+
+def _ring_attn_gate(prog, ctx, model, name):
+    """Exact seq-axis ppermute conformance for a ring-attention train entry.
+
+    Prediction mirrors models/transformer._ring_attn: each layer streams
+    K/V blocks of the locally resident kv heads (GQA-sharded over col when
+    num_kv_heads divides q, else expanded to the local q heads) and fp32
+    dK/dV accumulators of the same shape, with counts from
+    ring_ppermute_counts (remat="full" replays the fwd ring in the bwd).
+    Returns (findings, got_count, got_bytes)."""
+    from ..core.ring_attention import (ring_ppermute_bytes,
+                                      ring_ppermute_counts)
+    from .rules import Finding
+
+    cfg = model.cfg
+    n = ctx.seq
+    L = SEQ // n
+    kv_shard = cfg.num_kv_heads % ctx.q == 0
+    h_stream = (cfg.num_kv_heads if kv_shard else cfg.num_heads) // ctx.cols
+    b_loc = BATCH // (ctx.data * ctx.depth * ctx.rows)
+    dh = cfg.d_model // cfg.num_heads
+    # _model_for pins compute_dtype=float32, so K/V blocks and the fp32
+    # accumulators are the same 4-byte block
+    blk = b_loc * h_stream * L * dh * 4
+    counts = ring_ppermute_counts(n, train=True, remat_replay=True)
+    per_layer = ring_ppermute_bytes(n, kv_block_bytes=blk,
+                                    acc_block_bytes=blk,
+                                    train=True, remat_replay=True)
+    exp_n = cfg.num_layers * counts["total"]
+    exp_b = cfg.num_layers * per_layer["total"]
+    seq_pp = [c for c in prog.collectives
+              if c.kind == "ppermute" and c.axes == (ctx.axis_seq,)]
+    got_n = sum(c.mult for c in seq_pp)
+    got_b = int(round(sum(c.total_wire_bytes for c in seq_pp)))
+    findings = []
+    if got_n != exp_n or got_b != exp_b:
+        findings.append(Finding(
+            "commmodel", name,
+            f"seq-axis ppermutes {got_n} / {got_b}B != ring model "
+            f"{exp_n} / {exp_b}B ({cfg.num_layers} layers x "
+            f"{counts['total']} permutes x {blk}B blocks)"))
+    return findings, got_n, got_b
 
 
 def matmul_conformance() -> tuple:
@@ -204,12 +256,18 @@ def run_sweep(config: str = "all", entry_filter: str = ""):
         for name, kw in TRAIN_SWEEP.items():
             if not want(name):
                 continue
-            jaxpr, meta, bundle = _train_entry(**kw)
+            jaxpr, meta, bundle, info = _train_entry(**kw)
             prog = extract_ir(jaxpr)
             findings += rules.run_all(prog, meta, jaxpr, entry=name)
             summ = bl.summarize(prog)
             summ["wire_time_us"] = round(
                 wire_time_s(prog.total_wire_bytes()) * 1e6, 3)
+            if info["ctx"].seq > 1:
+                f, got_n, got_b = _ring_attn_gate(prog, info["ctx"],
+                                                  info["model"], name)
+                findings += f
+                summ["seq_ppermutes"] = got_n
+                summ["seq_ppermute_bytes"] = got_b
             if bundle.pipe_info is not None:
                 info = bundle.pipe_info
                 exp = expected_ring_transfers(

@@ -166,6 +166,18 @@ class RunConfig:
     # (DESIGN.md §10).  "auto" resolves per backend: fused kernels on TPU,
     # jnp elsewhere; "pallas" forces the kernels (interpret mode off-TPU).
     attn_impl: str = "jnp"
+    # --- long-context sequence sharding (DESIGN.md §15) ---
+    # Number of sequence-axis shards: launchers copy this onto
+    # ParallelContext.seq, adding the "seq" mesh axis when > 1 so train
+    # activations are time-sharded and attention rings K/V around the seq
+    # axis.  Incompatible with pipe_stages > 1 (core/mesh.py rejects it).
+    seq_shards: int = 1
+    # Attention SCHEDULE across seq shards ("local" | "ring" | "striped" |
+    # "auto"); the config surface for ParallelContext.attn_schedule.
+    # "auto" resolves to striped causal rings for training; with
+    # seq_shards == 1 "ring"/"auto" also switch seq-sharded prefill from
+    # gather-full-KV to a (depth, row) ring.
+    attn_schedule: str = "local"
     # --- pipeline / accumulation knobs (DESIGN.md §8) ---
     # Pipeline-parallel stage count: launchers build the 5-axis
     # [pipe x data x depth x row x col] mesh when > 1 and
@@ -211,6 +223,13 @@ class RunConfig:
         if self.attn_impl not in ("jnp", "pallas", "auto"):
             raise ValueError(f"attn_impl must be 'jnp', 'pallas' or 'auto', "
                              f"got {self.attn_impl!r}")
+        if self.attn_schedule not in ("local", "ring", "striped", "auto"):
+            raise ValueError(f"attn_schedule must be 'local', 'ring', "
+                             f"'striped' or 'auto', got "
+                             f"{self.attn_schedule!r}")
+        if self.seq_shards < 1:
+            raise ValueError(f"seq_shards must be >= 1, "
+                             f"got {self.seq_shards}")
         if self.nan_skip_limit < 0:
             raise ValueError(f"nan_skip_limit must be >= 0, "
                              f"got {self.nan_skip_limit}")

@@ -18,7 +18,12 @@ AXIS_DATA = "data"
 AXIS_DEPTH = "depth"
 AXIS_ROW = "row"
 AXIS_COL = "col"
+AXIS_SEQ = "seq"
 LOGICAL_AXES = (AXIS_DATA, AXIS_DEPTH, AXIS_ROW, AXIS_COL)
+# Mesh axis order when the sequence axis is active (ctx.seq > 1): "seq" sits
+# between "data" and the TP group so each seq shard owns a contiguous
+# [depth, row, col] sub-mesh (ring neighbors are physical neighbors).
+LOGICAL_AXES_SEQ = (AXIS_DATA, AXIS_SEQ, AXIS_DEPTH, AXIS_ROW, AXIS_COL)
 
 
 @dataclass(frozen=True)
@@ -30,6 +35,11 @@ class ParallelContext:
     depth: int = 1
     rows: int = 1
     cols: int = 1
+    # Sequence-axis shards (ring/striped flash attention, DESIGN.md §15).
+    # seq > 1 adds a "seq" mesh axis between "data" and the TP group and
+    # shards the time dimension of train activations; attention then streams
+    # K/V around the seq ring instead of holding the full sequence.
+    seq: int = 1
     # --- knobs (perf levers; defaults are the paper-faithful choices) ---
     # Cache the row-gathered weight blocks from fwd as residuals for bwd
     # ("store the parameter matrices inside each processor", paper 3.2.1).
@@ -61,12 +71,25 @@ class ParallelContext:
     # "auto" = kernels on TPU, jnp elsewhere (per-backend resolution,
     # kernels/ops.py::effective_attn_impl).
     attn_impl: str = "jnp"
+    # Attention SCHEDULE (orthogonal to attn_impl, which picks the data path):
+    #   "local"   — every device holds the full sequence (the pre-seq-axis
+    #               behavior; required when seq == 1 ... unless "ring"/"auto"
+    #               is requested for seq-sharded prefill, see below);
+    #   "ring"    — contiguous seq shards; K/V stream around the seq ring via
+    #               ppermute, merged with a stable logsumexp combine;
+    #   "striped" — like ring, but tokens are round-robin striped across
+    #               shards so causal work stays balanced per rank (train-only);
+    #   "auto"    — striped for causal full-window training, ring otherwise.
+    # With seq == 1, "ring"/"auto" additionally switch seq-sharded PREFILL
+    # attention from gather-full-KV to a ring over (depth, row).
+    attn_schedule: str = "local"
 
     # axis names (fixed; kept here so ops never hard-code strings)
     axis_data: str = AXIS_DATA
     axis_depth: str = AXIS_DEPTH
     axis_row: str = AXIS_ROW
     axis_col: str = AXIS_COL
+    axis_seq: str = AXIS_SEQ
 
     def __post_init__(self):
         if self.mode in ("tesseract", "summa2d"):
@@ -91,6 +114,21 @@ class ParallelContext:
             raise ValueError(
                 f"attn_impl must be 'jnp', 'pallas' or 'auto', "
                 f"got {self.attn_impl!r}")
+        if self.attn_schedule not in ("local", "ring", "striped", "auto"):
+            raise ValueError(
+                f"attn_schedule must be 'local', 'ring', 'striped' or "
+                f"'auto', got {self.attn_schedule!r}")
+        if self.seq < 1:
+            raise ValueError(f"seq must be >= 1, got {self.seq}")
+        if self.seq > 1:
+            if self.mode not in ("tesseract", "summa2d"):
+                raise ValueError(
+                    f"seq={self.seq} sharding requires mode 'tesseract' or "
+                    f"'summa2d', got {self.mode!r}")
+            if self.attn_schedule == "local":
+                raise ValueError(
+                    "seq > 1 shards the sequence; attn_schedule must be "
+                    "'ring', 'striped' or 'auto' (got 'local')")
 
     # ---- derived sizes ----
     @property
@@ -116,6 +154,24 @@ class ParallelContext:
         return dataclasses.replace(self, **kw)
 
     # ---- axis groups ----
+    @property
+    def mesh_axes(self) -> tuple:
+        """Logical mesh axis names for this context (excl. any pipe axis)."""
+        return LOGICAL_AXES_SEQ if self.seq > 1 else LOGICAL_AXES
+
+    def train_attn_schedule(self) -> str:
+        """Resolve attn_schedule for the seq-sharded TRAIN path.
+
+        "auto" means striped: it balances causal work per rank at no extra
+        comm.  Models with a sliding window must ask for "ring" explicitly
+        (striping breaks window contiguity; ring_attention raises if asked).
+        The resolution must not depend on the model so that token striping
+        (runtime/steps.py), RoPE positions (core/ops.py) and the ring mask
+        (core/ring_attention.py) always agree."""
+        if self.seq == 1:
+            return "local"
+        return "striped" if self.attn_schedule == "auto" else self.attn_schedule
+
     @property
     def token_axes(self) -> tuple:
         """Mesh axes that shard the token (batch*seq) dim of activations."""

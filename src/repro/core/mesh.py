@@ -19,7 +19,7 @@ import numpy as np
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
-from .api import LOGICAL_AXES, ParallelContext
+from .api import LOGICAL_AXES, LOGICAL_AXES_SEQ, ParallelContext
 
 
 def _axis_types(n):
@@ -38,21 +38,31 @@ def make_mesh(shape, axes):
 
 
 def logical_mesh(ctx: ParallelContext, devices=None) -> Mesh:
-    """Build the ("data","depth","row","col") mesh from a flat device list."""
+    """Build the ("data","depth","row","col") mesh from a flat device list.
+
+    With ctx.seq > 1 the mesh gains a "seq" axis between "data" and the TP
+    group — ("data","seq","depth","row","col") — so each sequence shard owns
+    a contiguous [depth x row x col] sub-mesh and ring neighbors along "seq"
+    are adjacent device blocks (DESIGN.md §15)."""
     if devices is None:
         devices = jax.devices()
     flat = np.asarray(devices).reshape(-1)
-    need = ctx.data * ctx.depth * ctx.rows * ctx.cols
+    need = ctx.data * ctx.seq * ctx.depth * ctx.rows * ctx.cols
     if flat.size != need:
         raise ValueError(
-            f"need {need} devices for data={ctx.data} x [q={ctx.rows},{ctx.cols},d={ctx.depth}], "
-            f"got {flat.size}")
-    arr = flat.reshape(ctx.data, ctx.depth, ctx.rows, ctx.cols)
+            f"need {need} devices for data={ctx.data} x seq={ctx.seq} x "
+            f"[q={ctx.rows},{ctx.cols},d={ctx.depth}], got {flat.size}")
+    if ctx.seq > 1:
+        arr = flat.reshape(ctx.data, ctx.seq, ctx.depth, ctx.rows, ctx.cols)
+        axes = LOGICAL_AXES_SEQ
+    else:
+        arr = flat.reshape(ctx.data, ctx.depth, ctx.rows, ctx.cols)
+        axes = LOGICAL_AXES
     kw = {}
-    at = _axis_types(4)
+    at = _axis_types(len(axes))
     if at is not None:
         kw["axis_types"] = at
-    return Mesh(arr, LOGICAL_AXES, **kw)
+    return Mesh(arr, axes, **kw)
 
 
 def pipeline_mesh(ctx: ParallelContext, pipe: int, devices=None, *,
@@ -67,6 +77,10 @@ def pipeline_mesh(ctx: ParallelContext, pipe: int, devices=None, *,
     baseline (the bit-parity oracle of the pipeline tests)."""
     if pipe < 1:
         raise ValueError(f"pipe must be >= 1, got {pipe}")
+    if ctx.seq > 1 and (pipe > 1 or keep_pipe_axis):
+        raise ValueError(
+            "seq-axis sharding (ctx.seq > 1) does not compose with the "
+            "pipeline mesh; use pipe=1 without keep_pipe_axis")
     if pipe == 1 and not keep_pipe_axis:
         return logical_mesh(ctx, devices)
     if devices is None:

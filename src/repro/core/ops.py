@@ -128,6 +128,9 @@ class TesseractOps:
             return P("data", None, "col")  # batch over data only
         if self.plan.seq_sharded:
             return P("data", ("depth", "row"), "col")
+        if self.plan.kind == "train" and self.ctx.seq > 1:
+            # long-context train: time over the seq ring (DESIGN.md §15)
+            return P(("data", "depth", "row"), "seq", "col")
         return P(("data", "depth", "row"), None, "col")
 
     def spec_tokens_in(self):
@@ -139,6 +142,8 @@ class TesseractOps:
             return P("data", None)
         if self.plan.seq_sharded:
             return P("data", "depth")
+        if self.plan.kind == "train" and self.ctx.seq > 1:
+            return P(("data", "depth"), "seq")
         return P(("data", "depth"), None)
 
     # ---------------- shape helpers ----------------
@@ -267,6 +272,14 @@ class TesseractOps:
         """Global position ids [seq_loc] for this device's sequence block."""
         if self.plan.seq_sharded:
             return self.seq_shard_index() * seq_loc + jnp.arange(seq_loc)
+        if self.plan.kind == "train" and self.ctx.seq > 1:
+            # seq-ring train: contiguous (ring) or round-robin (striped)
+            # global rows — must agree with the token permutation applied in
+            # runtime/steps.py and the ring mask in core/ring_attention.py
+            from .ring_attention import shard_positions
+            return shard_positions(seq_loc, self.ctx.seq,
+                                   lax.axis_index(self.ctx.axis_seq),
+                                   self.ctx.train_attn_schedule())
         return jnp.arange(seq_loc)
 
     def gather_seq(self, x, axis: int):
@@ -359,7 +372,9 @@ class TesseractOps:
             ls, cs = chunk_loss(w_head, chunk)
             return (s + ls, n + cs), None
 
-        zero = col.pvary(jnp.float32(0), (ctx.axis_data,))
+        zero_axes = ((ctx.axis_data, ctx.axis_seq) if ctx.seq > 1
+                     else (ctx.axis_data,))
+        zero = col.pvary(jnp.float32(0), zero_axes)
         (loss_sum, count), _ = lax.scan(body, (zero, zero), (xc, lc, mc))
         return loss_sum, count
 

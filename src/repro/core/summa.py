@@ -61,11 +61,18 @@ def effective_schedule(ctx: ParallelContext, e_loc: int) -> str:
     while train/prefill matmuls on the same ParallelContext ride the ring.
     Forward and backward resolve identically because E_loc is a static shape
     shared by A and dC.
+
+    On a seq-sharded mesh (ctx.seq > 1) the local token block is already
+    1/seq of the sequence AND the links are busy streaming ring-attention
+    K/V, so the rows-per-ring-step threshold scales with seq: blocks that
+    look decode-shaped only because the sequence was sharded stay on the
+    fused schedule instead of regressing to a ring that can't hide its
+    shifts (DESIGN.md §15).
     """
     s = ctx.matmul_schedule
     if s != "auto":
         return s
-    return "ring" if ctx.q >= 4 and e_loc >= 2 * ctx.q else "fused"
+    return "ring" if ctx.q >= 4 and e_loc >= 2 * ctx.q * ctx.seq else "fused"
 
 
 def _einsum(subs, *args, ctx: ParallelContext, out_dtype):
@@ -114,7 +121,7 @@ def matmul_comm_bytes(ctx: ParallelContext, e_loc: int, f_loc: int,
         # psum_scatter of the [q, ...] dA / dW partial stacks
         bwd = regather + (q - 1) * a + (q - 1) * w_rs
     if train and ctx.reduce_dgrad_in_op:
-        ndd = ctx.data * ctx.depth                # in-op dW all-reduce
+        ndd = ctx.data * ctx.depth * ctx.seq      # in-op dW all-reduce
         bwd += 2 * w_rs * (ndd - 1) / ndd if ndd > 1 else 0
     if not train:
         bwd = 0
@@ -130,6 +137,14 @@ def ring_vs_fused(ctx: ParallelContext, e_loc: int, f_loc: int, g_loc: int,
     return {s: matmul_comm_bytes(ctx, e_loc, f_loc, g_loc, batch=batch,
                                  train=train, itemsize=itemsize, schedule=s)
             for s in ("ring", "fused")}
+
+
+def _dgrad_axes(ctx):
+    """Axes the in-op dW reduction must cover: data + depth, plus seq when
+    the sequence axis is active (params are replicated over seq as well)."""
+    if ctx.seq > 1:
+        return (ctx.axis_data, ctx.axis_depth, ctx.axis_seq)
+    return (ctx.axis_data, ctx.axis_depth)
 
 
 # --------------------------------------------------------------------------
@@ -319,7 +334,9 @@ def _tess_bwd(ctx: ParallelContext, res, dc):
         # of B' on processors with same row and column but different depth"
         # (+ the data axis when DP is fused in).  In deferred mode the same
         # reduction happens once per step at the pvary boundary instead.
-        dw = lax.psum(dw, (ctx.axis_data, ctx.axis_depth))
+        # Params are replicated over the seq axis too, so the in-op reduce
+        # must cover it (in-op-reduced weights skip the step-level pvary).
+        dw = lax.psum(dw, _dgrad_axes(ctx))
     return da, dw.astype(wr.dtype)  # wr dtype == w dtype in both cache modes
 
 
@@ -447,7 +464,7 @@ def _tess_wt_bwd(ctx, res, dc):
         dw = lax.psum_scatter(dw_part, ctx.axis_row, scatter_dimension=0,
                               tiled=False)
     if ctx.reduce_dgrad_in_op:
-        dw = lax.psum(dw, (ctx.axis_data, ctx.axis_depth))
+        dw = lax.psum(dw, _dgrad_axes(ctx))
     return da, dw.astype(wr.dtype)
 
 

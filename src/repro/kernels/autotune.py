@@ -140,6 +140,33 @@ def autotune_flash(B: int, H: int, Tq: int, Tk: int, D: int, *,
             "best": list(best)}
 
 
+def autotune_ring_steps(B: int, H: int, T: int, D: int, *,
+                        seq_shards=(2, 4, 8), causal: bool = True,
+                        candidates=CANDIDATES, iters: int = 3,
+                        include_bwd: bool = True, dtype=None) -> list:
+    """Sweep the ring-STEP flash shapes of a seq-sharded sequence.
+
+    Each seq shard's ring step runs the flash kernel on its resident
+    [L, L] tile (L = T/n), so the signatures that matter are
+    (L, L, D, causal) for every shard count n — the per-step entries
+    (kernels/flash_attention.flash_{fwd,dq,dkv}_step) resolve their tiles
+    through the same flash_tiles() cache this sweep fills.  Returns one
+    autotune_flash record per shard count, each tagged with ``seq_shards``
+    and the key block ``Tk`` the ring streams per step."""
+    out = []
+    for n in seq_shards:
+        if T % n:
+            raise ValueError(f"T={T} not divisible by seq_shards={n}")
+        L = T // n
+        rec = autotune_flash(B, H, L, L, D, causal=causal,
+                             candidates=candidates, iters=iters,
+                             include_bwd=include_bwd, dtype=dtype)
+        rec["seq_shards"] = n
+        rec["ring_step_Tk"] = L
+        out.append(rec)
+    return out
+
+
 def save_cache(path) -> None:
     p = pathlib.Path(path)
     p.parent.mkdir(parents=True, exist_ok=True)

@@ -284,17 +284,13 @@ def _dkv_kernel(qpos_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
         dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
 
 
-def _bwd_call(cfg: FlashCfg, q, k, v, q_pos, out, lse, dout):
+def _dq_call(cfg: FlashCfg, q, k, v, q_pos, lse, delta, dout):
     B, Hq, Tq, D = q.shape
-    Hkv, Tk = k.shape[1], k.shape[2]
     Dv = v.shape[-1]
-    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
-                    axis=-1)                              # [B, Hq, Tq]
-
     qmap = lambda b, h, i, j: (b, h, i, 0)
     kvmap = lambda b, h, i, j: (b, h // cfg.g, _kv_index(cfg, i, j), 0)
     rowmap = lambda b, h, i, j: (b, h, i)
-    dq = pl.pallas_call(
+    return pl.pallas_call(
         functools.partial(_dq_kernel, cfg=cfg),
         grid=(B, Hq, cfg.nq, cfg.nk),
         in_specs=[
@@ -312,6 +308,11 @@ def _bwd_call(cfg: FlashCfg, q, k, v, q_pos, out, lse, dout):
         interpret=cfg.interpret,
     )(q_pos, q, k, v, dout, lse, delta)
 
+
+def _dkv_call(cfg: FlashCfg, q, k, v, q_pos, lse, delta, dout):
+    B, Hq, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
     qmap2 = lambda b, h, kb, gi, qi: (b, h * cfg.g + gi, _q_index(cfg, kb, qi), 0)
     rowmap2 = lambda b, h, kb, gi, qi: (b, h * cfg.g + gi, _q_index(cfg, kb, qi))
     kvmap2 = lambda b, h, kb, gi, qi: (b, h, kb, 0)
@@ -342,6 +343,14 @@ def _bwd_call(cfg: FlashCfg, q, k, v, q_pos, out, lse, dout):
         ],
         interpret=cfg.interpret,
     )(q_pos, q, k, v, dout, lse, delta)
+    return dk, dv
+
+
+def _bwd_call(cfg: FlashCfg, q, k, v, q_pos, out, lse, dout):
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                              # [B, Hq, Tq]
+    dq = _dq_call(cfg, q, k, v, q_pos, lse, delta, dout)
+    dk, dv = _dkv_call(cfg, q, k, v, q_pos, lse, delta, dout)
     return dq, dk, dv
 
 
@@ -438,3 +447,151 @@ def _flash_jit(q, k, v, q_pos, *, causal, local_window, q_start,
                    tk_real=Tk, interpret=bool(interpret))
     out = _flash(cfg, qp, kp, vp, q_pos[None])
     return out[:, :, :Tq] if Tqp != Tq else out
+
+
+# ---------------------------------------------------------------------------
+# per-ring-step entries (core/ring_attention.py)
+#
+# One ring step is one flash call on the resident Q shard against one K/V
+# shard.  The fwd step exposes the (out, logsumexp) pair — the online-softmax
+# carry the ring merges across steps — and defines NO vjp: ring_attention is
+# itself a custom_vjp that re-streams K/V and drives these bwd entries with
+# the GLOBAL (merged) lse/delta, which is exactly the flash bwd math for a
+# partitioned softmax.
+# ---------------------------------------------------------------------------
+
+def _step_cfg_pad(q, k, v, q_pos, *, causal, local_window, q_start,
+                  softmax_scale, bq, bk, interpret):
+    B, Hq, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    if Hq % Hkv:
+        raise ValueError(f"flash step: Hq={Hq} not a multiple of Hkv={Hkv}")
+    scale = (softmax_scale if softmax_scale is not None
+             else 1.0 / math.sqrt(D))
+    Tqp, Tkp = _round_up(Tq, bq), _round_up(Tk, bk)
+    if q_pos is None:
+        q_pos = (q_start or 0) + jnp.arange(Tqp, dtype=jnp.int32)
+    else:
+        q_pos = q_pos.astype(jnp.int32)
+        if Tqp != Tq:
+            q_pos = jnp.concatenate(
+                [q_pos, q_pos[-1] + 1 + jnp.arange(Tqp - Tq, dtype=jnp.int32)])
+    pad4 = lambda x, t: (x if x.shape[2] == t else
+                         jnp.pad(x, ((0, 0), (0, 0), (0, t - x.shape[2]),
+                                     (0, 0))))
+    cfg = FlashCfg(causal=bool(causal), window=int(local_window),
+                   scale=float(scale), g=Hq // Hkv, bq=bq, bk=bk,
+                   nq=Tqp // bq, nk=Tkp // bk,
+                   q_start=(None if q_start is None else int(q_start)),
+                   tk_real=Tk, interpret=bool(interpret))
+    return (cfg, pad4(q, Tqp), pad4(k, Tkp), pad4(v, Tkp), q_pos[None],
+            Tq, Tqp)
+
+
+def _pad_rows(x, t):
+    """Zero-pad dim 2 of [B, H, T] / [B, H, T, D] to t rows."""
+    if x.shape[2] == t:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[2] = (0, t - x.shape[2])
+    return jnp.pad(x, pad)
+
+
+def _resolve_step_tiles(Tq, Tk, D, causal, bq, bk):
+    if bq is None or bk is None:
+        from .autotune import flash_tiles
+        tq_, tk_ = flash_tiles(Tq, Tk, D, causal=causal)
+        bq = bq or tq_
+        bk = bk or tk_
+    return min(bq, Tq), min(bk, Tk)
+
+
+def flash_fwd_step(q, k, v, *, causal=True, local_window: int = 0,
+                   q_pos=None, q_start: Optional[int] = None,
+                   softmax_scale=None, bq=None, bk=None, interpret=False):
+    """Flash forward on one K/V shard -> (out [B,Hq,Tq,Dv], lse [B,Hq,Tq]).
+
+    ``out`` is already normalized by this shard's partial softmax sum;
+    fully-masked rows produce exact-zero out and a finite (floored) lse, so
+    the caller's pairwise logsumexp merge is NaN-free.  No vjp is attached.
+    """
+    bq, bk = _resolve_step_tiles(q.shape[2], k.shape[2], q.shape[3],
+                                 causal, bq, bk)
+    return _fwd_step_jit(q, k, v, q_pos, causal=causal,
+                         local_window=local_window, q_start=q_start,
+                         softmax_scale=softmax_scale, bq=bq, bk=bk,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "local_window", "q_start", "softmax_scale", "bq", "bk",
+    "interpret"))
+def _fwd_step_jit(q, k, v, q_pos, *, causal, local_window, q_start,
+                  softmax_scale, bq, bk, interpret):
+    cfg, qp, kp, vp, qpos, Tq, Tqp = _step_cfg_pad(
+        q, k, v, q_pos, causal=causal, local_window=local_window,
+        q_start=q_start, softmax_scale=softmax_scale, bq=bq, bk=bk,
+        interpret=interpret)
+    out, lse = _fwd_call(cfg, qp, kp, vp, qpos)
+    if Tqp != Tq:
+        out, lse = out[:, :, :Tq], lse[:, :, :Tq]
+    return out, lse
+
+
+def flash_dq_step(q, k, v, dout, lse, delta, *, causal=True,
+                  local_window: int = 0, q_pos=None,
+                  q_start: Optional[int] = None, softmax_scale=None,
+                  bq=None, bk=None, interpret=False):
+    """dQ contribution of one K/V shard given the GLOBAL lse/delta."""
+    bq, bk = _resolve_step_tiles(q.shape[2], k.shape[2], q.shape[3],
+                                 causal, bq, bk)
+    return _dq_step_jit(q, k, v, dout, lse, delta, q_pos, causal=causal,
+                        local_window=local_window, q_start=q_start,
+                        softmax_scale=softmax_scale, bq=bq, bk=bk,
+                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "local_window", "q_start", "softmax_scale", "bq", "bk",
+    "interpret"))
+def _dq_step_jit(q, k, v, dout, lse, delta, q_pos, *, causal, local_window,
+                 q_start, softmax_scale, bq, bk, interpret):
+    cfg, qp, kp, vp, qpos, Tq, Tqp = _step_cfg_pad(
+        q, k, v, q_pos, causal=causal, local_window=local_window,
+        q_start=q_start, softmax_scale=softmax_scale, bq=bq, bk=bk,
+        interpret=interpret)
+    # padded q rows carry dout = delta = 0 -> ds = 0, so they contribute
+    # nothing and the slice below discards their dq
+    dq = _dq_call(cfg, qp, kp, vp, qpos, _pad_rows(lse, Tqp),
+                  _pad_rows(delta, Tqp), _pad_rows(dout, Tqp))
+    return dq[:, :, :Tq] if Tqp != Tq else dq
+
+
+def flash_dkv_step(q, k, v, dout, lse, delta, *, causal=True,
+                   local_window: int = 0, q_pos=None,
+                   q_start: Optional[int] = None, softmax_scale=None,
+                   bq=None, bk=None, interpret=False):
+    """(dK, dV) contribution of one Q shard against the resident K/V."""
+    bq, bk = _resolve_step_tiles(q.shape[2], k.shape[2], q.shape[3],
+                                 causal, bq, bk)
+    return _dkv_step_jit(q, k, v, dout, lse, delta, q_pos, causal=causal,
+                         local_window=local_window, q_start=q_start,
+                         softmax_scale=softmax_scale, bq=bq, bk=bk,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "local_window", "q_start", "softmax_scale", "bq", "bk",
+    "interpret"))
+def _dkv_step_jit(q, k, v, dout, lse, delta, q_pos, *, causal, local_window,
+                  q_start, softmax_scale, bq, bk, interpret):
+    cfg, qp, kp, vp, qpos, Tq, Tqp = _step_cfg_pad(
+        q, k, v, q_pos, causal=causal, local_window=local_window,
+        q_start=q_start, softmax_scale=softmax_scale, bq=bq, bk=bk,
+        interpret=interpret)
+    Tk = k.shape[2]
+    dk, dv = _dkv_call(cfg, qp, kp, vp, qpos, _pad_rows(lse, Tqp),
+                       _pad_rows(delta, Tqp), _pad_rows(dout, Tqp))
+    if dk.shape[2] != Tk:
+        dk, dv = dk[:, :, :Tk], dv[:, :, :Tk]
+    return dk, dv

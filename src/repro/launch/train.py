@@ -49,6 +49,13 @@ def main():
                     choices=("jnp", "pallas", "auto"),
                     help="attention data path: fused Pallas kernels, the "
                          "jnp reference, or per-backend auto (DESIGN.md §10)")
+    ap.add_argument("--seq-shards", type=int, default=1,
+                    help="sequence-axis mesh shards for ring/striped flash "
+                         "attention (DESIGN.md §15); seq_len must divide")
+    ap.add_argument("--attn-schedule", default=None,
+                    choices=("local", "ring", "striped", "auto"),
+                    help="attention schedule across seq shards (default: "
+                         "'auto' when --seq-shards > 1, else 'local')")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--pipe", type=int, default=1,
                     help="pipeline stages OUTSIDE the TP group (1F1B)")
@@ -83,6 +90,10 @@ def main():
                     loss_scale=args.loss_scale,
                     matmul_schedule=args.matmul_schedule,
                     attn_impl=args.attn_impl,
+                    seq_shards=args.seq_shards,
+                    attn_schedule=(args.attn_schedule or
+                                   ("auto" if args.seq_shards > 1
+                                    else "local")),
                     pipe_stages=args.pipe,
                     pipeline_microbatches=args.microbatches,
                     accum_steps=args.accum,
@@ -91,6 +102,8 @@ def main():
     # lives on ParallelContext (DESIGN.md §2b / §10)
     ctx = ParallelContext(mode=args.mode, data=args.data, depth=args.depth,
                           rows=args.rows, cols=args.cols,
+                          seq=run.seq_shards,
+                          attn_schedule=run.attn_schedule,
                           matmul_schedule=run.matmul_schedule,
                           attn_impl=run.attn_impl)
     mesh = pipeline_mesh(ctx, run.pipe_stages)

@@ -31,6 +31,7 @@ from .transformer import DenseLM, ops_last_token
 
 class MoELM(DenseLM):
     supports_pipeline = False  # custom loss (router aux) not stage-decomposed
+    supports_seq_shard = False  # capacity routing depends on token layout
 
     def __init__(self, cfg, ctx, run):
         super().__init__(cfg, ctx, run)

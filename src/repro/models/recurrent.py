@@ -26,6 +26,7 @@ C_RGLRU = 8.0
 
 class RecurrentLM(DenseLM):
     supports_pipeline = False  # custom loss not stage-decomposed
+    supports_seq_shard = False  # LRU recurrence crosses seq-shard bounds
 
     def __init__(self, cfg, ctx, run):
         super().__init__(cfg, ctx, run)

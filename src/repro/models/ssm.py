@@ -102,6 +102,7 @@ def ssd_chunked(x, log_a, Bm, Cm, chunk: int, h0=None, use_pallas=False):
 
 class MambaLM(DenseLM):
     supports_pipeline = False  # custom loss not stage-decomposed
+    supports_seq_shard = False  # SSM scan crosses seq-shard boundaries
 
     def __init__(self, cfg, ctx, run):
         # bypass DenseLM head/kv setup that doesn't apply; reuse embed/head

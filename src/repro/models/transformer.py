@@ -203,6 +203,41 @@ class DenseLM:
         return ops.linear_down(h, p["w_down"], p.get("b_down"))
 
     # -------------------------------------------------------------- train
+    def _ring_axes(self, ops):
+        """Mesh axes to stream K/V around, or None for the local schedule.
+
+        Train with ctx.seq > 1 rings over the dedicated "seq" axis;
+        seq-sharded prefill with a non-local attn_schedule rings over the
+        existing (depth, row) sequence sharding instead of gathering the
+        full K/V (DESIGN.md §15)."""
+        ctx = self.ctx
+        if ops.mode_family != "tesseract" or ctx.attn_schedule == "local":
+            return None
+        if ops.plan.kind == "train" and ctx.seq > 1:
+            return (ctx.axis_seq,)
+        if ops.plan.seq_sharded and ctx.dq > 1:
+            return ctx.seq_shard_axes
+        return None
+
+    def _ring_attn(self, q, k, v, ops, ring_axes):
+        """Seq-sharded attention: ring/striped flash over ``ring_axes``."""
+        from ..core.ring_attention import ring_attention
+        from ..kernels.ops import _interpret, effective_attn_impl
+        ctx = self.ctx
+        variant = (ctx.train_attn_schedule() if ops.plan.kind == "train"
+                   else "ring")  # prefill prompts are never striped
+        if not self.kv_shard:
+            kv_map = self._kv_map(ops)
+            k = jnp.take(k, kv_map, axis=2)
+            v = jnp.take(v, kv_map, axis=2)
+        out = ring_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), axes=ring_axes, variant=variant,
+            causal=True, local_window=self.cfg.local_window,
+            impl=effective_attn_impl(self.ctx.attn_impl),
+            interpret=_interpret())
+        return out.transpose(0, 2, 1, 3)
+
     def _block_train_attn(self, p, x, ops, full_kv_pos):
         """Attention sublayer (residual included); returns (x, (k, v) local
         seq-slices for prefill caching)."""
@@ -212,6 +247,13 @@ class DenseLM:
         T = hg.shape[1]
         qpos = ops.positions_q(T)
         q, k, v = self._qkv(p, hg, ops, qpos)
+        ring_axes = self._ring_axes(ops)
+        if ring_axes is not None:
+            out = self._ring_attn(q, k, v, ops, ring_axes)
+            x = x + self._attn_out(p, out, ops, self._head_mask(ops))
+            kv = (ops.kv_local_slice(k, axis=1).astype(self.cdt),
+                  ops.kv_local_slice(v, axis=1).astype(self.cdt))
+            return x, kv
         # seq-sharded plans gather KV to full length (positions 0..S-1)
         kf = ops.kv_full(k, axis=1)
         vf = ops.kv_full(v, axis=1)
@@ -258,6 +300,11 @@ class DenseLM:
     # stage-sharded over the pipe mesh axis, so pipe_blocks naturally applies
     # only this stage's layers.
     supports_pipeline = True
+    # Sequence-axis sharding (ring/striped attention, DESIGN.md §15) needs
+    # every time-mixing op to be ring-able: true for pure attention trunks,
+    # false for SSM/LRU recurrences (state crosses shard boundaries) and for
+    # capacity-factor MoE routing (token grouping is layout dependent).
+    supports_seq_shard = True
 
     def pipe_embed(self, params, tokens, ops):
         """Host-layout ids -> canonical activation (stage-0 entry)."""
@@ -294,8 +341,12 @@ class DenseLM:
         x = self.pipe_blocks(params, x, ops)
         loss_sum, cnt = self.pipe_loss_sums(params, x, batch["labels"], ops,
                                             batch.get("mask"))
-        loss_sum = lax.psum(loss_sum, self.ctx.axis_data)
-        cnt = lax.psum(cnt, self.ctx.axis_data)
+        # each seq shard holds different tokens, so the seq axis joins the
+        # data axis in the final loss reduction
+        axes = ((self.ctx.axis_data, self.ctx.axis_seq) if self.ctx.seq > 1
+                else (self.ctx.axis_data,))
+        loss_sum = lax.psum(loss_sum, axes)
+        cnt = lax.psum(cnt, axes)
         return loss_sum / jnp.maximum(cnt, 1.0)
 
     # ------------------------------------------------------------ serving

@@ -19,6 +19,7 @@ from .transformer import DenseLM, ops_last_token
 
 class VisionLM(DenseLM):
     supports_pipeline = False  # modality extras not stage-decomposed
+    supports_seq_shard = False  # cross-attn reads the full vision seq
 
     def __init__(self, cfg, ctx, run):
         super().__init__(cfg, ctx, run)

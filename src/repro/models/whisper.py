@@ -30,6 +30,7 @@ def sinusoid_pos(positions, dim):
 
 class WhisperModel(DenseLM):
     supports_pipeline = False  # encoder/decoder loss not stage-decomposed
+    supports_seq_shard = False  # encoder/decoder trunks not seq-decomposed
 
     def __init__(self, cfg, ctx, run):
         super().__init__(cfg, ctx, run)

@@ -168,6 +168,62 @@ def flash_attention_traffic(B: int, H: int, Tq: int, Tk: int, D: int, *,
     }
 
 
+def ring_attention_traffic(B: int, Hq: int, Hkv: int, T: int, D: int, *,
+                           seq: int, num_layers: int = 1,
+                           compute_itemsize: int = 2,
+                           train: bool = True, remat_replay: bool = True,
+                           causal: bool = True,
+                           link_bw: float = LINK_BW) -> dict:
+    """Per-device seq-ring comm model for ring/striped flash attention
+    (DESIGN.md §15), byte-consistent with the traced ppermutes.
+
+    ``B`` is the LOCAL batch rows on one seq shard, ``T`` the GLOBAL
+    sequence (each shard holds L = T/seq positions), ``Hkv`` the local KV
+    heads after col sharding.  Wire bytes use the collective-IR convention
+    (a ppermute moves its full operand): K/V blocks travel in the compute
+    dtype, the dK/dV accumulator rings in fp32 — the exact per-call counts
+    live in core/ring_attention.py::ring_ppermute_{counts,bytes} and the
+    shardcheck sweep pins the traced jaxpr to them.
+
+    Overlap: each fwd ring step shifts the next {K, V} block while the
+    flash kernel contracts the resident one, so only
+    max(0, step_comm - step_compute) is exposed per step (the ring-matmul
+    argument of exposed_collective_term).  Striped placement keeps
+    per-step causal work equal across ranks, so the per-step compute used
+    here is the mean — for contiguous ring shards it is the max rank's
+    and the exposure estimate is optimistic by up to 2x.
+    """
+    if T % seq:
+        raise ValueError(f"T={T} not divisible by seq={seq}")
+    from ..core.ring_attention import (ring_ppermute_bytes,
+                                       ring_ppermute_counts)
+    L = T // seq
+    kv_block = B * Hkv * L * D * compute_itemsize
+    acc_block = B * Hkv * L * D * 4              # fp32 accumulator ring
+    counts = ring_ppermute_counts(seq, train=train,
+                                  remat_replay=remat_replay)
+    per_layer = ring_ppermute_bytes(seq, kv_block_bytes=kv_block,
+                                    acc_block_bytes=acc_block, train=train,
+                                    remat_replay=remat_replay)
+    # one ring step: flash over the resident [L, L] tile (QK^T + PV fwd
+    # pairs, x2.5 for the bwd's dQ/dK/dV when counting a train step)
+    step_flops = 4.0 * B * Hq * L * L * D * (0.5 if causal else 1.0)
+    step_comm_s = 2 * kv_block / link_bw
+    step_compute_s = step_flops / PEAK_FLOPS
+    exposed_fwd = max(0.0, step_comm_s - step_compute_s) * max(seq - 1, 0)
+    return {
+        "seq": seq, "shard_len": L,
+        "kv_block_bytes": kv_block, "acc_block_bytes": acc_block,
+        "ppermute_counts": counts,
+        "per_layer_bytes": per_layer,
+        "wire_bytes": num_layers * per_layer["total"],
+        "wire_bytes_fwd": num_layers * per_layer["fwd"],
+        "step_comm_s": step_comm_s, "step_compute_s": step_compute_s,
+        "exposed_comm_s_fwd_per_layer": exposed_fwd,
+        "comm_hidden": step_comm_s <= step_compute_s,
+    }
+
+
 def paged_decode_traffic(n_slots: int, Hkv: int, D: int, *,
                          pool_positions: int, live_positions: int,
                          block_size: int, itemsize: int = 2) -> dict:

@@ -45,15 +45,19 @@ def spec_axes(spec: P) -> tuple:
     return tuple(out)
 
 
-def replicated_axes(spec: P) -> tuple:
+def replicated_axes(spec: P, axes: tuple = LOGICAL_AXES) -> tuple:
+    """Mesh axes (from ``axes``) a leaf with partition ``spec`` is
+    replicated over.  Pass ``ctx.mesh_axes`` so the seq axis (when active)
+    counts as a replication axis for every param leaf."""
     used = set(spec_axes(spec))
-    return tuple(a for a in LOGICAL_AXES if a not in used)
+    return tuple(a for a in axes if a not in used)
 
 
 def rep_factor(ctx: ParallelContext, spec: P) -> int:
-    sizes = dict(data=ctx.data, depth=ctx.depth, row=ctx.rows, col=ctx.cols)
+    sizes = dict(data=ctx.data, seq=ctx.seq, depth=ctx.depth, row=ctx.rows,
+                 col=ctx.cols)
     f = 1
-    for a in replicated_axes(spec):
+    for a in replicated_axes(spec, ctx.mesh_axes):
         f *= sizes[a]
     return f
 
@@ -184,7 +188,8 @@ def batch_abstract(ops, shape: ShapeSpec, ctx: ParallelContext, model=None):
 # ---------------------------------------------------------------------------
 
 def zero_optimizer_step(params, opt_state, grads, *, layouts, is_tess,
-                        specs, axis_sizes, run, update_fn, lr, gnorm_axes):
+                        specs, axis_sizes, run, update_fn, lr, gnorm_axes,
+                        mesh_axes=LOGICAL_AXES):
     """ZeRO-1 update inside shard_map (DESIGN.md §9): reduce_scatter the
     zaxes-partial grads into each device's [k] state slice (in-op tesseract
     weights arrive reduced: plain slice), clip on the slices, run the
@@ -205,7 +210,8 @@ def zero_optimizer_step(params, opt_state, grads, *, layouts, is_tess,
     # across the zaxes groups; the leaf's remaining replication divided out
     # as in the dense path) ---
     def slice_sq(sl, lay, s):
-        rem = tuple(a for a in replicated_axes(s) if a not in lay.zaxes)
+        rem = tuple(a for a in replicated_axes(s, mesh_axes)
+                    if a not in lay.zaxes)
         rep = 1
         for a in rem:
             rep *= axis_sizes[a]
@@ -276,6 +282,21 @@ def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1,
                                           fault_port=fault_port)
     ctx: ParallelContext = model.ctx
     run: RunConfig = model.run
+    if ctx.seq > 1:
+        if not getattr(model, "supports_seq_shard", False):
+            raise NotImplementedError(
+                f"{type(model).__name__} does not support sequence-axis "
+                f"sharding (supports_seq_shard=False): every time-mixing "
+                f"op must be ring-able")
+        if shape.seq_len % ctx.seq:
+            raise ValueError(
+                f"seq_len={shape.seq_len} not divisible by seq shards "
+                f"{ctx.seq}")
+        if model.batch_extras(shape):
+            raise NotImplementedError(
+                "seq-sharded training with modality extras is not "
+                "supported (extra batch leaves would need seq striping)")
+    maxes = ctx.mesh_axes
     plan = make_plan(ctx, shape)
     ops = make_ops(ctx, plan)
 
@@ -302,7 +323,7 @@ def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1,
             # ||p||/||u|| trust ratio because p and u share a layout.
             from ..core.collectives import psum_v
             return jnp.sqrt(psum_v(jnp.sum(x.astype(jnp.float32) ** 2),
-                                   LOGICAL_AXES))
+                                   maxes))
         update_fn = partial(adamw.lamb_update, norm_fn=_leaf_norm)
     else:
         update_fn = adamw.adamw_update
@@ -316,15 +337,17 @@ def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1,
     # slice and one all_gather per leaf (in param dtype — bf16 wire under
     # mixed precision) rebuilds the params.
     axis_sizes = dict(data=ctx.data, depth=ctx.depth, row=ctx.rows,
-                      col=ctx.cols)
+                      col=ctx.cols, **(dict(seq=ctx.seq) if ctx.seq > 1
+                                       else {}))
     abs_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     layouts = (zopt.build_layouts(specs, abs_params, axis_sizes)
                if use_zero else None)
 
     def pvary_axes(s, t):
-        if t:  # in-op tesseract weight: custom bwd reduces (data, depth)
+        if t:  # in-op tesseract weight: custom bwd reduces (data, depth
+            # [, seq]) — summa._dgrad_axes covers the seq axis in-op
             return ()
-        ax = replicated_axes(s)
+        ax = replicated_axes(s, maxes)
         if use_zero:
             # the leaf's zaxes stay UNREDUCED here: zreduce_scatter below
             # reduces them into the device-local state slice instead
@@ -384,7 +407,7 @@ def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1,
             # (psum transposes to psum), so value_and_grad returns exactly
             # p x the true gradient for every leaf; vma jax seeds the one
             # invariant scalar and needs no correction.
-            p_rep = ctx.data * ctx.depth * ctx.rows * ctx.cols
+            p_rep = ctx.data * ctx.seq * ctx.depth * ctx.rows * ctx.cols
             if p_rep > 1:
                 grads = jax.tree.map(lambda g: g / p_rep, grads)
 
@@ -394,15 +417,16 @@ def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1,
             new_params, new_state, gnorm = zero_optimizer_step(
                 params, opt_state, grads, layouts=layouts, is_tess=is_tess,
                 specs=specs, axis_sizes=axis_sizes, run=run,
-                update_fn=update_fn, lr=lr, gnorm_axes=LOGICAL_AXES)
+                update_fn=update_fn, lr=lr, gnorm_axes=maxes,
+                mesh_axes=maxes)
         else:
             # --- global grad-norm clip (layout aware) ---
             def leaf_sq(g, rep, s):
                 val = jnp.sum(g.astype(jnp.float32) ** 2) / rep
-                return pvary(val, replicated_axes(s))
+                return pvary(val, replicated_axes(s, maxes))
             sq = sum(jax.tree.leaves(jax.tree.map(leaf_sq, grads, rep_tree,
                                                   specs)))
-            gnorm = jnp.sqrt(lax.psum(sq, LOGICAL_AXES))
+            gnorm = jnp.sqrt(lax.psum(sq, maxes))
             scale = jnp.minimum(1.0, run.grad_clip / (gnorm + 1e-6))
             grads = jax.tree.map(lambda g: g * scale, grads)
             new_params, new_state = update_fn(
@@ -461,6 +485,22 @@ def build_train_step(model, mesh, shape: ShapeSpec, *, accum_steps: int = 1,
         local_step, mesh=mesh,
         in_specs=(specs, opt_specs, batch_specs_),
         out_specs=(specs, opt_specs, metric_specs))
+    if ctx.seq > 1 and ctx.train_attn_schedule() == "striped":
+        # Striped ring attention (DESIGN.md §15): permute the TIME dim of
+        # the host-layout batch inside jit, before shard_map, so seq shard
+        # r receives global positions r, r+seq, r+2*seq, ... .  Labels ride
+        # the same permutation (they are per-position), ops.positions()
+        # emits the matching striped RoPE positions, and the ring mask in
+        # core/ring_attention.py assumes exactly this placement.
+        from ..core.ring_attention import stripe_permutation
+        perm = jnp.asarray(stripe_permutation(shape.seq_len, ctx.seq))
+        inner = smapped
+
+        def smapped(params, opt_state, batch):
+            batch = {k: (v[:, perm] if k in ("tokens", "labels", "mask")
+                         else v) for k, v in batch.items()}
+            return inner(params, opt_state, batch)
+
     in_sh = (_shardings(mesh, specs), _shardings(mesh, opt_specs),
              _shardings(mesh, batch_specs_))
     out_sh = (_shardings(mesh, specs), _shardings(mesh, opt_specs),

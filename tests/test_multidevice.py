@@ -28,6 +28,7 @@ CHECKS = [
     "serve_engine",
     "engine_elastic",
     "attn_impl_parity",
+    "ring_attention",
     "pipeline_parity",
     "train_elastic_accum",
     # chaos_train / chaos_serve live in tests/test_chaos.py (same
